@@ -1,0 +1,90 @@
+"""Generate the EXPERIMENTS.md roofline tables from the dry-run artifacts."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+HERE = Path(__file__).resolve().parent
+CUR = HERE / "results" / "dryrun"
+BASE = HERE / "results" / "dryrun_baseline"
+
+
+def _load(d: Path, mesh: str):
+    out = {}
+    for f in sorted(d.glob(f"*__{mesh}.json")):
+        r = json.loads(f.read_text())
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def dryrun_table() -> str:
+    lines = ["| arch | shape | mesh | ok | compile s | temp GiB/dev | "
+             "args GiB/dev | collectives (per-device traffic) |",
+             "|---|---|---|---|---|---|---|---|"]
+    for mesh in ("single", "multi"):
+        for (arch, shape), r in sorted(_load(CUR, mesh).items()):
+            if not r["ok"]:
+                lines.append(f"| {arch} | {shape} | {mesh} | **FAIL** | | | "
+                             f"| {r.get('error', '')[:60]} |")
+                continue
+            colls = " ".join(
+                f"{k.split('-')[0]}-{k.split('-')[1][:1]}:{v['traffic_bytes']/1e9:.1f}GB"
+                for k, v in sorted(r["collectives"].items()))
+            lines.append(
+                f"| {arch} | {shape} | {mesh} | ok | "
+                f"{r['compile_s']:.0f} | "
+                f"{r['memory']['temp_bytes']/2**30:.1f} | "
+                f"{r['memory']['argument_bytes']/2**30:.1f} | {colls} |")
+    return "\n".join(lines)
+
+
+def roofline_table(d: Path = CUR, mesh: str = "single") -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | dominant"
+             " | MODEL/HLO flops | fix for dominant term |",
+             "|---|---|---|---|---|---|---|---|"]
+    fixes = {
+        "memory_s": "flash/fused attn + scan-io dtype (done it.1-3); "
+                    "Pallas SSM/attn kernels on real TPU",
+        "collective_s": "TP comm is bf16 on TPU (CPU f32-upcast artifact "
+                        "~2x); overlap RS/AG with compute",
+        "compute_s": "selective remat; window KV skipping (done)",
+    }
+    for (arch, shape), r in sorted(_load(d, mesh).items()):
+        if not r["ok"]:
+            continue
+        rf = r["roofline"]
+        dom = max(rf, key=rf.get)
+        lines.append(
+            f"| {arch} | {shape} | {rf['compute_s']:.3f} | "
+            f"{rf['memory_s']:.2f} | {rf['collective_s']:.2f} | "
+            f"{dom.replace('_s', '')} | {r['useful_flops_ratio']:.2f} | "
+            f"{fixes[dom]} |")
+    return "\n".join(lines)
+
+
+def perf_compare_table(cells) -> str:
+    lines = ["| cell | term | paper-faithful baseline | optimized | ratio |",
+             "|---|---|---|---|---|"]
+    cur = _load(CUR, "single")
+    base = _load(BASE, "single")
+    for key in cells:
+        b, a = base[key], cur[key]
+        for t in ("compute_s", "memory_s", "collective_s"):
+            lines.append(
+                f"| {key[0]} {key[1]} | {t.replace('_s','')} | "
+                f"{b['roofline'][t]:.2f}s | {a['roofline'][t]:.2f}s | "
+                f"{a['roofline'][t]/max(b['roofline'][t],1e-9):.2f}x |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("## Dry-run\n")
+    print(dryrun_table())
+    print("\n## Roofline (single-pod baseline)\n")
+    print(roofline_table(BASE))
+    print("\n## Roofline (optimized)\n")
+    print(roofline_table(CUR))
+    print("\n## Perf before/after\n")
+    print(perf_compare_table([("llama3_405b", "train_4k"),
+                              ("hymba_1_5b", "prefill_32k"),
+                              ("stablelm_3b", "train_4k")]))

@@ -1,0 +1,63 @@
+"""Roofline table from the dry-run artifacts (benchmarks/results/dryrun).
+
+Per (arch x shape x mesh): the three terms in seconds, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs usefulness, per-device memory; see EXPERIMENTS.md for
+the narrative.  Also emits the per-cell "what would move the dominant term"
+hint from a rule table.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+HINTS = {
+    ("memory_s", "train"): "flash-attention custom-VJP (kill S^2 residual "
+                           "traffic) + bf16 probs",
+    ("memory_s", "prefill"): "flash-attention fwd fusion; window-aware KV "
+                             "chunk skipping where sliding",
+    ("memory_s", "decode"): "fuse per-layer cache update+attend; quantize KV",
+    ("collective_s", "train"): "overlap reduce-scatter with bwd compute; "
+                               "int8 grad compression on the pod axis",
+    ("collective_s", "decode"): "shrink TP degree for small models / "
+                                "duplicate small weights",
+    ("compute_s", "train"): "selective remat (dots-only) to cut recompute",
+}
+
+
+def load(mesh: str = "single"):
+    rows = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def run(mesh: str = "single", quiet: bool = False):
+    rows = load(mesh)
+    n_ok = 0
+    for r in rows:
+        if not r["ok"]:
+            emit(f"roofline/{r['arch']}/{r['shape']}/{mesh}", 0.0,
+                 f"FAILED {r.get('error', '')[:80]}")
+            continue
+        n_ok += 1
+        rf = r["roofline"]
+        dom = max(rf, key=rf.get)
+        kind = ("train" if r["shape"].startswith("train") else
+                "prefill" if r["shape"].startswith("prefill") else "decode")
+        emit(f"roofline/{r['arch']}/{r['shape']}/{mesh}", 0.0,
+             f"compute={rf['compute_s']:.3f}s memory={rf['memory_s']:.3f}s "
+             f"collective={rf['collective_s']:.3f}s dom={dom} "
+             f"useful={r['useful_flops_ratio']:.2f} "
+             f"temp={r['memory']['temp_bytes']/2**30:.1f}GiB "
+             f"fix='{HINTS.get((dom, kind), 'n/a')}'")
+    emit(f"roofline/summary/{mesh}", 0.0, f"cells_ok={n_ok}/{len(rows)}")
+    return rows
+
+
+if __name__ == "__main__":
+    run("single")
+    run("multi")

@@ -1,0 +1,40 @@
+"""Paper Table 3 (power / energy / area block): calibrated analytical model
+vs the paper's synthesis numbers, + the headline 9.8x / break-even claims,
++ beyond-paper near-sensor projections for the whisper / VLM frontends."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import energy
+
+
+def run(quiet: bool = False):
+    worst = 0.0
+    for bits in range(2, 9):
+        r = energy.report(bits)
+        bp, sp, be, se, ba, sa = energy.PAPER_TABLE3[bits]
+        errs = [abs(r.bin_power_mw / bp - 1), abs(r.sc_power_mw / sp - 1),
+                abs(r.bin_energy_nj / be - 1), abs(r.sc_energy_nj / se - 1),
+                abs(r.bin_area_mm2 / ba - 1), abs(r.sc_area_mm2 / sa - 1)]
+        worst = max(worst, max(errs))
+        emit(f"table3_energy/{bits}bit", 0.0,
+             f"sc={r.sc_energy_nj:.2f}nJ (paper {se}) "
+             f"bin={r.bin_energy_nj:.2f}nJ (paper {be}) "
+             f"gain={r.efficiency_gain:.2f}x maxerr={max(errs)*100:.1f}%")
+    emit("table3_energy/headline", 0.0,
+         f"gain_4bit={energy.report(4).efficiency_gain:.1f}x (paper 9.8x) "
+         f"breakeven_8bit={energy.report(8).efficiency_gain:.2f}x "
+         f"worst_cell_err={worst*100:.1f}%")
+    # beyond-paper: project the SC frontend to the assigned modality archs
+    for name, (k, units, kernels) in {
+        "whisper_frame_proj": (80, 1500, 16),   # 80-dim mel window per frame
+        "vlm_patch_embed": (588, 1024, 32),     # 14x14x3 patch projection
+    }.items():
+        r4 = energy.scaled_report(4, k, units, kernels)
+        emit(f"table3_energy/project_{name}", 0.0,
+             f"sc={r4.sc_energy_nj:.0f}nJ bin={r4.bin_energy_nj:.0f}nJ "
+             f"gain={r4.efficiency_gain:.1f}x @4bit")
+    return worst
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,2 @@
+"""Paper contribution: hybrid stochastic-binary arithmetic + first-layer NN."""
+from repro.core.sc_layer import SCConfig  # noqa: F401

@@ -1,0 +1,268 @@
+"""Stochastic arithmetic primitives.
+
+Three levels of fidelity for every circuit, all bit-exact to one another
+(proved by tests):
+
+  1. ``*_gate``   — cycle-exact gate-level simulation (``lax.scan`` over clock
+                    cycles on unpacked bits).  The ground truth; matches the
+                    paper's Fig. 1/Fig. 2 schematics wire-for-wire.
+  2. ``*_packed`` — bit-packed word-parallel implementation (uint32 lanes).
+                    This is the TPU-native datapath: 32 ASIC cycles per VPU op.
+  3. count-domain identities — for the TFF adder the output *popcount* is a
+                    closed-form function of the input popcounts
+                    (``(c_x + c_y + s0) >> 1``), so whole adder *trees* reduce
+                    to integer arithmetic.  This is what the Pallas kernel and
+                    the large-scale functional simulation use.
+
+The new TFF adder (paper Fig. 2b) semantics, per clock cycle:
+    if x_t == y_t: z_t = x_t            (TFF state unchanged)
+    else:          z_t = state; state = !state
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitstream
+from repro.core.bitstream import WORD
+
+# --------------------------------------------------------------------------
+# Multipliers (unipolar): AND gate.
+# --------------------------------------------------------------------------
+
+def mult(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Unipolar stochastic multiplier (Fig. 1a): bitwise AND of packed streams."""
+    return jnp.bitwise_and(x, y)
+
+
+# --------------------------------------------------------------------------
+# Old adders.
+# --------------------------------------------------------------------------
+
+def or_add(x: jax.Array, y: jax.Array) -> jax.Array:
+    """OR-gate 'adder' — accurate only near zero [Li et al., FPGA'16]."""
+    return jnp.bitwise_or(x, y)
+
+
+def mux_add(x: jax.Array, y: jax.Array, select: jax.Array) -> jax.Array:
+    """Conventional scaled adder (Fig. 1b): MUX with p=1/2 select stream.
+
+    ``p_z = 0.5 (p_x + p_y)`` in expectation; the select stream discards half
+    of each input's bits, which is the accuracy loss Table 2 quantifies.
+    """
+    return (x & select) | (y & ~select)
+
+
+def tff_select_stream(length: int) -> jax.Array:
+    """A TFF toggling every cycle: 0101... — deterministic p=1/2 select."""
+    w = bitstream.n_words(length)
+    word = np.uint32(0xAAAAAAAA)  # bit t set iff t odd -> toggles each cycle
+    packed = np.full((w,), word, dtype=np.uint32) & bitstream.word_masks(length)
+    return jnp.asarray(packed)
+
+
+# --------------------------------------------------------------------------
+# New TFF adder (paper Fig. 2b) — cycle-exact gate-level reference.
+# --------------------------------------------------------------------------
+
+def tff_add_gate(x_bits: jax.Array, y_bits: jax.Array, s0: jax.Array | int = 0
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Cycle-exact TFF adder on unpacked bool streams ``(..., N)``.
+
+    Returns ``(z_bits, final_state)``.  ``s0`` selects the rounding direction
+    (Fig. 2c): s0=0 rounds down, s0=1 rounds up when (c_x+c_y) is odd.
+    """
+    x_bits = x_bits.astype(jnp.bool_)
+    y_bits = y_bits.astype(jnp.bool_)
+    state0 = jnp.broadcast_to(jnp.asarray(s0, jnp.bool_), x_bits.shape[:-1])
+
+    def cycle(state, xy):
+        xt, yt = xy
+        differ = xt ^ yt
+        z = jnp.where(differ, state, xt)
+        new_state = jnp.where(differ, ~state, state)
+        return new_state, z
+
+    xs = jnp.moveaxis(x_bits, -1, 0)
+    ys = jnp.moveaxis(y_bits, -1, 0)
+    final_state, zs = jax.lax.scan(cycle, state0, (xs, ys))
+    return jnp.moveaxis(zs, 0, -1), final_state
+
+
+# --------------------------------------------------------------------------
+# New TFF adder — packed word-parallel implementation.
+#
+# At positions where x == y the output equals x.  At the j-th differing
+# position (0-indexed, in stream order) the output is s0 XOR (j mod 2).
+# So we need the *exclusive prefix parity* of d = x ^ y at every bit —
+# computed with the classic log-step XOR-shift trick inside each word plus a
+# carried parity across words.
+# --------------------------------------------------------------------------
+
+def _prefix_parity_exclusive(d: jax.Array) -> jax.Array:
+    """Exclusive prefix parity of set bits of ``d`` along the packed bit order.
+
+    ``d``: uint32 ``(..., n_words)``.  Returns uint32 of the same shape where
+    bit ``t`` = parity of the number of set bits of ``d`` strictly before
+    stream position ``t``.
+    """
+    # Inclusive prefix parity within each word.
+    p = d
+    for shift in (1, 2, 4, 8, 16):
+        p = p ^ (p << shift)
+    # p now holds inclusive parity; exclusive within-word parity:
+    excl = p ^ d
+    # Parity carried in from all previous words: cumulative XOR of word parities.
+    word_par = jnp.bitwise_count(d).astype(jnp.uint32) & jnp.uint32(1)
+    carry = jnp.cumsum(word_par, axis=-1) - word_par  # exclusive cumsum
+    carry = (carry & jnp.uint32(1)).astype(jnp.uint32)
+    # A carried-in 1 flips every bit position of that word's exclusive parity.
+    return excl ^ (jnp.uint32(0) - carry)  # 0 -> 0x0, 1 -> 0xFFFFFFFF
+
+
+def tff_add_packed(x: jax.Array, y: jax.Array, length: int, s0: int = 0
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Packed TFF adder, bit-exact to :func:`tff_add_gate`.
+
+    Returns ``(z_packed, final_state)`` where ``final_state`` is int32 in {0,1}.
+    """
+    d = x ^ y
+    par = _prefix_parity_exclusive(d)        # parity of differs before each bit
+    # Output at differing position = s0 XOR parity; elsewhere = x (== y there).
+    toggled = par if not s0 else ~par
+    z = (x & y) | (d & toggled)
+    masks = jnp.asarray(bitstream.word_masks(length))
+    z = z & masks
+    total_d = bitstream.popcount(d & masks)
+    final_state = jnp.asarray(s0, jnp.int32) ^ (total_d & 1)
+    return z, final_state
+
+
+def tff_add_count(c_x: jax.Array, c_y: jax.Array, s0) -> jax.Array:
+    """Count-domain identity for the TFF adder output popcount.
+
+    ``c_z = floor((c_x + c_y)/2)`` for s0=0 and ``ceil`` for s0=1, i.e.
+    ``(c_x + c_y + s0) >> 1``.  Exact — see tests for the proof against the
+    gate-level scan.
+    """
+    return (c_x + c_y + jnp.asarray(s0, c_x.dtype if hasattr(c_x, "dtype") else jnp.int32)) >> 1
+
+
+# --------------------------------------------------------------------------
+# Adder trees.
+#
+# A k-level binary tree of TFF adders sums 2^k streams with scale 2^-k.
+# Because each node's output count depends only on its input counts and its
+# own initial state, the whole tree collapses to integer arithmetic in the
+# count domain — the foundation of the fast functional path and the Pallas
+# kernel.  ``s0_mode`` fixes each node's initial TFF state:
+#   "zero"  — all round down (systematic downward bias ~ -0.5 LSB/level)
+#   "one"   — all round up
+#   "alt"   — alternate by node index within each level (bias ~ 0)
+# --------------------------------------------------------------------------
+
+def _node_s0(mode: str, level: int, index: jax.Array) -> jax.Array:
+    if mode == "zero":
+        return jnp.zeros_like(index)
+    if mode == "one":
+        return jnp.ones_like(index)
+    if mode == "alt":
+        return (index + level) & 1
+    raise ValueError(f"unknown s0_mode {mode}")
+
+
+def tff_tree_counts(counts: jax.Array, s0_mode: str = "alt") -> jax.Array:
+    """Reduce ``(..., M)`` leaf popcounts through a TFF adder tree -> ``(...,)``.
+
+    M is padded to the next power of two with zero streams (count 0), exactly
+    as fixed hardware trees pad unused leaves.  Output = popcount of the root
+    stream; root value = (sum of leaf values) / 2^ceil(log2 M) up to the
+    deterministic per-node rounding.
+    """
+    M = counts.shape[-1]
+    depth = max(1, int(np.ceil(np.log2(max(M, 2)))))
+    pad = (1 << depth) - M
+    if pad:
+        counts = jnp.concatenate(
+            [counts, jnp.zeros(counts.shape[:-1] + (pad,), counts.dtype)], axis=-1)
+    c = counts
+    for level in range(depth):
+        left = c[..., 0::2]
+        right = c[..., 1::2]
+        idx = jnp.arange(left.shape[-1], dtype=c.dtype)
+        s0 = _node_s0(s0_mode, level, idx)
+        c = (left + right + s0) >> 1
+    return c[..., 0]
+
+
+def tff_tree_gate(streams: jax.Array, length: int, s0_mode: str = "alt"
+                  ) -> jax.Array:
+    """Gate-level TFF adder tree on packed streams ``(..., M, n_words)``.
+
+    Returns the packed root stream.  Used only by tests/benchmarks to prove the
+    count-domain tree identity; the production path is count-domain.
+    """
+    M = streams.shape[-2]
+    depth = max(1, int(np.ceil(np.log2(max(M, 2)))))
+    pad = (1 << depth) - M
+    if pad:
+        z = bitstream.zeros(streams.shape[:-2] + (pad,), length)
+        streams = jnp.concatenate([streams, z], axis=-2)
+    s = streams
+    for level in range(depth):
+        left = s[..., 0::2, :]
+        right = s[..., 1::2, :]
+        outs = []
+        for i in range(left.shape[-2]):
+            s0 = int(_node_s0(s0_mode, level, jnp.asarray(i)))
+            z, _ = tff_add_packed(left[..., i, :], right[..., i, :], length, s0=s0)
+            outs.append(z)
+        s = jnp.stack(outs, axis=-2)
+    return s[..., 0, :]
+
+
+def mux_tree_counts(streams: jax.Array, length: int, select_codes: np.ndarray,
+                    ) -> jax.Array:
+    """Old-style MUX adder tree on packed streams ``(..., M, n_words)``.
+
+    Each level uses an independent p=1/2 select stream derived from
+    ``select_codes`` (one code sequence per level, lagged), modelling the
+    conventional design's extra random sources.  Returns root popcounts.
+    """
+    M = streams.shape[-2]
+    depth = max(1, int(np.ceil(np.log2(max(M, 2)))))
+    pad = (1 << depth) - M
+    if pad:
+        z = bitstream.zeros(streams.shape[:-2] + (pad,), length)
+        streams = jnp.concatenate([streams, z], axis=-2)
+    s = streams
+    half = length // 2
+    for level in range(depth):
+        codes = np.roll(select_codes, 7 * level + 3)
+        sel = bitstream.encode_comparator(jnp.asarray(half, jnp.int32),
+                                          jnp.asarray(codes, jnp.int32), length)
+        left = s[..., 0::2, :]
+        right = s[..., 1::2, :]
+        s = mux_add(left, right, sel)
+    return bitstream.popcount(s[..., 0, :])
+
+
+# --------------------------------------------------------------------------
+# Stochastic -> binary conversion (Fig. 1d): a counter == popcount.
+# The ASIC uses *asynchronous* ripple counters so the SC domain can be clocked
+# faster than the counter settles; that timing concern has no TPU analogue —
+# functionally it is exactly popcount (documented in DESIGN.md).
+# --------------------------------------------------------------------------
+
+def counter(packed: jax.Array) -> jax.Array:
+    """Stochastic-to-binary converter: count the 1s."""
+    return bitstream.popcount(packed)
+
+
+def scaled_value(count: jax.Array, length: int, tree_depth: int) -> jax.Array:
+    """Convert a root count back to an estimate of the *unscaled* sum.
+
+    A depth-``k`` tree computes ``sum / 2^k`` — multiply back to undo it.
+    """
+    return count.astype(jnp.float32) * (2.0 ** tree_depth) / jnp.float32(length)

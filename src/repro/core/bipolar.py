@@ -1,0 +1,102 @@
+"""Bipolar stochastic arithmetic — and WHY the paper rejects it (§IV.B).
+
+In the bipolar encoding a stream X represents ``2·p_X - 1 ∈ [-1, 1]``:
+multiplication becomes XNOR, addition stays the scaled MUX/TFF tree.  It
+handles negative weights directly — so why does the paper split weights into
+two unipolar banks instead?
+
+Because the sign activation's decision point (value 0) maps to unipolar
+probability 0.5 — the point of MAXIMUM stream variance (Bernoulli variance
+p(1-p) peaks at 0.5).  Exactly where the classifier must make its call, the
+bipolar representation is noisiest (and toggles most, burning power).  The
+split-unipolar design instead compares two binary counters, where the
+decision is exact.  A second, subtler cost implemented here: a fixed adder
+tree pads unused leaves with all-zero streams, which in bipolar encode value
+-1 — a systematic bias the unipolar design doesn't have.
+
+`tests/test_bipolar.py` quantifies both effects at matched stream length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import arith, bitstream, sng
+
+
+def to_level(value: jax.Array, bits: int) -> jax.Array:
+    """Bipolar value v ∈ [-1, 1] -> unipolar stream level round((v+1)/2·N)."""
+    N = 1 << bits
+    return jnp.clip(jnp.round((value + 1.0) * 0.5 * N), 0, N).astype(jnp.int32)
+
+
+def from_count(count: jax.Array, length: int) -> jax.Array:
+    """Bipolar value of a stream with ``count`` ones: 2c/N - 1."""
+    return 2.0 * count.astype(jnp.float32) / length - 1.0
+
+
+def mult(x: jax.Array, y: jax.Array, length: int) -> jax.Array:
+    """Bipolar multiplier: XNOR (Gaines).  Tail bits kept zero."""
+    masks = jnp.asarray(bitstream.word_masks(length))
+    return (jnp.bitwise_xor(x, y) ^ masks) & masks
+
+
+def dot_bipolar(x_val: jax.Array, w_val: jax.Array, bits: int,
+                scheme: str = "ramp_lowdisc", s0_mode: str = "alt"
+                ) -> jax.Array:
+    """Bipolar stochastic dot product: estimate of ``Σ_k x_k·w_k``.
+
+    x_val: (..., K) in [-1, 1]; w_val: (K, O) in [-1, 1].  XNOR products,
+    TFF-tree summation (the adder is encoding-agnostic), zero-padded leaves
+    un-biased analytically (each contributes bipolar -1).
+    """
+    N = 1 << bits
+    K = x_val.shape[-1]
+    codes_a, codes_b = sng.codes_for_scheme(scheme, bits)
+    xs = sng.generate(to_level(x_val, bits), codes_a, N)      # (..., K, w)
+    ws = sng.generate(to_level(w_val, bits), codes_b, N)      # (K, O, w)
+    prod = mult(xs[..., :, None, :], ws, N)                   # (..., K, O, w)
+    counts = bitstream.popcount(jnp.swapaxes(prod, -3, -2))   # (..., O, K)
+    root = arith.tff_tree_counts(counts, s0_mode=s0_mode)     # (..., O)
+    depth = max(1, int(np.ceil(np.log2(max(K, 2)))))
+    pad = (1 << depth) - K
+    # root bipolar value = (Σ_K v_i + pad·(-1)) / 2^depth
+    return from_count(root, N) * (1 << depth) + pad
+
+
+def sign_bipolar(x_val, w_val, bits, **kw) -> jax.Array:
+    """sign(x∘w) through the bipolar path (the design the paper rejects)."""
+    return jnp.sign(dot_bipolar(x_val, w_val, bits, **kw))
+
+
+def decision_point_errors(bits: int, n: int = 512, K: int = 16, seed: int = 0):
+    """Error of the dot estimate near the sign activation's decision point.
+
+    Draws (x, w) with the exact dot pushed toward 0, returns
+    (bipolar_abs_err, split_unipolar_abs_err) arrays for samples whose
+    exact |dot| is in the smallest quartile — the regime §IV.B argues about.
+    """
+    from repro.core import sc_layer
+    N = 1 << bits
+    rng = np.random.default_rng(seed)
+    x = rng.random((n, K)).astype(np.float32)              # sensor data [0,1]
+    w = rng.normal(0, 0.25, (K, 1)).astype(np.float32)
+    w = np.clip(w - (x @ w).mean() / K / np.maximum(x.mean(), 1e-6), -1, 1)
+    exact = (x @ w)[:, 0]
+    # bipolar path: encode x into [-1,1]
+    est_b = np.asarray(dot_bipolar(jnp.asarray(2 * x - 1), jnp.asarray(w),
+                                   bits))[:, 0]
+    # bipolar estimate is of Σ (2x-1)w = 2Σxw - Σw: recover Σxw
+    est_b = (est_b + w.sum()) / 2.0
+    # split-unipolar path (the paper's design)
+    cfg = sc_layer.SCConfig(bits=bits)
+    xl = sc_layer.quantize_levels(jnp.asarray(x), bits)
+    pos, neg, _ = sc_layer.quantize_weights(jnp.asarray(w), bits, scale=False)
+    cp = sc_layer.counts_via_table(xl, pos, cfg)
+    cn = sc_layer.counts_via_table(xl, neg, cfg)
+    depth = sc_layer.tree_depth(K)
+    est_s = (np.asarray(cp, np.float32)
+             - np.asarray(cn, np.float32))[:, 0] * (2.0 ** depth) / N
+    near0 = np.abs(exact) <= np.quantile(np.abs(exact), 0.25)
+    return (np.abs(est_b - exact)[near0], np.abs(est_s - exact)[near0])

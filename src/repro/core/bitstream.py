@@ -1,0 +1,110 @@
+"""Bit-packed stochastic bit-stream representation.
+
+A stochastic number (SN) of length ``N`` is stored as ``ceil(N/32)`` little-endian
+``uint32`` words: bit ``t`` of the stream lives in word ``t // 32`` at bit position
+``t % 32``.  The unipolar value of a stream is ``popcount / N``.
+
+This is the TPU-native adaptation of the paper's serial bit-streams: 32 "clock
+cycles" of the ASIC advance per vector word-op, and all SC gate primitives
+(AND multiplier, MUX/TFF adders) become bitwise word ops on the VPU.
+
+All functions are pure jnp and jit-safe.  ``N`` (stream length) is static.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD = 32
+UINT32_MASK = np.uint32(0xFFFFFFFF)
+
+
+def n_words(length: int) -> int:
+    """Number of uint32 words needed for a stream of ``length`` bits."""
+    return (int(length) + WORD - 1) // WORD
+
+
+def tail_mask(length: int) -> np.uint32:
+    """Mask of valid bits in the final word of a length-``length`` stream."""
+    rem = int(length) % WORD
+    if rem == 0:
+        return UINT32_MASK
+    return np.uint32((1 << rem) - 1)
+
+
+def word_masks(length: int) -> np.ndarray:
+    """(n_words,) uint32 validity mask for each word of the stream."""
+    w = n_words(length)
+    masks = np.full((w,), UINT32_MASK, dtype=np.uint32)
+    masks[-1] = tail_mask(length)
+    return masks
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack a boolean/0-1 array ``(..., N)`` into ``(..., n_words(N))`` uint32.
+
+    Bit ``t`` -> word ``t // 32``, position ``t % 32`` (LSB-first).
+    """
+    N = bits.shape[-1]
+    w = n_words(N)
+    pad = w * WORD - N
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), dtype=bits.dtype)], axis=-1
+        )
+    bits = bits.reshape(bits.shape[:-1] + (w, WORD)).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32)).astype(jnp.uint32)
+    return jnp.sum(bits * weights, axis=-1).astype(jnp.uint32)
+
+
+def unpack_bits(packed: jax.Array, length: int) -> jax.Array:
+    """Unpack ``(..., n_words)`` uint32 into boolean ``(..., length)``."""
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(packed.shape[:-1] + (packed.shape[-1] * WORD,))
+    return bits[..., :length].astype(jnp.bool_)
+
+
+def popcount(packed: jax.Array) -> jax.Array:
+    """Total number of set bits over the trailing word axis -> int32 ``(...)``."""
+    return jnp.sum(jnp.bitwise_count(packed).astype(jnp.int32), axis=-1)
+
+
+def popcount_per_word(packed: jax.Array) -> jax.Array:
+    """Per-word set-bit count, int32, same shape as ``packed``."""
+    return jnp.bitwise_count(packed).astype(jnp.int32)
+
+
+def encode_comparator(level: jax.Array, codes: jax.Array, length: int) -> jax.Array:
+    """Comparator SNG (Fig. 1c of the paper): ``bit_t = codes[t] < level``.
+
+    Args:
+      level: integer array ``(...,)`` in ``[0, length]`` — the binary number to
+        convert (``c`` ones in the output stream when ``codes`` is a permutation
+        of ``0..length-1``).
+      codes: ``(length,)`` integer code sequence (ramp, van-der-Corput, LFSR, ...).
+      length: static stream length ``N``.
+
+    Returns packed uint32 stream(s), shape ``(..., n_words(length))``.
+    """
+    level = jnp.asarray(level)
+    bits = (codes[None, :] < level.reshape(-1)[:, None])
+    packed = pack_bits(bits)
+    return packed.reshape(level.shape + (n_words(length),))
+
+
+def value(packed: jax.Array, length: int) -> jax.Array:
+    """Unipolar value ``popcount / N`` as float32."""
+    return popcount(packed).astype(jnp.float32) / jnp.float32(length)
+
+
+def zeros(shape: tuple, length: int) -> jax.Array:
+    """All-zero stream(s) (unipolar value 0)."""
+    return jnp.zeros(tuple(shape) + (n_words(length),), dtype=jnp.uint32)
+
+
+def ones(shape: tuple, length: int) -> jax.Array:
+    """All-one stream(s) (unipolar value 1); tail bits beyond N are kept zero."""
+    masks = jnp.asarray(word_masks(length))
+    return jnp.broadcast_to(masks, tuple(shape) + (n_words(length),))

@@ -1,0 +1,157 @@
+"""Hybrid stochastic-binary pipeline (§IV + §V.B): pretrain → quantize first
+layer → freeze → retrain the binary remainder.
+
+This is the paper's third contribution: the binary-domain retraining absorbs
+the noise injected by the short-stream stochastic first layer.  The first
+layer is *frozen* during retraining ("retraining the binary portion"), so no
+straight-through estimator is required on the main path; an optional STE mode
+(beyond-paper) fine-tunes the first-layer weights through the quantizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sc_layer import SCConfig
+from repro.models import lenet
+from repro.train import optim
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    mode: str = "sc"                 # "sc" | "binary" | "float"
+    sc: SCConfig = SCConfig()
+    bits: int = 4                    # binary-baseline quantization bits
+    soft_threshold: float = 0.0
+    sc_impl: str = "table"           # "table" | "streams"
+
+
+def loss_fn(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+# --------------------------------------------------------------------------
+# Stage 1 — float pretraining (paper: TF/Keras on a Titan X; here: pure JAX).
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "opt_cfg"))
+def float_train_step(params, opt_state, x, y, key,
+                     cfg: lenet.LeNetConfig, opt_cfg: optim.AdamWConfig):
+    def loss(p):
+        logits = lenet.apply(p, x, cfg, mode="float", train=True,
+                             dropout_key=key)
+        return loss_fn(logits, y)
+    l, grads = jax.value_and_grad(loss)(params)
+    params, opt_state = optim.apply(params, grads, opt_state, opt_cfg)
+    return params, opt_state, l
+
+
+# --------------------------------------------------------------------------
+# Stage 2 — first-layer feature caching.
+# The frozen front end means each design's layer-1 output can be precomputed
+# once over the dataset; retraining then runs on cached {-1,0,1} features.
+# --------------------------------------------------------------------------
+
+def cache_first_layer(params, images: np.ndarray, hybrid: HybridConfig,
+                      batch: int = 64) -> np.ndarray:
+    """images: uint8 (n, 28, 28, 1).  Returns int8 (n, 28, 28, C1) features."""
+    fwd = jax.jit(lambda xb: lenet.first_layer(
+        params, xb, hybrid.mode, hybrid.sc, hybrid.bits,
+        hybrid.soft_threshold, hybrid.sc_impl))
+    outs = []
+    for i in range(0, images.shape[0], batch):
+        xb = jnp.asarray(images[i:i + batch], jnp.float32) / 255.0
+        outs.append(np.asarray(fwd(xb), np.int8))
+    return np.concatenate(outs, axis=0)
+
+
+# --------------------------------------------------------------------------
+# Stage 3 — retrain the binary tail on cached features.
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "opt_cfg"))
+def tail_train_step(params, opt_state, h1, y, key,
+                    cfg: lenet.LeNetConfig, opt_cfg: optim.AdamWConfig):
+    def loss(p):
+        logits = lenet.tail({**params, **p}, h1, cfg, train=True,
+                            dropout_key=key)
+        return loss_fn(logits, y)
+    trainable = {k: params[k] for k in ("conv2", "dense1", "dense2")}
+    l, grads = jax.value_and_grad(loss)(trainable)
+    trainable, opt_state = optim.apply(trainable, grads, opt_state, opt_cfg)
+    return {**params, **trainable}, opt_state, l
+
+
+def retrain_tail(params, feats: np.ndarray, labels: np.ndarray,
+                 cfg: lenet.LeNetConfig, *, steps: int = 400, batch: int = 128,
+                 lr: float = 1e-3, seed: int = 0):
+    """Retrain conv2/dense1/dense2 on cached first-layer features."""
+    opt_cfg = optim.AdamWConfig(lr=lr)
+    trainable = {k: params[k] for k in ("conv2", "dense1", "dense2")}
+    opt_state = optim.init(trainable, opt_cfg)
+    key = jax.random.key(seed)
+    n = feats.shape[0]
+    for step in range(steps):
+        rng = np.random.default_rng((seed, step))
+        idx = rng.integers(0, n, size=batch)
+        key, sub = jax.random.split(key)
+        params, opt_state, _ = tail_train_step(
+            params, opt_state, jnp.asarray(feats[idx], jnp.float32),
+            jnp.asarray(labels[idx]), sub, cfg, opt_cfg)
+    return params
+
+
+def evaluate_cached(params, feats: np.ndarray, labels: np.ndarray,
+                    cfg: lenet.LeNetConfig, batch: int = 256) -> float:
+    """Classification accuracy from cached first-layer features."""
+    fwd = jax.jit(lambda h: lenet.tail(params, h, cfg, train=False))
+    correct = 0
+    for i in range(0, feats.shape[0], batch):
+        logits = fwd(jnp.asarray(feats[i:i + batch], jnp.float32))
+        correct += int((np.asarray(jnp.argmax(logits, -1))
+                        == labels[i:i + batch]).sum())
+    return correct / feats.shape[0]
+
+
+def evaluate(params, images: np.ndarray, labels: np.ndarray,
+             cfg: lenet.LeNetConfig, hybrid: HybridConfig,
+             batch: int = 256) -> float:
+    """End-to-end accuracy of a hybrid design on raw uint8 images."""
+    fwd = jax.jit(lambda xb: lenet.apply(
+        params, xb, cfg, mode=hybrid.mode, sc_cfg=hybrid.sc, bits=hybrid.bits,
+        soft_threshold=hybrid.soft_threshold, sc_impl=hybrid.sc_impl))
+    correct = 0
+    for i in range(0, images.shape[0], batch):
+        xb = jnp.asarray(images[i:i + batch], jnp.float32) / 255.0
+        logits = fwd(xb)
+        correct += int((np.asarray(jnp.argmax(logits, -1))
+                        == labels[i:i + batch]).sum())
+    return correct / images.shape[0]
+
+
+# --------------------------------------------------------------------------
+# Beyond-paper: straight-through estimator fine-tuning of the SC first layer.
+# The forward pass is the exact SC simulation; the backward pass treats the
+# quantize+sign chain as identity within [-1, 1].
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def ste_sign(x):
+    return jnp.where(x == 0, 0.0, jnp.sign(x))
+
+
+def _ste_fwd(x):
+    return ste_sign(x), x
+
+
+def _ste_bwd(x, g):
+    return (jnp.where(jnp.abs(x) <= 1.0, g, 0.0),)
+
+
+ste_sign.defvjp(_ste_fwd, _ste_bwd)

@@ -1,0 +1,230 @@
+"""The paper's stochastic first-layer (§IV.B): unipolar split-weight SC dot
+product + sign activation.
+
+Design (Fig. 3): weights are split into positive/negative unipolar streams
+``w_pos``/``w_neg``; two dot products ``g_pos = x∘w_pos``, ``g_neg = x∘w_neg``
+run entirely in the stochastic domain (AND multipliers + TFF adder tree), are
+converted to binary by two counters, and a binary comparator implements the
+sign activation — avoiding the bipolar encoding whose decision point sits at
+maximum-fluctuation 0.5.
+
+Three equivalent implementations of the *new* design (tested bit-identical):
+  - ``counts_via_table``  — product popcounts via a precomputed (N+1)² lookup
+                            table + count-domain TFF tree.  Fast functional
+                            path used for training-time simulation at scale.
+  - ``counts_via_streams``— materialize packed streams, AND, popcount, tree.
+  - the Pallas kernel (``repro.kernels.sc_dot``) — packed AND+popcount GEMM.
+
+The *old* design (prior-work baseline for Table 3's "Old SC" row) uses
+LFSR-pair SNGs + MUX adder trees and only exists at stream level (the MUX
+adder samples bit positions, so its output is not a function of input counts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import arith, bitstream, sng
+
+
+@dataclasses.dataclass(frozen=True)
+class SCConfig:
+    """Configuration of the stochastic first layer."""
+    bits: int = 4                  # stream length N = 2**bits
+    scheme: str = "ramp_lowdisc"   # SNG scheme for (activation, weight) streams
+    s0_mode: str = "alt"           # TFF initial-state assignment in the tree
+    adder: str = "tff"             # "tff" (paper's new) | "mux" (old) | "ideal"
+    soft_threshold: float = 0.0    # |g_pos-g_neg| <= tau (value units) -> 0
+    weight_scale: bool = True      # normalize kernels to full [-1,1] range
+
+    @property
+    def length(self) -> int:
+        return 1 << self.bits
+
+
+# --------------------------------------------------------------------------
+# Product-count lookup table.
+# popcount(S_a AND S_b) for deterministic SNG schemes is a pure function of
+# the two levels (a, b) — precompute it once per (scheme, bits).
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def product_count_table(scheme: str, bits: int) -> np.ndarray:
+    """(N+1, N+1) int32: popcount(stream_A(a) & stream_B(b)) for all levels."""
+    N = 1 << bits
+    codes_a, codes_b = sng.codes_for_scheme(scheme, bits)
+    lv = np.arange(N + 1)
+    bits_a = codes_a[None, :] < lv[:, None]     # (N+1, N)
+    bits_b = codes_b[None, :] < lv[:, None]
+    return np.einsum("an,bn->ab", bits_a.astype(np.int32), bits_b.astype(np.int32),
+                     ).astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# Quantization.
+# --------------------------------------------------------------------------
+
+def quantize_levels(x01: jax.Array, bits: int) -> jax.Array:
+    """Map [0,1] activations to integer stream levels 0..N."""
+    N = 1 << bits
+    return jnp.clip(jnp.round(x01 * N), 0, N).astype(jnp.int32)
+
+
+def quantize_weights(w: jax.Array, bits: int, scale: bool = True
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Split weights into (pos_levels, neg_levels, per-kernel scale).
+
+    ``w``: (..., K, O) float.  Weight scaling [Kim et al.] normalizes each
+    output kernel to use the full dynamic range [-1, 1].
+    """
+    N = 1 << bits
+    if scale:
+        s = jnp.max(jnp.abs(w), axis=tuple(range(w.ndim - 1)), keepdims=True)
+        s = jnp.maximum(s, 1e-8)
+    else:
+        s = jnp.ones((1,) * (w.ndim - 1) + (w.shape[-1],), w.dtype)
+    wn = w / s
+    pos = jnp.clip(jnp.round(jnp.maximum(wn, 0) * N), 0, N).astype(jnp.int32)
+    neg = jnp.clip(jnp.round(jnp.maximum(-wn, 0) * N), 0, N).astype(jnp.int32)
+    return pos, neg, s.reshape(s.shape[-1])
+
+
+def dequantize_weights(pos: jax.Array, neg: jax.Array, scale: jax.Array,
+                       bits: int) -> jax.Array:
+    """Inverse of :func:`quantize_weights` (the value the SC layer 'sees')."""
+    N = 1 << bits
+    return (pos - neg).astype(jnp.float32) / N * scale
+
+
+# --------------------------------------------------------------------------
+# New-design dot product — count domain (fast functional path).
+# --------------------------------------------------------------------------
+
+def tree_depth(k: int) -> int:
+    return max(1, int(np.ceil(np.log2(max(k, 2)))))
+
+
+def counts_via_table(x_lvl: jax.Array, w_lvl: jax.Array, cfg: SCConfig
+                     ) -> jax.Array:
+    """Product popcounts by table lookup + TFF tree reduction.
+
+    x_lvl: (..., K) int32 levels 0..N; w_lvl: (K, O) int32 levels.
+    Returns root counts (..., O) int32 — one stochastic dot product per output.
+    """
+    table = jnp.asarray(product_count_table(cfg.scheme, cfg.bits))
+    prod = table[x_lvl[..., :, None], w_lvl]           # (..., K, O)
+    prod = jnp.swapaxes(prod, -1, -2)                  # (..., O, K)
+    if cfg.adder == "ideal":
+        k = x_lvl.shape[-1]
+        return jnp.sum(prod, axis=-1) >> tree_depth(k)  # same 2^-d scaling
+    return arith.tff_tree_counts(prod, s0_mode=cfg.s0_mode)
+
+
+# --------------------------------------------------------------------------
+# Stream-level dot products (ground truth + old-design baseline).
+# --------------------------------------------------------------------------
+
+def counts_via_streams(x_lvl: jax.Array, w_lvl: jax.Array, cfg: SCConfig
+                       ) -> jax.Array:
+    """Materialize packed streams and run the datapath bit-for-bit.
+
+    Used by tests (must equal :func:`counts_via_table` exactly for the new
+    design) and by the old-design baseline (``cfg.adder == "mux"``).
+    """
+    N = cfg.length
+    bits = cfg.bits
+    codes_a, codes_b = sng.codes_for_scheme(cfg.scheme, bits)
+    sx = sng.generate(x_lvl, codes_a, N)               # (..., K, w)
+    sw = sng.generate(w_lvl, codes_b, N)               # (K, O, w)
+    prod = arith.mult(sx[..., :, None, :], sw)         # broadcast -> (..., K, O, w)
+    # prod: (..., K, O, w) -> (..., O, K, w)
+    prod = jnp.swapaxes(prod, -3, -2)
+    if cfg.adder == "tff":
+        counts = bitstream.popcount(prod)              # (..., O, K)
+        return arith.tff_tree_counts(counts, s0_mode=cfg.s0_mode)
+    if cfg.adder == "mux":
+        sel_codes = sng.lfsr_sequence(bits)
+        return arith.mux_tree_counts(prod, N, sel_codes)
+    if cfg.adder == "ideal":
+        counts = bitstream.popcount(prod)
+        return jnp.sum(counts, axis=-1) >> tree_depth(x_lvl.shape[-1])
+    raise ValueError(cfg.adder)
+
+
+# --------------------------------------------------------------------------
+# The full SC layer: g = sign(x ∘ w) with pos/neg split + soft threshold.
+# --------------------------------------------------------------------------
+
+def sc_dot_sign(x01: jax.Array, w: jax.Array, cfg: SCConfig,
+                impl: str = "table") -> jax.Array:
+    """Stochastic-domain ``sign(x∘w)`` exactly as in Fig. 3.
+
+    x01: (..., K) activations in [0,1];  w: (K, O) float weights.
+    Returns (..., O) float32 in {-1, 0, +1}.
+    """
+    x_lvl = quantize_levels(x01, cfg.bits)
+    pos, neg, _scale = quantize_weights(w, cfg.bits, cfg.weight_scale)
+    f = {"table": counts_via_table, "streams": counts_via_streams}[impl]
+    if cfg.adder == "mux":                      # old design only exists at stream level
+        f = counts_via_streams
+    c_pos = f(x_lvl, pos, cfg)
+    c_neg = f(x_lvl, neg, cfg)
+    k = x01.shape[-1]
+    # Undo the tree's 2^-depth scale and the 1/N stream scale -> value units.
+    diff = (c_pos - c_neg).astype(jnp.float32) * (2.0 ** tree_depth(k)) / cfg.length
+    thr = jnp.float32(cfg.soft_threshold)
+    return jnp.where(jnp.abs(diff) <= thr, 0.0, jnp.sign(diff)).astype(jnp.float32)
+
+
+def binary_dot_sign(x01: jax.Array, w: jax.Array, bits: int,
+                    soft_threshold: float = 0.0, weight_scale: bool = True
+                    ) -> jax.Array:
+    """The all-binary baseline: k-bit quantized weights, 8-bit activations,
+    exact integer dot product, sign activation (Table 3 'Binary' rows)."""
+    x_lvl = quantize_levels(x01, 8).astype(jnp.int32)   # 8-bit sensor ADC
+    pos, neg, _ = quantize_weights(w, bits, weight_scale)
+    acc = jnp.einsum("...k,ko->...o", x_lvl.astype(jnp.float32),
+                     (pos - neg).astype(jnp.float32))
+    # value units: x_lvl/256 * w_lvl/N summed
+    diff = acc / (256.0 * (1 << bits))
+    thr = jnp.float32(soft_threshold)
+    return jnp.where(jnp.abs(diff) <= thr, 0.0, jnp.sign(diff)).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Convolutional wrapper (im2col + sc_dot_sign) — the 784-unit engine.
+# --------------------------------------------------------------------------
+
+def extract_patches(x: jax.Array, ksize: int, padding: str = "SAME") -> jax.Array:
+    """im2col: (B, H, W, C) -> (B, H', W', ksize*ksize*C)."""
+    B, H, W, C = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x, filter_shape=(ksize, ksize), window_strides=(1, 1), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return patches
+
+
+def sc_conv2d_sign(x: jax.Array, w: jax.Array, cfg: SCConfig,
+                   impl: str = "table", padding: str = "SAME") -> jax.Array:
+    """Stochastic first-layer convolution.
+
+    x: (B, H, W, C) in [0,1] (sensor data);  w: (kh, kw, C, O).
+    Returns (B, H', W', O) in {-1, 0, +1}.
+    """
+    kh, kw, C, O = w.shape
+    patches = extract_patches(x, kh, padding)
+    return sc_dot_sign(patches, w.reshape(kh * kw * C, O), cfg, impl=impl)
+
+
+def binary_conv2d_sign(x: jax.Array, w: jax.Array, bits: int,
+                       soft_threshold: float = 0.0, padding: str = "SAME"
+                       ) -> jax.Array:
+    """All-binary quantized first-layer convolution baseline."""
+    kh, kw, C, O = w.shape
+    patches = extract_patches(x, kh, padding)
+    return binary_dot_sign(patches, w.reshape(kh * kw * C, O), bits,
+                           soft_threshold)

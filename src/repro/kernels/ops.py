@@ -1,0 +1,114 @@
+"""Public jit'd wrappers for the Pallas kernels: padding, blocking, and the
+level->stream->dot composition used by the SC first layer.
+
+The container is CPU-only, so ``interpret=True`` is the default execution
+mode (the kernel body runs bit-exactly); on a real TPU deployment set
+``interpret=False`` to lower through Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sng
+from repro.kernels import ref
+from repro.kernels.sc_dot import sc_dot_pallas
+from repro.kernels.sng_pack import sng_pack_pallas
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    target = ((size + multiple - 1) // multiple) * multiple
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads)
+
+
+def _next_pow2(k: int) -> int:
+    return 1 << max(1, int(np.ceil(np.log2(max(k, 2)))))
+
+
+def sc_dot(x_packed: jax.Array, w_packed: jax.Array, *, s0_mode: str = "alt",
+           adder: str = "tff", bm: int = 128, bo: int = 128,
+           interpret: bool = True) -> jax.Array:
+    """Stochastic dot product on packed streams.
+
+    x_packed: (M, K, Wd) uint32;  w_packed: (K, O, Wd) uint32.
+    Returns (M, O) int32 TFF-tree root counts.  Zero-padding K to the next
+    power of two adds all-zero streams — exactly the fixed tree's unused
+    leaves (bit-identical to the oracle, which pads the same way).
+    """
+    M, K, Wd = x_packed.shape
+    _, O, _ = w_packed.shape
+    Kp = _next_pow2(K)
+    x_packed = _pad_to(x_packed, 1, Kp)
+    w_packed = _pad_to(w_packed, 0, Kp)
+    bm_eff = min(bm, M) if M % bm else bm
+    bo_eff = min(bo, O) if O % bo else bo
+    xp = _pad_to(x_packed, 0, bm_eff)
+    wp = _pad_to(w_packed, 1, bo_eff)
+    out = sc_dot_pallas(xp, wp, bm=bm_eff, bo=bo_eff, s0_mode=s0_mode,
+                        adder=adder, interpret=interpret)
+    return out[:M, :O]
+
+
+def sc_dot_from_levels(x_lvl: jax.Array, w_lvl: jax.Array, bits: int, *,
+                       scheme: str = "ramp_lowdisc", s0_mode: str = "alt",
+                       adder: str = "tff", interpret: bool = True) -> jax.Array:
+    """Full SC datapath from integer levels: SNG pack (kernel) -> dot (kernel).
+
+    x_lvl: (M, K) int32 levels 0..N;  w_lvl: (K, O) int32 levels.
+    Stream length N = 2**bits must be >= 32 to use the packed kernels
+    (shorter streams use the sc_layer table path).
+    """
+    N = 1 << bits
+    codes_a, codes_b = sng.codes_for_scheme(scheme, bits)
+    x_stream = sng_pack(x_lvl, jnp.asarray(codes_a, jnp.int32), N,
+                        interpret=interpret)
+    w_stream = sng_pack(w_lvl, jnp.asarray(codes_b, jnp.int32), N,
+                        interpret=interpret)
+    return sc_dot(x_stream, w_stream, s0_mode=s0_mode, adder=adder,
+                  interpret=interpret)
+
+
+def sng_pack(levels: jax.Array, codes: jax.Array, length: int, *,
+             interpret: bool = True, block: int = 256) -> jax.Array:
+    """Comparator SNG + packing as a Pallas kernel.
+
+    levels: any shape, int32 in [0, N]; returns (..., N//32) uint32.
+    """
+    assert length % 32 == 0, "packed SNG kernel needs N % 32 == 0"
+    shape = levels.shape
+    flat = levels.reshape(-1)
+    n = flat.shape[0]
+    blk = min(block, max(8, n))
+    flat = _pad_to(flat, 0, blk)
+    out = sng_pack_pallas(flat, codes, length=length, block=blk,
+                          interpret=interpret)
+    return out[:n].reshape(shape + (length // 32,))
+
+
+def sc_dot_posneg(x_packed: jax.Array, w_pos: jax.Array, w_neg: jax.Array,
+                  **kw) -> tuple[jax.Array, jax.Array]:
+    """Fused pos/neg dot products (§Perf kernel iteration): the paper's
+    split-weight design needs BOTH ``x∘w_pos`` and ``x∘w_neg``; running them
+    as separate kernel calls reads every X tile from HBM twice.  Packing the
+    two weight banks along the O axis computes both in one pass — X traffic
+    halves (~40% total HBM-byte cut at LeNet shapes, see kernel_bench).
+
+    Returns (counts_pos, counts_neg), each (M, O) int32.
+    """
+    O = w_pos.shape[1]
+    w = jnp.concatenate([w_pos, w_neg], axis=1)    # (K, 2O, Wd)
+    out = sc_dot(x_packed, w, **kw)                # X tiles read once
+    return out[:, :O], out[:, O:]
+
+
+# Re-export oracle for convenience in tests/benchmarks.
+oracle_sc_dot = ref.sc_dot
+oracle_sng_pack = ref.sng_pack

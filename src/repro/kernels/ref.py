@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground-truth implementations every kernel is tested against
+(``interpret=True`` on CPU, shape/dtype sweeps in tests/test_kernels.py).
+They mirror the count-domain semantics proven bit-exact to the gate-level
+simulation in tests/test_arith.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def popcount_u32(x: jax.Array) -> jax.Array:
+    return jnp.bitwise_count(x).astype(jnp.int32)
+
+
+def tff_tree(counts: jax.Array, s0_mode: str = "alt") -> jax.Array:
+    """TFF adder tree over axis -2 of ``counts`` (..., K, O) -> (..., O)."""
+    K = counts.shape[-2]
+    depth = max(1, int(np.ceil(np.log2(max(K, 2)))))
+    pad = (1 << depth) - K
+    if pad:
+        counts = jnp.concatenate(
+            [counts, jnp.zeros(counts.shape[:-2] + (pad, counts.shape[-1]),
+                               counts.dtype)], axis=-2)
+    c = counts
+    for level in range(depth):
+        half = c.shape[-2] // 2
+        c2 = c.reshape(c.shape[:-2] + (half, 2, c.shape[-1]))
+        left, right = c2[..., 0, :], c2[..., 1, :]
+        idx = jnp.arange(half, dtype=c.dtype)[..., None]
+        if s0_mode == "zero":
+            s0 = jnp.zeros_like(idx)
+        elif s0_mode == "one":
+            s0 = jnp.ones_like(idx)
+        else:  # alt
+            s0 = (idx + level) & 1
+        c = (left + right + s0) >> 1
+    return c[..., 0, :]
+
+
+def sc_dot(x_packed: jax.Array, w_packed: jax.Array, s0_mode: str = "alt",
+           adder: str = "tff") -> jax.Array:
+    """Oracle for the sc_dot kernel.
+
+    x_packed: (M, K, Wd) uint32 — M windows of K packed activation streams.
+    w_packed: (K, O, Wd) uint32 — K packed weight streams for O outputs.
+    Returns (M, O) int32: TFF-tree-reduced popcounts of the AND products
+    (``adder="ideal"`` uses a plain sum >> depth instead).
+    """
+    prods = x_packed[:, :, None, :] & w_packed[None, :, :, :]   # (M, K, O, Wd)
+    counts = jnp.sum(popcount_u32(prods), axis=-1)              # (M, K, O)
+    if adder == "ideal":
+        K = x_packed.shape[1]
+        depth = max(1, int(np.ceil(np.log2(max(K, 2)))))
+        return (jnp.sum(counts, axis=1) >> depth).astype(jnp.int32)
+    return tff_tree(counts, s0_mode).astype(jnp.int32)
+
+
+def flash_attention(q, k, v, causal: bool = True) -> jax.Array:
+    """Oracle for the flash_attn kernel: naive softmax attention.
+    q, k, v: (BH, S, D)."""
+    D = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if causal:
+        S = q.shape[1]
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)
+                      ).astype(v.dtype)
+
+
+def sng_pack(levels: jax.Array, codes: jax.Array, length: int) -> jax.Array:
+    """Oracle for the sng_pack kernel: comparator SNG + bit packing.
+
+    levels: (...,) int32 in [0, N]; codes: (N,) int32.
+    Returns (..., N//32) uint32 (N must be a multiple of 32 here; shorter
+    streams are handled by the sc_layer path, not the kernel).
+    """
+    assert length % 32 == 0
+    bits = (codes[None, :] < levels.reshape(-1, 1)).astype(jnp.uint32)
+    bits = bits.reshape(-1, length // 32, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    packed = jnp.sum(bits * weights, axis=-1).astype(jnp.uint32)
+    return packed.reshape(levels.shape + (length // 32,))

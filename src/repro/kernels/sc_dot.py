@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: bit-packed stochastic dot product (AND + popcount + TFF
+tree), the compute hot-spot of the paper's 784-unit convolution engine.
+
+TPU adaptation (see DESIGN.md §2): the ASIC's serial AND-gates + TFF adder
+tree become, per grid cell, a word-parallel AND over packed uint32 streams,
+a SWAR popcount (shift/mask adds only — no reliance on a native
+population-count lowering), and an integer TFF-tree reduction in VMEM.
+
+Tiling: grid (M/bm, O/bo); each cell loads
+    X tile (bm, K, Wd)  and  W tile (K, bo, Wd)
+into VMEM and emits a (bm, bo) int32 tile of root counts.  K (window size,
+padded to a power of two by the wrapper) and Wd (words per stream, N/32) are
+small — e.g. K=32, Wd=8 at 8-bit precision — so the working set is
+  bm*K*Wd*4 + K*bo*Wd*4 + bm*K*bo*4 bytes;
+with bm=bo=128, K=32, Wd=8: 128KiB + 128KiB + 2MiB ≈ 2.3MiB « 16MiB VMEM.
+bm, bo are multiples of 8×128 MXU/VPU alignment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _swar_popcount(v: jax.Array) -> jax.Array:
+    """Branch-free popcount of uint32 using shift/mask adds (VPU-friendly)."""
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def _tree_reduce(counts: jax.Array, s0_mode: str) -> jax.Array:
+    """TFF adder tree over axis 1 of (bm, K, bo) int32 -> (bm, bo)."""
+    K = counts.shape[1]
+    depth = int(np.log2(K))
+    c = counts
+    for level in range(depth):
+        half = c.shape[1] // 2
+        c2 = c.reshape(c.shape[0], half, 2, c.shape[2])
+        left, right = c2[:, :, 0, :], c2[:, :, 1, :]
+        if s0_mode == "zero":
+            s0 = jnp.zeros((1, half, 1), jnp.int32)
+        elif s0_mode == "one":
+            s0 = jnp.ones((1, half, 1), jnp.int32)
+        else:  # "alt"
+            idx = jax.lax.broadcasted_iota(jnp.int32, (1, half, 1), 1)
+            s0 = (idx + level) & 1
+        c = (left + right + s0) >> 1
+    return c[:, 0, :]
+
+
+def _sc_dot_kernel(x_ref, w_ref, o_ref, *, s0_mode: str, adder: str):
+    """x_ref: (bm, K, Wd) u32; w_ref: (K, bo, Wd) u32; o_ref: (bm, bo) i32."""
+    x = x_ref[...]
+    w = w_ref[...]
+    K = x.shape[1]
+
+    def body(k, acc):
+        xk = jax.lax.dynamic_index_in_dim(x, k, axis=1, keepdims=False)  # (bm, Wd)
+        wk = jax.lax.dynamic_index_in_dim(w, k, axis=0, keepdims=False)  # (bo, Wd)
+        prod = xk[:, None, :] & wk[None, :, :]                            # (bm, bo, Wd)
+        cnt = jnp.sum(_swar_popcount(prod), axis=-1)                      # (bm, bo)
+        return jax.lax.dynamic_update_index_in_dim(acc, cnt, k, axis=1)
+
+    counts = jnp.zeros((x.shape[0], K, w.shape[1]), jnp.int32)
+    counts = jax.lax.fori_loop(0, K, body, counts)
+    if adder == "ideal":
+        depth = int(np.log2(K))
+        o_ref[...] = (jnp.sum(counts, axis=1) >> depth).astype(jnp.int32)
+    else:
+        o_ref[...] = _tree_reduce(counts, s0_mode).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bo", "s0_mode", "adder", "interpret"))
+def sc_dot_pallas(x_packed: jax.Array, w_packed: jax.Array, *,
+                  bm: int = 128, bo: int = 128, s0_mode: str = "alt",
+                  adder: str = "tff", interpret: bool = True) -> jax.Array:
+    """Raw pallas_call (operands must already be padded to block multiples
+    and K padded to a power of two).  Use :mod:`repro.kernels.ops` instead.
+    """
+    M, K, Wd = x_packed.shape
+    K2, O, Wd2 = w_packed.shape
+    assert K == K2 and Wd == Wd2 and M % bm == 0 and O % bo == 0
+    assert K & (K - 1) == 0, "K must be padded to a power of two"
+
+    grid = (M // bm, O // bo)
+    return pl.pallas_call(
+        functools.partial(_sc_dot_kernel, s0_mode=s0_mode, adder=adder),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, K, Wd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((K, bo, Wd), lambda i, j: (0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bo), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, O), jnp.int32),
+        interpret=interpret,
+    )(x_packed, w_packed)

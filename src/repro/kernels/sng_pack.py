@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: comparator SNG + bit-packing.
+
+Generates packed stochastic streams from integer levels on-chip, so the
+HBM->VMEM traffic is ``4 bytes/level`` in and ``N/8 bytes/stream`` out with no
+intermediate (N,)-bool materialization in HBM.  The comparator's code
+sequence (ramp / van-der-Corput / reversed-Gray / LFSR) is a small constant
+(N int32 = 1KiB at 8-bit) broadcast to every grid cell.
+
+Per grid cell: levels tile (blk,) int32 and codes (N,) int32 produce a
+(blk, N/32) uint32 tile: bit t of word w = (codes[32w+t] < level).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sng_pack_kernel(lvl_ref, codes_ref, out_ref, *, length: int):
+    lvl = lvl_ref[...]                       # (blk,)
+    codes = codes_ref[...]                   # (length,)
+    nw = length // 32
+    codes2 = codes.reshape(nw, 32)           # (nw, 32)
+    bits = (codes2[None, :, :] < lvl[:, None, None]).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jax.lax.broadcasted_iota(jnp.uint32,
+                                                         (1, 1, 32), 2))
+    out_ref[...] = jnp.sum(bits * weights, axis=-1).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("length", "block", "interpret"))
+def sng_pack_pallas(levels: jax.Array, codes: jax.Array, *, length: int,
+                    block: int = 256, interpret: bool = True) -> jax.Array:
+    """levels: (M,) int32 (M % block == 0); codes: (length,) int32.
+    Returns (M, length//32) uint32 packed streams."""
+    M = levels.shape[0]
+    assert M % block == 0
+    nw = length // 32
+    return pl.pallas_call(
+        functools.partial(_sng_pack_kernel, length=length),
+        grid=(M // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((length,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block, nw), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, nw), jnp.uint32),
+        interpret=interpret,
+    )(levels, codes)

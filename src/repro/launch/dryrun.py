@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: prove every (arch x shape x mesh) lowers AND compiles
+under the production sharding, and extract the roofline inputs.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init); dryrun is the only entry point that forces 512 host
+devices — tests/benchmarks see the real single CPU device.
+
+Per cell we record (benchmarks/results/dryrun/<cell>.json):
+  - compiled.memory_analysis()  — per-device bytes (proves it fits / or not)
+  - compiled.cost_analysis()    — per-device HLO FLOPs + bytes accessed
+  - collective bytes parsed from the post-SPMD optimized HLO, per primitive
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute), with ring-traffic factors and group sizes
+  - MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for the usefulness ratio
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-done]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import hlo_analysis
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.serve import engine
+from repro.train import optim
+from repro.train.step import TrainConfig, make_train_step
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+# TPU v5e hardware constants (roofline targets).
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (training) / 2·N·D (inference) with N = active params."""
+    n_active = lm.active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        return 2.0 * n_active * tokens
+    tokens = shape.batch  # one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def build_cell(arch: str, shape_name: str, mesh, kv_quant: bool = False):
+    """Returns (fn, example_args, in_shardings, out_shardings)."""
+    import dataclasses
+    cfg = configs.config(arch)
+    if kv_quant:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    shape = configs.SHAPES_BY_NAME[shape_name]
+    mesh_shape = shd.mesh_shape_dict(mesh)
+    params_abs, specs = lm.init(None, cfg, mesh_shape, abstract=True)
+    bspec = shd.batch_spec_axis(mesh_shape, shape.batch)
+
+    def nm(tree):
+        return shd.named(mesh, tree)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(microbatches=min(8, shape.batch))
+        step = make_train_step(cfg, tcfg)
+        opt_abs = jax.eval_shape(lambda p: optim.init(p, tcfg.adamw),
+                                 params_abs)
+        opt_specs = shd.opt_state_specs(specs, params_abs, mesh_shape)
+        batch = configs.input_specs(cfg, shape)
+        batch_specs = {k: P(*((bspec,) + (None,) * (len(v.shape) - 1)))
+                       for k, v in batch.items()}
+        from repro.train.step import METRICS_KEYS
+        in_sh = (nm(specs), nm(opt_specs), nm(batch_specs))
+        out_sh = (nm(specs), nm(opt_specs),
+                  nm({k: P() for k in METRICS_KEYS}))
+        return step, (params_abs, opt_abs, batch), in_sh, out_sh
+
+    if shape.kind == "prefill":
+        batch = configs.input_specs(cfg, shape)
+        batch_specs = {k: P(*((bspec,) + (None,) * (len(v.shape) - 1)))
+                       for k, v in batch.items()}
+        cache_sp = engine.cache_specs(cfg, mesh_shape, shape.batch)
+
+        def step(params, b):
+            return engine.prefill(cfg, params, b)
+        in_sh = (nm(specs), nm(batch_specs))
+        out_sh = (nm(cache_sp), NamedSharding(mesh, P(bspec, "model")))
+        return step, (params_abs, batch), in_sh, out_sh
+
+    if shape.kind == "decode":
+        batch, cache = configs.input_specs(cfg, shape)
+        batch_specs = {"tokens": P(bspec, None)}
+        cache_sp = engine.cache_specs(cfg, mesh_shape, shape.batch)
+
+        def step(params, c, b):
+            return engine.decode_step(cfg, params, c, b["tokens"])
+        in_sh = (nm(specs), nm(cache_sp), nm(batch_specs))
+        out_sh = (nm(cache_sp), NamedSharding(mesh, P(bspec, "model")))
+        return step, (params_abs, cache, batch), in_sh, out_sh
+    raise ValueError(shape.kind)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             kv_quant: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    cfg = configs.config(arch)
+    shape = configs.SHAPES_BY_NAME[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "devices": int(n_dev), "params": lm.count_params(cfg),
+           "active_params": lm.active_params(cfg),
+           "model_flops": model_flops(cfg, shape), "kv_quant": kv_quant}
+    t0 = time.time()
+    try:
+        with shd.use_activation_mesh(mesh):
+            fn, args, in_sh, out_sh = build_cell(arch, shape_name, mesh,
+                                                 kv_quant)
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*args)
+        rec["lower_s"] = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t1
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost_xla_raw"] = {               # un-loop-corrected (reference)
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+        txt = compiled.as_text()
+        t2 = time.time()
+        cost = hlo_analysis.analyze(txt)      # loop-corrected walk
+        rec["analyze_s"] = time.time() - t2
+        rec["cost"] = {"flops": cost["flops"], "hbm_bytes": cost["hbm_bytes"]}
+        rec["collectives"] = cost["collectives"]
+        rec["hlo_chars"] = len(txt)
+        coll_traffic = sum(v["traffic_bytes"]
+                           for v in rec["collectives"].values())
+        # roofline terms (seconds) — the HLO module is per-device post-SPMD,
+        # so per-device quantities divide by per-chip peaks directly
+        rec["roofline"] = {
+            "compute_s": cost["flops"] / PEAK_FLOPS,
+            "memory_s": cost["hbm_bytes"] / HBM_BW,
+            "collective_s": coll_traffic / LINK_BW,
+        }
+        rec["useful_flops_ratio"] = (
+            rec["model_flops"] / rec["devices"] / cost["flops"]
+            if cost["flops"] else 0.0)
+        rec["ok"] = True
+        dom = max(rec["roofline"], key=rec["roofline"].get)
+        print(f"OK  {arch} {shape_name} {mesh_kind}: "
+              f"lower {rec['lower_s']:.0f}s compile {rec['compile_s']:.0f}s "
+              f"flops/dev {cost['flops']:.3e} "
+              f"temp {rec['memory']['temp_bytes']/2**30:.2f}GiB "
+              f"dom={dom} useful={rec['useful_flops_ratio']:.2f}")
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"FAIL {arch} {shape_name} {mesh_kind}: {rec['error'][:200]}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=("single", "multi",
+                                                         "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache variant (writes *__kvq.json)")
+    args = ap.parse_args()
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        todo = [(a, s.name, m) for a in configs.ARCHS
+                for s, skip in configs.cells(a) if skip is None
+                for m in meshes]
+    else:
+        assert args.arch and args.shape
+        todo = [(configs.ALIASES.get(args.arch, args.arch), args.shape, m)
+                for m in meshes]
+
+    for arch, shape_name, mesh_kind in todo:
+        suffix = "__kvq" if args.kv_quant else ""
+        out = RESULTS / f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+        if args.skip_done and out.exists() and \
+                json.loads(out.read_text()).get("ok"):
+            print(f"skip {out.name} (done)")
+            continue
+        rec = run_cell(arch, shape_name, mesh_kind, kv_quant=args.kv_quant)
+        out.write_text(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

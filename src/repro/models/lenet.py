@@ -1,0 +1,108 @@
+"""LeNet-5 (Keras-library variant, paper Fig. 3) in pure JAX.
+
+Topology: conv 32@5x5 (SAME) -> maxpool 2x2 -> conv 64@5x5 (SAME) ->
+maxpool 2x2 -> dense 512 -> dropout 0.5 -> dense 10.
+
+The first layer is swappable between three modes (the paper's three designs):
+  "float"  — fp32 conv + ReLU (the pretrained base model)
+  "binary" — k-bit quantized weights + sign activation (Table 3 'Binary')
+  "sc"     — the stochastic-domain layer of §IV (Table 3 'This Work'/'Old SC')
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sc_layer
+from repro.core.sc_layer import SCConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LeNetConfig:
+    image_size: int = 28
+    channels: int = 1
+    conv1_filters: int = 32
+    conv2_filters: int = 64
+    ksize: int = 5
+    dense: int = 512
+    classes: int = 10
+    dropout: float = 0.5
+
+
+def init(key: jax.Array, cfg: LeNetConfig = LeNetConfig()) -> dict[str, Any]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    ks, c1, c2 = cfg.ksize, cfg.conv1_filters, cfg.conv2_filters
+    flat = (cfg.image_size // 4) * (cfg.image_size // 4) * c2
+    he = jax.nn.initializers.he_normal()
+    return {
+        "conv1": {"w": he(k1, (ks, ks, cfg.channels, c1), jnp.float32),
+                  "b": jnp.zeros((c1,))},
+        "conv2": {"w": he(k2, (ks, ks, c1, c2), jnp.float32),
+                  "b": jnp.zeros((c2,))},
+        "dense1": {"w": he(k3, (flat, cfg.dense), jnp.float32),
+                   "b": jnp.zeros((cfg.dense,))},
+        "dense2": {"w": he(k4, (cfg.dense, cfg.classes), jnp.float32),
+                   "b": jnp.zeros((cfg.classes,))},
+    }
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def first_layer(params, x, mode: str = "float", sc_cfg: SCConfig | None = None,
+                bits: int = 8, soft_threshold: float = 0.0,
+                sc_impl: str = "table") -> jax.Array:
+    """First-layer feature maps (B, 28, 28, conv1_filters).
+
+    x: (B, H, W, C) in [0, 1] (8-bit sensor data scaled).
+    The quantized/stochastic modes have no bias term — the activation is
+    ``sign(x ∘ w)`` exactly as in the paper's Fig. 3 engine.
+    """
+    w = params["conv1"]["w"]
+    if mode == "float":
+        return jax.nn.relu(_conv(x, w, params["conv1"]["b"]))
+    if mode == "binary":
+        return sc_layer.binary_conv2d_sign(x, w, bits, soft_threshold)
+    if mode == "sc":
+        assert sc_cfg is not None
+        return sc_layer.sc_conv2d_sign(x, w, sc_cfg, impl=sc_impl)
+    raise ValueError(f"unknown first-layer mode {mode}")
+
+
+def tail(params, h1, cfg: LeNetConfig = LeNetConfig(), *,
+         train: bool = False, dropout_key: jax.Array | None = None) -> jax.Array:
+    """Everything after the first layer — the binary-domain remainder that the
+    paper retrains.  h1: (B, 28, 28, conv1_filters)."""
+    h = _maxpool(h1)
+    h = jax.nn.relu(_conv(h, params["conv2"]["w"], params["conv2"]["b"]))
+    h = _maxpool(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["dense1"]["w"] + params["dense1"]["b"])
+    if train and cfg.dropout > 0:
+        keep = 1.0 - cfg.dropout
+        mask = jax.random.bernoulli(dropout_key, keep, h.shape)
+        h = jnp.where(mask, h / keep, 0.0)
+    return h @ params["dense2"]["w"] + params["dense2"]["b"]
+
+
+def apply(params, x, cfg: LeNetConfig = LeNetConfig(), *, mode: str = "float",
+          sc_cfg: SCConfig | None = None, bits: int = 8,
+          soft_threshold: float = 0.0, train: bool = False,
+          dropout_key: jax.Array | None = None, sc_impl: str = "table"
+          ) -> jax.Array:
+    h1 = first_layer(params, x, mode, sc_cfg, bits, soft_threshold, sc_impl)
+    if mode != "float":
+        h1 = jax.lax.stop_gradient(h1)   # frozen stochastic/quantized front
+    return tail(params, h1, cfg, train=train, dropout_key=dropout_key)

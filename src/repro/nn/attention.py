@@ -1,0 +1,357 @@
+"""Attention: GQA / MHA / cross, memory-efficient chunked ("flash-style in
+XLA") for train/prefill and masked single-shot for decode.
+
+The chunked path is a double ``lax.scan`` (query chunks x KV chunks) with an
+online-softmax accumulator, so peak memory is O(q_chunk x kv_chunk) scores
+per head instead of O(S^2); XLA keeps the HLO compact (one scan body), which
+matters for the 126-layer dry-run compiles.  Scores/softmax accumulate in f32.
+
+Sliding-window masks reuse the same body (mask-only; no dynamic skipping —
+shapes stay static for SPMD).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import hint
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k, n_rep: int):
+    """(B, S, Hkv, D) -> (B, S, Hkv*n_rep, D) by broadcast (GQA)."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d))
+    return k.reshape(b, s, h * n_rep, d)
+
+
+def _static_zero(window) -> bool:
+    return isinstance(window, int) and window == 0
+
+
+def _mask(q_pos, k_pos, causal: bool, window):
+    """(Sq, Sk) bool validity mask from absolute positions.
+
+    ``window`` may be a traced scalar (per-layer global/sliding selection
+    inside a layer scan encodes "global" as a huge window); a static 0 means
+    no windowing at all.
+    """
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), jnp.bool_)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if not _static_zero(window):
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+def attend_chunked(q, k, v, *, causal: bool = True, window: int = 0,
+                   q_offset: int = 0, q_chunk: int = 512, kv_chunk: int = 1024,
+                   ) -> jax.Array:
+    """q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D).  Returns (B, Sq, Hq, D).
+
+    Flash-attention-style: online softmax forward, and a custom VJP that
+    RECOMPUTES probabilities in the backward instead of letting autodiff
+    store every (q_chunk x kv_chunk) probability tile as a scan residual —
+    the O(S^2) f32 residual traffic was the dominant HBM term in the
+    baseline dry-run (see EXPERIMENTS.md §Perf iteration 1).
+
+    ``q_offset``: absolute position of q[0] relative to k[0] (chunked prefill
+    against an existing cache uses q_offset > 0).  ``window`` may be traced
+    (per-layer sliding/global selection); it participates as an array arg.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    n_rep = Hq // Hkv
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Sk)
+    nq, nk = -(-Sq // qc), -(-Sk // kc)
+    # pad to chunk multiples (masked out via positions)
+    q = jnp.pad(q, ((0, 0), (0, nq * qc - Sq), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, nk * kc - Sk), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, nk * kc - Sk), (0, 0), (0, 0)))
+
+    q = hint(q, "batch", None, "model", None)
+    k = hint(k, "batch", None, "model", None)
+    v = hint(v, "batch", None, "model", None)
+    q = q.reshape(B, nq, qc, Hq, D).transpose(1, 0, 3, 2, 4)   # (nq,B,H,qc,D)
+    k = k.reshape(B, nk, kc, Hq, D).transpose(1, 0, 3, 2, 4)
+    v = v.reshape(B, nk, kc, Hq, D).transpose(1, 0, 3, 2, 4)
+    q = hint(q, None, "batch", "model", None, None)
+    k = hint(k, None, "batch", "model", None, None)
+    v = hint(v, None, "batch", "model", None, None)
+
+    # window / offsets as f32 scalars so custom_vjp cotangents are trivial
+    warr = jnp.asarray(window if not _static_zero(window) else (1 << 30),
+                       jnp.float32)
+    outs = _flash(q, k, v, warr, jnp.float32(q_offset), jnp.float32(Sk),
+                  causal, qc, kc)
+    outs = hint(outs, None, "batch", "model", None, None)
+    outs = outs.transpose(1, 0, 3, 2, 4).reshape(B, nq * qc, Hq, D)
+    return hint(outs[:, :Sq].astype(v.dtype), "batch", None, "model", None)
+
+
+def _tile_mask(q_pos, k_pos, causal, window, sk):
+    """q_pos/k_pos: f32 position vectors; window/sk: f32 scalars."""
+    m = k_pos[None, :] < sk
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def _flash(q, k, v, window, q_offset, sk, causal, qc, kc):
+    out, _ = _flash_fwd_impl(q, k, v, window, q_offset, sk, causal, qc, kc)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, window, q_offset, sk, causal, qc, kc):
+    """q: (nq,B,H,qc,D); k,v: (nk,B,H,kc,D) -> out (nq,B,H,qc,D), lse."""
+    nq, B, H, _, D = q.shape
+    nk = k.shape[0]
+    scale = D ** -0.5
+
+    def q_body(_, q_i_and_idx):
+        q_i, iq = q_i_and_idx
+        q_pos = q_offset + (iq * qc + jnp.arange(qc)).astype(jnp.float32)
+
+        def kv_body(carry, k_j_v_j_idx):
+            m_prev, l_prev, acc = carry
+            k_j, v_j, jk = k_j_v_j_idx
+            k_pos = (jk * kc + jnp.arange(kc)).astype(jnp.float32)
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _tile_mask(q_pos, k_pos, causal, window, sk)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(v_j.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, H, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, qc), jnp.float32)
+        a0 = jnp.zeros((B, H, qc, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0), (k, v, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out.astype(v.dtype), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_body, None, (q, jnp.arange(nq)))
+    return outs, lses
+
+
+def _flash_fwd(q, k, v, window, q_offset, sk, causal, qc, kc):
+    out, lse = _flash_fwd_impl(q, k, v, window, q_offset, sk, causal, qc, kc)
+    return out, (q, k, v, out, lse, window, q_offset, sk)
+
+
+def _flash_bwd(causal, qc, kc, res, g):
+    """FA2 backward: recompute p tiles from (q, k, lse); never store S^2."""
+    q, k, v, out, lse, window, q_offset, sk = res
+    nq, B, H, _, D = q.shape
+    nk = k.shape[0]
+    scale = D ** -0.5
+    g = g.astype(jnp.float32)
+    # delta_i = rowsum(dout * out)
+    delta = jnp.sum(g * out.astype(jnp.float32), axis=-1)   # (nq,B,H,qc)
+
+    def kv_body(dq_acc, kv_idx):
+        k_j, v_j, jk = kv_idx
+        k_pos = (jk * kc + jnp.arange(kc)).astype(jnp.float32)
+
+        def q_body(carry, q_idx):
+            dk_j, dv_j = carry
+            q_i, g_i, lse_i, delta_i, iq = q_idx
+            q_pos = q_offset + (iq * qc + jnp.arange(qc)).astype(jnp.float32)
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _tile_mask(q_pos, k_pos, causal, window, sk)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            p = jnp.exp(s - lse_i[..., None])                # (B,H,qc,kc)
+            dv_j = dv_j + jnp.einsum("bhqk,bhqd->bhkd",
+                                     p.astype(g_i.dtype), g_i,
+                                     preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bhqd,bhkd->bhqk", g_i,
+                            v_j.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - delta_i[..., None]) * scale       # (B,H,qc,kc)
+            dsl = ds.astype(k_j.dtype)
+            dq_i = jnp.einsum("bhqk,bhkd->bhqd", dsl, k_j,
+                              preferred_element_type=jnp.float32)
+            dk_j = dk_j + jnp.einsum("bhqk,bhqd->bhkd", dsl,
+                                     q_i.astype(k_j.dtype),
+                                     preferred_element_type=jnp.float32)
+            return (dk_j, dv_j), dq_i
+
+        zeros = jnp.zeros((B, H, kc, D), jnp.float32)
+        (dk_j, dv_j), dq_inc = jax.lax.scan(
+            q_body, (zeros, zeros),
+            (q, g, lse, delta, jnp.arange(nq)))
+        return dq_acc + dq_inc, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((nq, B, H, q.shape[3], D), jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(kv_body, dq0, (k, v, jnp.arange(nk)))
+    zero = jnp.zeros((), jnp.float32)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            zero, zero, zero)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attend_sliding(q, k, v, *, window: int, q_offset: int = 0,
+                   q_chunk: int = 512) -> jax.Array:
+    """Sliding-window attention with true KV skipping (static ``window``).
+
+    Each q chunk attends only to the ``window + q_chunk`` keys it can see —
+    FLOPs and traffic are O(S·window) instead of O(S^2) (the §Perf
+    iteration-2 fix for sliding-window layers; a 21x FLOP cut at 32k/1024).
+    q: (B, S, Hq, D); k, v: (B, S, Hkv, D) — self-attention layout.
+    """
+    B, S, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    k = _repeat_kv(k, Hq // Hkv)
+    v = _repeat_kv(v, Hq // Hkv)
+    qc = min(q_chunk, S)
+    nq = -(-S // qc)
+    L = window + qc                      # static slice length per q chunk
+    qp = jnp.pad(q, ((0, 0), (0, nq * qc - S), (0, 0), (0, 0)))
+    # front-pad keys by `window` so slice starts are always in range
+    kp = jnp.pad(k, ((0, 0), (window, nq * qc - Sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, nq * qc - Sk), (0, 0), (0, 0)))
+    qp = hint(qp, "batch", None, "model", None)
+    kp = hint(kp, "batch", None, "model", None)
+    vp = hint(vp, "batch", None, "model", None)
+    q5 = qp.reshape(B, nq, qc, Hq, D).transpose(1, 0, 3, 2, 4)  # (nq,B,H,qc,D)
+    out = _sliding(q5, kp.transpose(0, 2, 1, 3), vp.transpose(0, 2, 1, 3),
+                   jnp.float32(q_offset), jnp.float32(Sk), window, qc)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(B, nq * qc, Hq, D)
+    return out[:, :S].astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _sliding(q5, kt, vt, q_offset, sk, window, qc):
+    return _sliding_fwd_impl(q5, kt, vt, q_offset, sk, window, qc)[0]
+
+
+def _sliding_tile(q_i, k_i, iq, q_offset, sk, window, qc):
+    """One q chunk vs its (window+qc) key slice.  Returns (s, mask)."""
+    D = q_i.shape[-1]
+    L = window + qc
+    q_pos = q_offset + (iq * qc + jnp.arange(qc)).astype(jnp.float32)
+    k_pos = q_offset + (iq * qc - window + jnp.arange(L)).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q_i, k_i,
+                   preferred_element_type=jnp.float32) * (D ** -0.5)
+    mask = (k_pos[None, :] >= q_offset) & (k_pos[None, :] < q_offset + sk)
+    mask &= q_pos[:, None] >= k_pos[None, :]
+    mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    return jnp.where(mask[None, None], s, NEG_INF)
+
+
+def _sliding_fwd_impl(q5, kt, vt, q_offset, sk, window, qc):
+    """q5: (nq,B,H,qc,D); kt, vt: (B,H,window+nq*qc,D)."""
+    nq, B, H, _, D = q5.shape
+    L = window + qc
+
+    def body(_, q_idx):
+        q_i, iq = q_idx
+        k_i = jax.lax.dynamic_slice_in_dim(kt, iq * qc, L, axis=2)
+        v_i = jax.lax.dynamic_slice_in_dim(vt, iq * qc, L, axis=2)
+        s = _sliding_tile(q_i, k_i, iq, q_offset, sk, window, qc)
+        m = jnp.max(s, axis=-1)
+        p = jnp.exp(s - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v_i.dtype), v_i,
+                       preferred_element_type=jnp.float32)
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        return None, (o.astype(vt.dtype), m + jnp.log(jnp.maximum(l, 1e-30)))
+
+    _, (outs, lses) = jax.lax.scan(body, None, (q5, jnp.arange(nq)))
+    return outs, lses
+
+
+def _sliding_fwd(q5, kt, vt, q_offset, sk, window, qc):
+    outs, lses = _sliding_fwd_impl(q5, kt, vt, q_offset, sk, window, qc)
+    return outs, (q5, kt, vt, outs, lses, q_offset, sk)
+
+
+def _sliding_bwd(window, qc, res, g):
+    q5, kt, vt, outs, lses, q_offset, sk = res
+    nq, B, H, _, D = q5.shape
+    L = window + qc
+    g = g.astype(jnp.float32)
+    delta = jnp.sum(g * outs.astype(jnp.float32), axis=-1)
+
+    def body(carry, q_idx):
+        dk_acc, dv_acc = carry
+        q_i, g_i, lse_i, delta_i, iq = q_idx
+        k_i = jax.lax.dynamic_slice_in_dim(kt, iq * qc, L, axis=2)
+        v_i = jax.lax.dynamic_slice_in_dim(vt, iq * qc, L, axis=2)
+        s = _sliding_tile(q_i, k_i, iq, q_offset, sk, window, qc)
+        p = jnp.exp(s - lse_i[..., None])
+        dv_i = jnp.einsum("bhqk,bhqd->bhkd", p.astype(g_i.dtype), g_i,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", g_i, v_i.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_i[..., None]) * (D ** -0.5)
+        dsl = ds.astype(kt.dtype)
+        dq_i = jnp.einsum("bhqk,bhkd->bhqd", dsl, k_i,
+                          preferred_element_type=jnp.float32)
+        dk_i = jnp.einsum("bhqk,bhqd->bhkd", dsl, q_i.astype(kt.dtype),
+                          preferred_element_type=jnp.float32)
+        upd = jax.lax.dynamic_slice_in_dim(dk_acc, iq * qc, L, axis=2) + dk_i
+        dk_acc = jax.lax.dynamic_update_slice_in_dim(dk_acc, upd, iq * qc,
+                                                     axis=2)
+        updv = jax.lax.dynamic_slice_in_dim(dv_acc, iq * qc, L, axis=2) + dv_i
+        dv_acc = jax.lax.dynamic_update_slice_in_dim(dv_acc, updv, iq * qc,
+                                                     axis=2)
+        return (dk_acc, dv_acc), dq_i
+
+    zk = jnp.zeros(kt.shape, jnp.float32)
+    (dk, dv), dq = jax.lax.scan(
+        body, (zk, zk), (q5, g, lses, delta, jnp.arange(nq)))
+    zero = jnp.zeros((), jnp.float32)
+    return (dq.astype(q5.dtype), dk.astype(kt.dtype), dv.astype(vt.dtype),
+            zero, zero)
+
+
+_sliding.defvjp(_sliding_fwd, _sliding_bwd)
+
+
+def attend_decode(q, k_cache, v_cache, cache_len, *, window=0) -> jax.Array:
+    """One-token decode attention against a cache.
+
+    q: (B, 1, Hq, D); k_cache, v_cache: (B, Smax, Hkv, D);
+    cache_len: scalar int32 — number of valid cache positions (the new token's
+    K/V must already be written at cache_len - 1).
+    """
+    B, _, Hq, D = q.shape
+    _, Smax, Hkv, _ = k_cache.shape
+    n_rep = Hq // Hkv
+    scale = D ** -0.5
+    qh = q[:, 0].reshape(B, Hkv, n_rep, D)
+    qh = hint(qh, "batch", "model", None, None)
+    s = jnp.einsum("bhrd,bshd->bhrs", qh, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(Smax)
+    valid = pos[None, None, None, :] < cache_len
+    if not _static_zero(window):
+        valid &= pos[None, None, None, :] >= (cache_len - window)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhrs,bshd->bhrd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, D).astype(v_cache.dtype)

@@ -1,0 +1,24 @@
+"""Dense feed-forward blocks: SwiGLU (llama-family) and GELU (whisper/GPT)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import hint
+
+
+def _hint_ff(h):
+    return hint(h, *(["batch"] + [None] * (h.ndim - 2) + ["model"]))
+
+
+def swiglu(x, w_gate, w_in, w_out):
+    g = _hint_ff(jnp.einsum("...d,df->...f", x, w_gate))
+    h = _hint_ff(jnp.einsum("...d,df->...f", x, w_in))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g.astype(jnp.float32)
+                                                   ).astype(h.dtype) * h, w_out)
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    h = _hint_ff(jnp.einsum("...d,df->...f", x, w_in) + b_in)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, w_out) + b_out

@@ -1,0 +1,20 @@
+"""Rotary position embeddings."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(d_head: int, theta: float):
+    return theta ** (-jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                     # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,146 @@
+"""Recurrent sequence mixers: RWKV6 (Finch) time-mix / channel-mix and a
+Mamba-style selective SSM (for Hymba's parallel attn+SSM heads).
+
+Both use chunked formulations for training (O(S) memory, parallel within
+chunk) and O(1)-state recurrent steps for decode — this is what makes the
+``long_500k`` cells feasible where full attention is quadratic-infeasible.
+
+RWKV6 recurrence (per head, k-dim d, v-dim d):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (w_t in (0,1), data-dependent)
+    o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+Chunked: with b_j = sum_{i<=j} log w_i (monotone decreasing within a chunk),
+all decay factors appear as exp(b_i - b_j) <= 1 for j <= i, so the intra-chunk
+score tensor is computed stably in f32 from pairwise differences.  Chunk size
+is kept small (16) because the pairwise-difference tensor is (C, C, d).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import hint
+
+
+# --------------------------------------------------------------------------
+# RWKV6 time-mix core (wkv) — chunked scan + recurrent step.
+# --------------------------------------------------------------------------
+
+def wkv6_chunked(r, k, v, w, u, chunk: int = 16, state0=None):
+    """r,k,v,w: (B, S, H, D); u: (H, D).  Returns (B, S, H, D), final state.
+
+    w is the per-step decay in (0,1).  S must be a multiple of ``chunk``.
+    ``state0``: optional initial (B, H, D, D) f32 state (cache continuation).
+    """
+    B, S, H, D = r.shape
+    assert S % chunk == 0
+    nc = S // chunk
+    f32 = jnp.float32
+
+    def prep(t):
+        # keep the stacked xs in the compute dtype (bf16) — the f32 upcast
+        # happens per-chunk inside the body where it fuses (halves the
+        # stacked-input HBM traffic; §Perf iteration 3)
+        t = t.reshape(B, nc, chunk, H, D).transpose(1, 0, 3, 2, 4)
+        return hint(t, None, "batch", "model", None, None)
+
+    rr, kk, vv = prep(r), prep(k), prep(v)
+    lw = prep(jnp.log(jnp.clip(w.astype(f32), 1e-8, 1.0)).astype(r.dtype))
+    uu = u.astype(f32)
+
+    def body(S0, xs):
+        rc, kc, vc, lwc = (t.astype(f32) for t in xs)   # (B, H, C, D)
+        b = jnp.cumsum(lwc, axis=2)                # inclusive log-decay
+        b_excl = b - lwc                           # decay before step i
+        # inter-chunk: o_i += (r_i ⊙ exp(b_excl_i)) @ S0
+        r_dec = rc * jnp.exp(b_excl)
+        o = jnp.einsum("bhcd,bhde->bhce", r_dec, S0)
+        # intra-chunk (j < i): scores_ij = sum_d r_id k_jd exp(b_excl_i - b_j)
+        diff = b_excl[:, :, :, None, :] - b[:, :, None, :, :]   # (B,H,C,C,D)
+        strict = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+        diff = jnp.where(strict[None, None, :, :, None], diff, -jnp.inf)
+        scores = jnp.einsum("bhcd,bhjd,bhcjd->bhcj", rc, kc,
+                            jnp.exp(diff))
+        o = o + jnp.einsum("bhcj,bhjd->bhcd", scores, vc)
+        # current-token bonus: r_i · diag(u) k_i v_i^T
+        bonus = jnp.einsum("bhcd,hd,bhcd->bhc", rc, uu, kc)
+        o = o + bonus[..., None] * vc
+        # state update: S1 = diag(exp(b_C)) S0 + sum_j exp(b_C - b_j) k_j v_j^T
+        wC = jnp.exp(b[:, :, -1:, :])              # (B,H,1,D)
+        k_scaled = kc * jnp.exp(b[:, :, -1:, :] - b)
+        S1 = wC[:, :, 0, :, None] * S0 + jnp.einsum("bhjd,bhje->bhde",
+                                                    k_scaled, vc)
+        return S1, o
+
+    S0 = jnp.zeros((B, H, D, D), f32) if state0 is None else state0.astype(f32)
+    Sf, outs = jax.lax.scan(body, S0, (rr, kk, vv, lw))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, D)
+    return out.astype(r.dtype), Sf
+
+
+def wkv6_step(r1, k1, v1, w1, u, state):
+    """Single decode step.  r1..w1: (B, H, D); state: (B, H, D, D) f32.
+    Returns (out (B,H,D), new_state)."""
+    f32 = jnp.float32
+    r1, k1, v1, w1 = (x.astype(f32) for x in (r1, k1, v1, w1))
+    kv = k1[..., :, None] * v1[..., None, :]              # (B,H,D,D)
+    out = jnp.einsum("bhd,bhde->bhe", r1, state + u.astype(f32)[..., None] * kv)
+    new_state = w1[..., None] * state + kv
+    return out, new_state
+
+
+# --------------------------------------------------------------------------
+# Mamba-style selective SSM (diagonal state, data-dependent dt/B/C).
+# --------------------------------------------------------------------------
+
+def selective_scan(x, dt, A_log, Bm, Cm, D_skip, chunk: int = 32):
+    """x, dt: (B, S, d);  A_log: (d, N);  Bm, Cm: (B, S, N);  D_skip: (d,).
+
+    h_t = exp(dt_t ⊙ A) h_{t-1} + (dt_t x_t) B_t;  y_t = (h_t C_t) + D x_t.
+    Chunked: outer scan over S/chunk carries h (B, d, N); inner associative
+    scan parallelizes within the chunk.  Returns (y (B,S,d), final h).
+    """
+    B, S, d = x.shape
+    N = A_log.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+    f32 = jnp.float32
+    A = -jnp.exp(A_log.astype(f32))                            # (d, N) negative
+    # stacked xs stay in compute dtype; f32 upcast fuses inside the body
+    xr = x.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    dtr = dt.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    Br = Bm.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+    Cr = Cm.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+    xr = hint(xr, None, "batch", None, "model")
+    dtr = hint(dtr, None, "batch", None, "model")
+
+    def body(h0, xs):
+        xc, dtc, bc, cc = (t.astype(f32) for t in xs)          # (B, C, ...)
+        a = jnp.exp(dtc[..., None] * A)                        # (B,C,d,N)
+        u = (dtc * xc)[..., None] * bc[:, :, None, :]          # (B,C,d,N)
+
+        def combine(e1, e2):
+            a1, u1 = e1
+            a2, u2 = e2
+            return a1 * a2, u1 * a2 + u2
+
+        a_sc, u_sc = jax.lax.associative_scan(combine, (a, u), axis=1)
+        h = a_sc * h0[:, None] + u_sc                          # (B,C,d,N)
+        y = jnp.einsum("bcdn,bcn->bcd", h, cc) + D_skip.astype(f32) * xc
+        return h[:, -1], y
+
+    h0 = jnp.zeros((B, d, N), f32)
+    hf, ys = jax.lax.scan(body, h0, (xr, dtr, Br, Cr))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, d)
+    return y.astype(x.dtype), hf
+
+
+def selective_step(x1, dt1, A_log, B1, C1, D_skip, h):
+    """One decode step.  x1, dt1: (B, d); B1, C1: (B, N); h: (B, d, N) f32."""
+    f32 = jnp.float32
+    A = -jnp.exp(A_log.astype(f32))
+    a = jnp.exp(dt1.astype(f32)[..., None] * A)
+    u = (dt1.astype(f32) * x1.astype(f32))[..., None] * B1.astype(f32)[:, None, :]
+    h_new = a * h + u
+    y = jnp.einsum("bdn,bn->bd", h_new, C1.astype(f32)) \
+        + D_skip.astype(f32) * x1.astype(f32)
+    return y.astype(x1.dtype), h_new

@@ -1,0 +1,519 @@
+"""Serving: batched prefill + single-token decode with family-specific caches.
+
+Cache layouts (leading axis = layers, consumed/produced by lax.scan):
+  attention : k/v (L, B, Smax, Hkv, Dh) + scalar "len"
+  rwkv      : wkv state (L, B, H, Dh, Dh) f32 + token-shift states (L, B, d)
+  hybrid    : k/v + mamba conv state (L, B, K-1, di) + ssm state (L, B, di, N)
+  encdec/vlm: self k/v + precomputed cross K/V from encoder/vision tokens
+
+KV cache sharding (``cache_specs``): batch over the DP axes; KV heads over
+"model" when divisible, otherwise the *sequence* axis shards over "model"
+(split-KV decode — softmax renormalization turns into an all-reduce, which
+XLA inserts automatically).  That is how llama-405B's 8 KV heads decode on a
+16-wide TP axis without replicating a terabyte of cache.
+
+The decode step is O(1)-state for rwkv/hybrid-SSM paths — the reason the
+long_500k cells are only assigned to those families.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import (axis_if_divisible, batch_spec_axis)
+from repro.models import lm
+from repro.models.lm import (LMConfig, _attn_apply, _causal_conv, _maybe_remat,
+                             _mlp_apply, _norm_apply, _proj, _sinusoidal,
+                             _token_shift, layer_window)
+from repro.nn import attention, rope, ssm
+from repro.serve import kvquant
+
+
+# ==========================================================================
+# Cache construction (+ specs).
+# ==========================================================================
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, abstract: bool = False,
+               extras: dict | None = None):
+    """Abstract mode returns ShapeDtypeStructs (dry-run decode inputs)."""
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else \
+         (lambda s, d: jnp.zeros(s, d))
+    L, B = cfg.n_layers, batch
+    Hkv, Dh, d = cfg.n_kv_heads, cfg.d_head, cfg.d_model
+    fam = cfg.family
+    kv_dtype = jnp.int8 if cfg.kv_quant else cfg.dtype
+    cache: dict = {"len": mk((), jnp.int32)}
+    if fam in ("decoder", "moe", "hybrid"):
+        cache["k"] = mk((L, B, max_len, Hkv, Dh), kv_dtype)
+        cache["v"] = mk((L, B, max_len, Hkv, Dh), kv_dtype)
+        if cfg.kv_quant:
+            cache["k_scale"] = mk((L, B, max_len, Hkv, 1), jnp.float32)
+            cache["v_scale"] = mk((L, B, max_len, Hkv, 1), jnp.float32)
+        if fam == "hybrid":
+            cache["conv"] = mk((L, B, cfg.conv_k - 1, cfg.inner), cfg.dtype)
+            cache["ssm"] = mk((L, B, cfg.inner, cfg.ssm_state), jnp.float32)
+    elif fam == "rwkv":
+        cache["wkv"] = mk((L, B, cfg.n_heads, Dh, Dh), jnp.float32)
+        cache["shift1"] = mk((L, B, d), cfg.dtype)
+        cache["shift2"] = mk((L, B, d), cfg.dtype)
+    elif fam == "encdec":
+        cache["k"] = mk((L, B, max_len, Hkv, Dh), cfg.dtype)
+        cache["v"] = mk((L, B, max_len, Hkv, Dh), cfg.dtype)
+        cache["xk"] = mk((L, B, cfg.enc_len, Hkv, Dh), cfg.dtype)
+        cache["xv"] = mk((L, B, cfg.enc_len, Hkv, Dh), cfg.dtype)
+    elif fam == "vlm":
+        k = cfg.cross_every
+        G = cfg.n_layers // k
+        cache["k"] = mk((G, k - 1, B, max_len, Hkv, Dh), cfg.dtype)
+        cache["v"] = mk((G, k - 1, B, max_len, Hkv, Dh), cfg.dtype)
+        cache["kx_self"] = mk((G, B, max_len, Hkv, Dh), cfg.dtype)
+        cache["vx_self"] = mk((G, B, max_len, Hkv, Dh), cfg.dtype)
+        cache["xk"] = mk((G, B, cfg.n_vision_tokens, Hkv, Dh), cfg.dtype)
+        cache["xv"] = mk((G, B, cfg.n_vision_tokens, Hkv, Dh), cfg.dtype)
+    else:
+        raise ValueError(fam)
+    return cache
+
+
+def cache_specs(cfg: LMConfig, mesh_shape: dict[str, int], batch: int):
+    """PartitionSpec tree matching init_cache."""
+    b = batch_spec_axis(mesh_shape, batch)
+    kv_heads = axis_if_divisible("model", cfg.n_kv_heads, mesh_shape)
+    seq = None if kv_heads else "model"      # split-KV fallback
+    fam = cfg.family
+    specs: dict = {"len": P()}
+    kv = P(None, b, seq, kv_heads, None)
+    if fam in ("decoder", "moe", "hybrid"):
+        specs["k"] = kv
+        specs["v"] = kv
+        if cfg.kv_quant:
+            specs["k_scale"] = kv
+            specs["v_scale"] = kv
+        if fam == "hybrid":
+            di = axis_if_divisible("model", cfg.inner, mesh_shape)
+            specs["conv"] = P(None, b, None, di)
+            specs["ssm"] = P(None, b, di, None)
+    elif fam == "rwkv":
+        h = axis_if_divisible("model", cfg.n_heads, mesh_shape)
+        specs["wkv"] = P(None, b, h, None, None)
+        specs["shift1"] = P(None, b, None)
+        specs["shift2"] = P(None, b, None)
+    elif fam == "encdec":
+        specs.update(k=kv, v=kv, xk=kv, xv=kv)
+    elif fam == "vlm":
+        kv5 = P(None, None, b, seq, kv_heads, None)
+        kv4 = P(None, b, seq, kv_heads, None)
+        specs.update(k=kv5, v=kv5, kx_self=kv4, vx_self=kv4, xk=kv4, xv=kv4)
+    return specs
+
+
+# ==========================================================================
+# Prefill.
+# ==========================================================================
+
+def prefill(cfg: LMConfig, params, batch):
+    """Process a full prompt; returns (cache, last-token logits).
+
+    batch: {"tokens": (B, S)} + family extras (enc_embed / vision_embed).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = lm.embed_tokens(cfg, params, tokens)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    fam = cfg.family
+    cache = {"len": jnp.int32(S)}
+
+    if fam in ("decoder", "moe"):
+        if fam == "moe":
+            p0 = jax.tree.map(lambda a: a[0], params["dense0"])
+            x, kv0, _ = lm.decoder_block(cfg, p0, x, positions)
+
+        def body(lp, x, idx):
+            x, kv, _ = lm.decoder_block(cfg, lp, x, positions,
+                                        window=layer_window(cfg, idx),
+                                        moe_layer=(fam == "moe"))
+            return x, kv
+        L = cfg.n_layers - (1 if fam == "moe" else 0)
+        x, kvs = lm._stack_scan(cfg, params["blocks"], body, x,
+                                jnp.arange(L, dtype=jnp.int32))
+        k, v = kvs
+        if fam == "moe":
+            k = jnp.concatenate([kv0[0][None], k], 0)
+            v = jnp.concatenate([kv0[1][None], v], 0)
+        cache["k"], cache["v"] = k, v
+
+    elif fam == "rwkv":
+        def body(lp, x, _):
+            st = {"wkv": jnp.zeros((B, cfg.n_heads, cfg.d_head, cfg.d_head),
+                                   jnp.float32),
+                  "shift1": jnp.zeros((B, cfg.d_model), x.dtype),
+                  "shift2": jnp.zeros((B, cfg.d_model), x.dtype)}
+            x, st = lm.rwkv_block(cfg, lp, x, st)
+            return x, st
+        x, states = lm._stack_scan(cfg, params["blocks"], body, x)
+        cache.update(states)
+
+    elif fam == "hybrid":
+        def fresh_state():
+            return {"conv": jnp.zeros((B, cfg.conv_k - 1, cfg.inner),
+                                      x.dtype),
+                    "ssm": jnp.zeros((B, cfg.inner, cfg.ssm_state),
+                                     jnp.float32)}
+
+        if lm.hybrid_grouped(cfg):
+            G, ge = cfg.n_layers // cfg.global_every, cfg.global_every
+            grouped = jax.tree.map(
+                lambda a: a.reshape((G, ge) + a.shape[1:]), params["blocks"])
+
+            def group_body(gp, x, _):
+                g0 = jax.tree.map(lambda a: a[0], gp)
+                rest = jax.tree.map(lambda a: a[1:], gp)
+                x, kv0, st0 = lm.hymba_block(cfg, g0, x, positions,
+                                             fresh_state(), window=0)
+
+                def inner(lp, x, __):
+                    x, kv, st = lm.hymba_block(cfg, lp, x, positions,
+                                               fresh_state(),
+                                               window=cfg.window)
+                    return x, (kv, st)
+                x, (kvs, sts) = lm._stack_scan(cfg, rest, inner, x)
+                # interleave group-local outputs back to layer order
+                kv_all = jax.tree.map(
+                    lambda a0, a: jnp.concatenate([a0[None], a], 0),
+                    kv0, kvs)
+                st_all = jax.tree.map(
+                    lambda a0, a: jnp.concatenate([a0[None], a], 0),
+                    st0, sts)
+                return x, (kv_all, st_all)
+
+            def outer(carry, gp):
+                return lm._maybe_remat(cfg, group_body)(gp, carry, None)
+            x, (kvs, states) = jax.lax.scan(outer, x, grouped)
+            kvs = jax.tree.map(
+                lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), kvs)
+            states = jax.tree.map(
+                lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), states)
+        else:
+            def body(lp, x, idx):
+                x, kv, st = lm.hymba_block(cfg, lp, x, positions,
+                                           fresh_state(),
+                                           window=layer_window(cfg, idx))
+                return x, (kv, st)
+            x, (kvs, states) = lm._stack_scan(
+                cfg, params["blocks"], body, x,
+                jnp.arange(cfg.n_layers, dtype=jnp.int32))
+        cache["k"], cache["v"] = kvs
+        cache.update(states)
+
+    elif fam == "encdec":
+        enc = batch["enc_embed"].astype(x.dtype)
+        enc = enc + _sinusoidal(enc.shape[1], cfg.d_model).astype(enc.dtype)
+        enc_pos = jnp.broadcast_to(jnp.arange(enc.shape[1]), (B, enc.shape[1]))
+
+        def enc_body(lp, h, _):
+            h, _, _ = lm.decoder_block(cfg, lp, h, enc_pos, causal=False)
+            return h, jnp.float32(0.0)
+        enc, _ = lm._stack_scan(cfg, params["enc_blocks"], enc_body, enc)
+        enc = _norm_apply(cfg, params["enc_norm"], enc)
+
+        def dec_body(lp, x, _):
+            kx = _proj(enc, lp["xattn"]["wk"]).reshape(
+                B, -1, cfg.n_kv_heads, cfg.d_head)
+            vx = _proj(enc, lp["xattn"]["wv"], lp["xattn"].get("bv")).reshape(
+                B, -1, cfg.n_kv_heads, cfg.d_head)
+            x, kv = lm.cross_block(cfg, lp, x, positions, (kx, vx))
+            return x, (kv, (kx, vx))
+        x, (kvs, xkvs) = lm._stack_scan(cfg, params["dec_blocks"], dec_body, x)
+        cache["k"], cache["v"] = kvs
+        cache["xk"], cache["xv"] = xkvs
+
+    elif fam == "vlm":
+        vis = batch["vision_embed"].astype(x.dtype)
+        k_ = cfg.cross_every
+        G = cfg.n_layers // k_
+        self_pp = jax.tree.map(
+            lambda a: a.reshape((G, k_ - 1) + a.shape[1:]), params["blocks"])
+
+        def group_body(gp, x, _):
+            self_p, cross_p = gp
+
+            def inner(lp, x, __):
+                x, kv, _ = lm.decoder_block(cfg, lp, x, positions)
+                return x, kv
+            x, kvs = lm._stack_scan(cfg, self_p, inner, x)
+            kx = _proj(vis, cross_p["xattn"]["wk"]).reshape(
+                B, -1, cfg.n_kv_heads, cfg.d_head)
+            vx = _proj(vis, cross_p["xattn"]["wv"]).reshape(
+                B, -1, cfg.n_kv_heads, cfg.d_head)
+            x, kv_self = lm.cross_block(cfg, cross_p, x, positions, (kx, vx))
+            return x, (kvs, kv_self, (kx, vx))
+
+        def outer(carry, inp):
+            return _maybe_remat(cfg, group_body)(inp, carry, None)
+        x, (kvs, kv_self, xkvs) = jax.lax.scan(
+            outer, x, (self_pp, params["cross_blocks"]))
+        cache["k"], cache["v"] = kvs
+        cache["kx_self"], cache["vx_self"] = kv_self
+        cache["xk"], cache["xv"] = xkvs
+    else:
+        raise ValueError(fam)
+
+    if cfg.kv_quant and fam in ("decoder", "moe", "hybrid"):
+        cache["k"], cache["k_scale"] = kvquant.quantize(cache["k"])
+        cache["v"], cache["v_scale"] = kvquant.quantize(cache["v"])
+
+    x = _norm_apply(cfg, params["final_norm"], x[:, -1:])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head,
+                        preferred_element_type=jnp.float32)
+    return cache, logits[:, 0]
+
+
+# ==========================================================================
+# Decode (one token).
+# ==========================================================================
+
+def _decode_attn(cfg, p, x1, cache_k, cache_v, pos, *, window=0,
+                 scales=None):
+    """x1: (B,1,d).  Updates cache at ``pos`` and attends.
+
+    ``scales``: (k_scale, v_scale) when the cache is int8-quantized
+    (cfg.kv_quant) — writes quantize, reads dequantize (fused into the
+    attention einsum's input).  Returns (out, new_k, new_v, new_scales).
+    """
+    B = x1.shape[0]
+    q = _proj(x1, p["wq"], p.get("bq")).reshape(B, 1, cfg.n_heads, cfg.d_head)
+    k1 = _proj(x1, p["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.d_head)
+    v1 = _proj(x1, p["wv"], p.get("bv")).reshape(B, 1, cfg.n_kv_heads,
+                                                 cfg.d_head)
+    if cfg.pos_embedding == "rope":
+        posb = jnp.broadcast_to(pos[None], (B, 1))
+        q = rope.apply_rope(q, posb, cfg.rope_theta)
+        k1 = rope.apply_rope(k1, posb, cfg.rope_theta)
+    if scales is not None:
+        ks, vs = scales
+        k1q, k1s = kvquant.quantize(k1)
+        v1q, v1s = kvquant.quantize(v1)
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k1q, pos, 1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v1q, pos, 1)
+        ks = jax.lax.dynamic_update_slice_in_dim(ks, k1s, pos, 1)
+        vs = jax.lax.dynamic_update_slice_in_dim(vs, v1s, pos, 1)
+        k_full = kvquant.dequantize(cache_k, ks, cfg.dtype)
+        v_full = kvquant.dequantize(cache_v, vs, cfg.dtype)
+        o = attention.attend_decode(q, k_full, v_full, pos + 1,
+                                    window=window)
+        out = _proj(o.reshape(B, 1, cfg.n_heads * cfg.d_head), p["wo"],
+                    p.get("bo"))
+        return out, cache_k, cache_v, (ks, vs)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k1, pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v1, pos, axis=1)
+    o = attention.attend_decode(q, cache_k, cache_v, pos + 1, window=window)
+    out = _proj(o.reshape(B, 1, cfg.n_heads * cfg.d_head), p["wo"],
+                p.get("bo"))
+    return out, cache_k, cache_v, None
+
+
+def decode_step(cfg: LMConfig, params, cache, tokens):
+    """tokens: (B, 1).  Returns (new_cache, logits (B, vocab_padded))."""
+    B = tokens.shape[0]
+    pos = cache["len"]
+    x = params["embed"][tokens]
+    if cfg.pos_embedding == "sinusoidal":
+        i = jnp.arange(0, cfg.d_model, 2, dtype=jnp.float32)
+        ang = pos.astype(jnp.float32) / jnp.power(10000.0, i / cfg.d_model)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
+        x = x + pe.astype(x.dtype)
+    fam = cfg.family
+    new_cache = dict(cache)
+    new_cache["len"] = pos + 1
+
+    if fam in ("decoder", "moe"):
+        blocks = params["blocks"]
+        L = cfg.n_layers - (1 if fam == "moe" else 0)
+        quant = cfg.kv_quant
+
+        def layer_caches(sl):
+            out = [cache["k"][sl], cache["v"][sl]]
+            if quant:
+                out += [cache["k_scale"][sl], cache["v_scale"][sl]]
+            return out
+
+        if fam == "moe":
+            p0 = jax.tree.map(lambda a: a[0], params["dense0"])
+            c0 = layer_caches(0)
+            h, k0, v0, sc0 = _decode_attn(
+                cfg, p0["attn"], _norm_apply(cfg, p0["ln1"], x),
+                c0[0], c0[1], pos,
+                scales=tuple(c0[2:]) if quant else None)
+            x = x + h
+            x = x + _mlp_apply(cfg, p0["mlp"], _norm_apply(cfg, p0["ln2"], x))
+
+        def body(x, inp):
+            lp, caches, idx = inp
+            ck, cv = caches[0], caches[1]
+            h, ck, cv, sc = _decode_attn(
+                cfg, lp["attn"], _norm_apply(cfg, lp["ln1"], x), ck, cv,
+                pos, window=layer_window(cfg, idx),
+                scales=(caches[2], caches[3]) if quant else None)
+            x = x + h
+            z = _norm_apply(cfg, lp["ln2"], x)
+            if fam == "moe":
+                y, _ = lm.moe_ffn_decode(cfg, lp["moe"], z)
+            else:
+                y = _mlp_apply(cfg, lp["mlp"], z)
+            outc = (ck, cv) + (sc if quant else ())
+            return x + y, outc
+
+        off = slice(1, None) if fam == "moe" else slice(None)
+        x, outs = jax.lax.scan(
+            body, x, (blocks, tuple(layer_caches(off)),
+                      jnp.arange(L, dtype=jnp.int32)))
+        ks, vs = outs[0], outs[1]
+        if fam == "moe":
+            ks = jnp.concatenate([k0[None], ks], 0)
+            vs = jnp.concatenate([v0[None], vs], 0)
+        new_cache["k"], new_cache["v"] = ks, vs
+        if quant:
+            kss, vss = outs[2], outs[3]
+            if fam == "moe":
+                kss = jnp.concatenate([sc0[0][None], kss], 0)
+                vss = jnp.concatenate([sc0[1][None], vss], 0)
+            new_cache["k_scale"], new_cache["v_scale"] = kss, vss
+
+    elif fam == "rwkv":
+        def body(x, inp):
+            lp, wkv_st, sh1, sh2 = inp
+            st = {"wkv": wkv_st, "shift1": sh1, "shift2": sh2}
+            x, st = lm.rwkv_block(cfg, lp, x, st)
+            return x, (st["wkv"], st["shift1"], st["shift2"])
+        x, (wkv, s1, s2) = jax.lax.scan(
+            body, x, (params["blocks"], cache["wkv"], cache["shift1"],
+                      cache["shift2"]))
+        new_cache.update(wkv=wkv, shift1=s1, shift2=s2)
+
+    elif fam == "hybrid":
+        quant = cfg.kv_quant
+
+        def body(x, inp):
+            if quant:
+                lp, ck, cv, ks_, vs_, conv_st, ssm_st, idx = inp
+                sc_in = (ks_, vs_)
+            else:
+                lp, ck, cv, conv_st, ssm_st, idx = inp
+                sc_in = None
+            z = _norm_apply(cfg, lp["ln1"], x)
+            att, ck, cv, sc = _decode_attn(cfg, lp["attn"], z, ck, cv, pos,
+                                           window=layer_window(cfg, idx),
+                                           scales=sc_in)
+            xz = _proj(z, lp["in_proj"])
+            xm, gate = jnp.split(xz, 2, axis=-1)
+            xm, conv_st = _causal_conv(xm, lp["conv_w"], conv_st)
+            xm = jax.nn.silu(xm.astype(jnp.float32)).astype(x.dtype)
+            dtr = lp["dt_proj"].shape[0]
+            dbc = _proj(xm, lp["x_proj"])
+            dt = jax.nn.softplus(
+                _proj(dbc[..., :dtr], lp["dt_proj"]).astype(jnp.float32)
+                + lp["dt_bias"].astype(jnp.float32))
+            N = cfg.ssm_state
+            y1, ssm_st = ssm.selective_step(
+                xm[:, 0], dt[:, 0].astype(x.dtype), lp["A_log"],
+                dbc[:, 0, dtr:dtr + N], dbc[:, 0, dtr + N:], lp["D_skip"],
+                ssm_st)
+            y = (y1[:, None] * jax.nn.silu(gate.astype(jnp.float32)
+                                           ).astype(x.dtype))
+            y = _proj(y, lp["ssm_out"])
+            beta = lp["beta"].astype(jnp.float32)
+            mixed = (beta[0] * _norm_apply(cfg, lp["norm_attn"], att
+                                           ).astype(jnp.float32)
+                     + beta[1] * _norm_apply(cfg, lp["norm_ssm"], y
+                                             ).astype(jnp.float32)) * 0.5
+            x = x + mixed.astype(x.dtype)
+            x = x + _mlp_apply(cfg, lp["mlp"], _norm_apply(cfg, lp["ln2"], x))
+            outc = (ck, cv) + (sc if quant else ()) + (conv_st, ssm_st)
+            return x, outc
+
+        xs_in = (params["blocks"], cache["k"], cache["v"])
+        if quant:
+            xs_in += (cache["k_scale"], cache["v_scale"])
+        xs_in += (cache["conv"], cache["ssm"],
+                  jnp.arange(cfg.n_layers, dtype=jnp.int32))
+        x, outs = jax.lax.scan(body, x, xs_in)
+        if quant:
+            ks, vs, kss, vss, conv, ssm_s = outs
+            new_cache.update(k=ks, v=vs, k_scale=kss, v_scale=vss,
+                             conv=conv, ssm=ssm_s)
+        else:
+            ks, vs, conv, ssm_s = outs
+            new_cache.update(k=ks, v=vs, conv=conv, ssm=ssm_s)
+
+    elif fam == "encdec":
+        def body(x, inp):
+            lp, ck, cv, xk, xv = inp
+            h, ck, cv, _ = _decode_attn(cfg, lp["attn"],
+                                        _norm_apply(cfg, lp["ln1"], x),
+                                        ck, cv, pos)
+            x = x + h
+            q = _proj(_norm_apply(cfg, lp["ln_x"], x), lp["xattn"]["wq"],
+                      lp["xattn"].get("bq")).reshape(
+                x.shape[0], 1, cfg.n_heads, cfg.d_head)
+            o = attention.attend_decode(q, xk, xv, xk.shape[1])
+            hx = _proj(o.reshape(x.shape[0], 1, -1), lp["xattn"]["wo"],
+                       lp["xattn"].get("bo"))
+            gate = jnp.tanh(lp["gate_attn"].astype(jnp.float32)).astype(x.dtype)
+            x = x + gate * hx
+            x = x + _mlp_apply(cfg, lp["mlp"], _norm_apply(cfg, lp["ln2"], x))
+            return x, (ck, cv)
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        new_cache.update(k=ks, v=vs)
+
+    elif fam == "vlm":
+        k_ = cfg.cross_every
+        G = cfg.n_layers // k_
+        self_pp = jax.tree.map(
+            lambda a: a.reshape((G, k_ - 1) + a.shape[1:]), params["blocks"])
+
+        def group(x, inp):
+            self_p, cross_p, ck, cv, ckx, cvx, xk, xv = inp
+
+            def inner(x, sinp):
+                lp, ck_i, cv_i = sinp
+                h, ck_i, cv_i, _ = _decode_attn(
+                    cfg, lp["attn"], _norm_apply(cfg, lp["ln1"], x),
+                    ck_i, cv_i, pos)
+                x = x + h
+                x = x + _mlp_apply(cfg, lp["mlp"],
+                                   _norm_apply(cfg, lp["ln2"], x))
+                return x, (ck_i, cv_i)
+            x, (ck, cv) = jax.lax.scan(inner, x, (self_p, ck, cv))
+            h, ckx, cvx, _ = _decode_attn(cfg, cross_p["attn"],
+                                          _norm_apply(cfg, cross_p["ln1"], x),
+                                          ckx, cvx, pos)
+            x = x + h
+            q = _proj(_norm_apply(cfg, cross_p["ln_x"], x),
+                      cross_p["xattn"]["wq"]).reshape(
+                x.shape[0], 1, cfg.n_heads, cfg.d_head)
+            o = attention.attend_decode(q, xk, xv, xk.shape[1])
+            hx = _proj(o.reshape(x.shape[0], 1, -1), cross_p["xattn"]["wo"])
+            gate = jnp.tanh(cross_p["gate_attn"].astype(jnp.float32)
+                            ).astype(x.dtype)
+            x = x + gate * hx
+            x = x + _mlp_apply(cfg, cross_p["mlp"],
+                               _norm_apply(cfg, cross_p["ln2"], x))
+            return x, (ck, cv, ckx, cvx)
+
+        x, (ks, vs, kxs, vxs) = jax.lax.scan(
+            group, x, (self_pp, params["cross_blocks"], cache["k"],
+                       cache["v"], cache["kx_self"], cache["vx_self"],
+                       cache["xk"], cache["xv"]))
+        new_cache.update(k=ks, v=vs, kx_self=kxs, vx_self=vxs)
+    else:
+        raise ValueError(fam)
+
+    x = _norm_apply(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head,
+                        preferred_element_type=jnp.float32)
+    return new_cache, logits[:, 0]

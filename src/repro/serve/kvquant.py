@@ -1,0 +1,27 @@
+"""int8 KV-cache quantization (beyond-paper §Perf extension).
+
+The paper's thesis — cut precision where a cheap domain tolerates it and let
+the high-precision remainder absorb the error — applied to serving: K/V
+cache entries are stored int8 with one f32 scale per (token, head); the
+dequantize fuses into the attention reads.  Halves cache residency (the
+decode cells' dominant per-device memory) at <0.5% logit error (tests).
+
+Per-token-per-head absmax scaling, post-RoPE (KIVI-style per-channel
+pre-RoPE K scaling is a further refinement; noted, not implemented).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array):
+    """x: (..., D) -> (int8 (..., D), f32 scale (..., 1))."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(scale, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,96 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+AdamW with optional mixed precision: parameters may be bf16 while master
+weights / moments are f32 (``state_dtype``).  The state pytree mirrors the
+param pytree, so whatever sharding the params carry, the optimizer state
+inherits leaf-for-leaf (plus any extra ZeRO sharding applied by
+``repro.dist.sharding.zero_shard_rule``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0          # global-norm clip; 0 disables
+    state_dtype: Any = jnp.float32  # moment dtype (bf16 halves optimizer HBM)
+    master_dtype: Any = None        # f32 master copy when params are bf16
+
+
+def init(params, cfg: AdamWConfig):
+    zeros = lambda p: jnp.zeros(p.shape, dtype=cfg.state_dtype)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+    if cfg.master_dtype is not None:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(cfg.master_dtype), params)
+    return state
+
+
+def _global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+
+
+def apply(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step.  Returns (new_params, new_state)."""
+    step = state["step"] + 1
+    if cfg.grad_clip > 0:
+        gnorm = _global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, master=None):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        base = (master if master is not None else p).astype(jnp.float32)
+        if cfg.weight_decay > 0:
+            update = update + cfg.weight_decay * base
+        new_master = base - cfg.lr * update
+        return (new_master.astype(p.dtype),
+                m_new.astype(cfg.state_dtype),
+                v_new.astype(cfg.state_dtype),
+                new_master)
+
+    if "master" in state:
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"],
+                           state["master"])
+    else:
+        out = jax.tree.map(lambda p, g, m, v: upd(p, g, m, v),
+                           params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    if "master" in state:
+        new_state["master"] = jax.tree.map(
+            lambda o: o[3].astype(cfg.master_dtype), out,
+            is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, new_state
+
+
+def sgd(params, grads, lr: float):
+    """Plain SGD (used by a few small examples/tests)."""
+    return jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)

@@ -1,0 +1,142 @@
+"""The paper's arithmetic claims: TFF adder exactness (Fig. 2), Tables 1-2."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import arith, bitstream as bs, sng
+
+
+def _str2bits(s):
+    return jnp.asarray([int(c) for c in s], dtype=jnp.bool_)
+
+
+class TestTFFAdder:
+    def test_paper_example_fig2b(self):
+        """X=1/2, Y=4/5 over N=20 -> Z=13/20, bit-for-bit (paper Fig. 2b)."""
+        x = _str2bits("01100011010101111000")
+        y = _str2bits("10111111010101111111")
+        z, state = arith.tff_add_gate(x, y, 0)
+        assert "".join(str(int(v)) for v in np.asarray(z)) == \
+            "01101011010101111101"
+        assert int(z.sum()) == 13
+
+    @pytest.mark.parametrize("s0,want", [(0, 2), (1, 3)])
+    def test_paper_example_fig2c_rounding(self, s0, want):
+        """3/8 + 1/4 at N=8: 5/16 rounds down (s0=0) or up (s0=1)."""
+        x = _str2bits("10100010")
+        y = _str2bits("01000100")
+        z, _ = arith.tff_add_gate(x, y, s0)
+        assert int(z.sum()) == want
+
+    @given(st.integers(1, 128), st.integers(0, 1), st.integers(0, 2**31 - 1))
+    @settings(max_examples=60, deadline=None)
+    def test_count_identity_and_packed_equivalence(self, n, s0, seed):
+        """gate sim == packed impl == (cx+cy+s0)>>1 count identity."""
+        rng = np.random.default_rng(seed)
+        xb = jnp.asarray(rng.integers(0, 2, n), jnp.bool_)
+        yb = jnp.asarray(rng.integers(0, 2, n), jnp.bool_)
+        zg, st_g = arith.tff_add_gate(xb, yb, s0)
+        cx, cy = int(xb.sum()), int(yb.sum())
+        assert int(zg.sum()) == (cx + cy + s0) >> 1
+        zp, st_p = arith.tff_add_packed(bs.pack_bits(xb[None])[0],
+                                        bs.pack_bits(yb[None])[0], n, s0=s0)
+        assert (np.asarray(bs.unpack_bits(zp, n)) == np.asarray(zg)).all()
+        assert int(st_g) == int(st_p)
+
+    def test_insensitive_to_autocorrelation(self):
+        """Thermometer (maximally auto-correlated) streams still add exactly
+        — the property that lets the ramp-compare A2S feed the adder."""
+        N = 64
+        for a in (0, 1, 17, 40, 64):
+            for b_ in (0, 5, 33, 64):
+                xa = sng.ramp_stream(jnp.asarray(a), N)
+                xb = sng.ramp_stream(jnp.asarray(b_), N)
+                z, _ = arith.tff_add_packed(xa, xb, N, s0=1)
+                assert int(bs.popcount(z)) == (a + b_ + 1) >> 1
+
+
+class TestTrees:
+    @given(st.integers(2, 33), st.sampled_from(["zero", "one", "alt"]),
+           st.integers(0, 2**31 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_tree_gate_equals_counts(self, m, mode, seed):
+        N = 64
+        rng = np.random.default_rng(seed)
+        streams = jnp.asarray(rng.integers(0, 2, (m, N)), jnp.bool_)
+        packed = bs.pack_bits(streams)
+        root = arith.tff_tree_gate(packed, N, s0_mode=mode)
+        assert int(bs.popcount(root)) == int(
+            arith.tff_tree_counts(bs.popcount(packed), s0_mode=mode))
+
+    def test_tree_scaling(self):
+        """Root ~= sum / 2^depth within 1 LSB per level."""
+        N = 256
+        counts = jnp.asarray([100, 50, 200, 10, 90], jnp.int32)
+        root = int(arith.tff_tree_counts(counts, "alt"))
+        exact = sum([100, 50, 200, 10, 90]) / 8  # padded to 8 leaves
+        assert abs(root - exact) <= 3
+
+
+class TestMSETables:
+    """Reproduce the paper's Table 1 / Table 2 (ordering + magnitudes)."""
+
+    @staticmethod
+    def _mult_mse(scheme, bits):
+        N = 1 << bits
+        ca, cb = sng.codes_for_scheme(scheme, bits)
+        a = jnp.arange(N)
+        SA = sng.generate(a, ca, N)
+        SB = sng.generate(a, cb, N)
+        prod = np.asarray(bs.popcount(arith.mult(SA[:, None], SB[None])),
+                          np.float64)
+        av = np.arange(N)[:, None] / N
+        bv = np.arange(N)[None, :] / N
+        return float(((prod / N - av * bv) ** 2).mean())
+
+    def test_table1_ordering(self):
+        for bits in (4, 8):
+            mses = [self._mult_mse(s, bits) for s in sng.SCHEMES]
+            assert mses[0] > mses[1] > mses[2] > mses[3], (bits, mses)
+
+    def test_table1_magnitudes_8bit(self):
+        """ramp+LD lands within ~3x of the paper's 8.66e-6."""
+        m = self._mult_mse("ramp_lowdisc", 8)
+        assert 8.66e-6 / 3 < m < 8.66e-6 * 3
+
+    def test_table2_new_adder_exact(self):
+        """The new adder's MSE is EXACTLY 1/(8N^2) — matches the paper's
+        1.91e-6 (8-bit) and 4.88e-4 (4-bit) to all printed digits."""
+        for bits, paper in ((8, 1.91e-6), (4, 4.88e-4)):
+            N = 1 << bits
+            a = jnp.arange(N)
+            cz = arith.tff_add_count(a[:, None], a[None, :], 0)
+            exact = (np.arange(N)[:, None] + np.arange(N)[None, :]) / (2 * N)
+            mse = float(((np.asarray(cz, np.float64) / N - exact) ** 2).mean())
+            assert mse == pytest.approx(1 / (8 * N * N), rel=1e-9)
+            assert mse == pytest.approx(paper, rel=5e-3)
+
+    def test_table2_new_beats_old(self):
+        """New adder MSE << MUX adder MSE (paper: 50x at 8-bit)."""
+        bits, N = 6, 64
+        rng = np.random.default_rng(0)
+        a = np.arange(N)
+        draws = (rng.random((4, N, N)) < (a[:, None] / N))
+        SA = bs.pack_bits(jnp.asarray(draws))
+        SB = bs.pack_bits(jnp.asarray(
+            rng.random((4, N, N)) < (a[:, None] / N)))
+        sel = sng.generate(jnp.asarray(N // 2), sng.lfsr_sequence(bits), N)
+        z = arith.mux_add(SA[:, :, None], SB[:, None, :], sel)
+        exact = (a[:, None] + a[None, :]) / (2 * N)
+        mse_old = float(((np.asarray(bs.popcount(z), np.float64) / N
+                          - exact[None]) ** 2).mean())
+        mse_new = 1 / (8 * N * N)
+        assert mse_old > 10 * mse_new
+
+
+def test_or_adder_biased():
+    """OR 'adder' only works near zero (background §II)."""
+    N = 64
+    hi = sng.ramp_stream(jnp.asarray(48), N)
+    z = arith.or_add(hi, hi)
+    assert int(bs.popcount(z)) == 48  # OR of identical streams: no addition

@@ -1,0 +1,43 @@
+"""Bipolar SC (the design the paper REJECTS in §IV.B) — verify the rejection
+rationale quantitatively."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bipolar, bitstream as bs, sng
+
+
+def test_xnor_multiplies_bipolar_values():
+    bits, N = 6, 64
+    for a in (-1.0, -0.5, 0.0, 0.5, 1.0):
+        for b in (-1.0, 0.25, 1.0):
+            xa = sng.generate(bipolar.to_level(jnp.asarray(a), bits),
+                              sng.ramp_sequence(bits), N)
+            xb = sng.generate(bipolar.to_level(jnp.asarray(b), bits),
+                              sng.revgray_sequence(bits), N)
+            z = bipolar.mult(xa, xb, N)
+            got = float(bipolar.from_count(bs.popcount(z), N))
+            assert abs(got - a * b) < 0.15, (a, b, got)
+
+
+def test_dot_bipolar_estimates_dot():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(-1, 1, (8, 8)), jnp.float32)
+    w = jnp.asarray(rng.uniform(-0.5, 0.5, (8, 2)), jnp.float32)
+    est = np.asarray(bipolar.dot_bipolar(x, w, bits=8))
+    exact = np.asarray(x) @ np.asarray(w)
+    assert np.abs(est - exact).mean() < 0.5      # coarse but unbiased
+    assert abs((est - exact).mean()) < 0.15      # pad bias removed
+
+
+def test_paper_claim_split_beats_bipolar_at_decision_point():
+    """§IV.B: near the sign decision point the bipolar estimate is noisier
+    than the paper's split-unipolar comparator design."""
+    err_b, err_s = bipolar.decision_point_errors(bits=6, n=512)
+    assert err_s.mean() < err_b.mean(), (err_s.mean(), err_b.mean())
+
+
+def test_bipolar_degrades_with_fewer_bits():
+    e4_b, _ = bipolar.decision_point_errors(bits=4, n=256)
+    e7_b, _ = bipolar.decision_point_errors(bits=7, n=256)
+    assert e7_b.mean() < e4_b.mean()

@@ -1,0 +1,42 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitstream as bs
+
+
+@given(st.integers(1, 200), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_pack_unpack_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, size=(3, n)).astype(bool)
+    packed = bs.pack_bits(jnp.asarray(bits))
+    assert packed.shape == (3, bs.n_words(n))
+    out = np.asarray(bs.unpack_bits(packed, n))
+    assert (out == bits).all()
+    assert (np.asarray(bs.popcount(packed)) == bits.sum(-1)).all()
+
+
+@given(st.integers(2, 8))
+@settings(max_examples=7, deadline=None)
+def test_comparator_exact_counts(bits):
+    """A permutation code sequence yields exactly `level` ones."""
+    N = 1 << bits
+    codes = jnp.asarray(np.random.default_rng(0).permutation(N), jnp.int32)
+    lv = jnp.arange(N + 1)
+    packed = bs.encode_comparator(lv, codes, N)
+    assert (np.asarray(bs.popcount(packed)) == np.arange(N + 1)).all()
+
+
+def test_tail_masking():
+    n = 45  # non-multiple of 32
+    ones = bs.ones((2,), n)
+    assert bs.popcount(ones).tolist() == [n, n]
+    z = bs.zeros((2,), n)
+    assert bs.popcount(z).tolist() == [0, 0]
+
+
+def test_value():
+    bits = jnp.asarray([[1, 0, 1, 0, 1, 0, 0, 0]], dtype=bool)
+    v = bs.value(bs.pack_bits(bits), 8)
+    assert float(v[0]) == 3 / 8

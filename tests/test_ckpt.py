@@ -1,0 +1,84 @@
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import manager as ckpt
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.normal(0, 1, (4, 8)), jnp.float32),
+        "b": {"w": jnp.asarray(rng.normal(0, 1, (3, 3)), jnp.bfloat16),
+              "step": jnp.int32(7)},
+    }
+
+
+def test_roundtrip_including_bf16(tmp_path):
+    tree = _tree()
+    ckpt.save(tmp_path, 5, tree)
+    restored, manifest = ckpt.restore(tmp_path, jax.tree.map(jnp.zeros_like,
+                                                             tree))
+    assert manifest["step"] == 5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_crc_detects_corruption(tmp_path):
+    tree = _tree()
+    path = ckpt.save(tmp_path, 1, tree)
+    victim = sorted(path.glob("leaf_*.npy"))[0]
+    raw = bytearray(victim.read_bytes())
+    raw[-1] ^= 0xFF
+    victim.write_bytes(bytes(raw))
+    with pytest.raises(IOError, match="CRC"):
+        ckpt.restore(tmp_path, jax.tree.map(jnp.zeros_like, tree))
+
+
+def test_structure_mismatch_rejected(tmp_path):
+    ckpt.save(tmp_path, 1, _tree())
+    with pytest.raises(ValueError, match="structure"):
+        ckpt.restore(tmp_path, {"only": jnp.zeros((2,))})
+
+
+def test_latest_pointer_and_fallback(tmp_path):
+    ckpt.save(tmp_path, 1, _tree())
+    ckpt.save(tmp_path, 9, _tree(1))
+    assert ckpt.latest_step(tmp_path) == 9
+    (tmp_path / "LATEST").unlink()          # simulate lost pointer
+    assert ckpt.latest_step(tmp_path) == 9  # recovered by scan
+
+
+def test_atomicity_tmp_dirs_ignored(tmp_path):
+    ckpt.save(tmp_path, 3, _tree())
+    # a crashed half-save leaves a tmp dir — must be invisible
+    (tmp_path / ".tmp_step_0000000099_123").mkdir()
+    assert ckpt.latest_step(tmp_path) == 3
+    ckpt.gc_tmp(tmp_path)
+    assert not list(tmp_path.glob(".tmp_*"))
+
+
+def test_manager_retention_and_async(tmp_path):
+    mgr = ckpt.CheckpointManager(tmp_path, keep=2, save_interval=10)
+    for step in (10, 20, 30):
+        mgr.save_async(step, _tree(step))
+    mgr.wait()
+    steps = sorted(int(p.name.split("_")[-1])
+                   for p in tmp_path.glob("step_*"))
+    assert steps == [20, 30]
+    restored, manifest = mgr.restore_latest(
+        jax.tree.map(jnp.zeros_like, _tree()))
+    assert manifest["step"] == 30
+
+
+def test_should_save_interval(tmp_path):
+    mgr = ckpt.CheckpointManager(tmp_path, save_interval=100)
+    assert not mgr.should_save(0)
+    assert mgr.should_save(100)
+    assert not mgr.should_save(101)

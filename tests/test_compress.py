@@ -1,0 +1,48 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.dist import compress
+
+
+@given(st.integers(1, 5000), st.integers(0, 2**31 - 1),
+       st.sampled_from([64, 256, 2048]))
+@settings(max_examples=30, deadline=None)
+def test_int8_roundtrip_error_bound(n, seed, chunk):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(0, 1, (n,)), jnp.float32)
+    out = compress.int8_roundtrip(g, chunk)
+    err = np.abs(np.asarray(out) - np.asarray(g))
+    # max error <= half an int8 LSB of the per-chunk scale
+    gmax = np.abs(np.asarray(g)).reshape(-1)
+    scale_bound = np.abs(np.asarray(g)).max() / 127.0
+    assert err.max() <= scale_bound * 0.5 + 1e-7
+
+
+def test_zero_tensor():
+    g = jnp.zeros((100,), jnp.float32)
+    out = compress.int8_roundtrip(g)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_error_feedback_reduces_bias():
+    """EF compensates quantization bias: the running compressed sum tracks
+    the true sum much closer than without feedback."""
+    rng = np.random.default_rng(0)
+    g = rng.normal(0, 1, (50, 257)).astype(np.float32) * \
+        np.geomspace(0.01, 1.0, 257)[None, :].astype(np.float32)
+    res = jnp.zeros((257,), jnp.float32)
+    sum_ef = np.zeros(257)
+    sum_plain = np.zeros(257)
+    for t in range(50):
+        out_ef, res = compress.int8_roundtrip_ef(jnp.asarray(g[t]), res, 64)
+        sum_ef += np.asarray(out_ef)
+        sum_plain += np.asarray(compress.int8_roundtrip(jnp.asarray(g[t]), 64))
+    true = g.sum(0)
+    assert np.abs(sum_ef - true).mean() <= np.abs(sum_plain - true).mean()
+
+
+def test_shapes_preserved():
+    g = jnp.ones((3, 5, 7), jnp.bfloat16)
+    out = compress.int8_roundtrip(g)
+    assert out.shape == g.shape and out.dtype == g.dtype

@@ -1,0 +1,56 @@
+import numpy as np
+
+from repro.data import mnist_synth, tokens
+
+
+def test_token_batches_deterministic():
+    a = tokens.batch_at(7, 42, 4, 16, 100)
+    b = tokens.batch_at(7, 42, 4, 16, 100)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = tokens.batch_at(7, 43, 4, 16, 100)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_token_labels_are_shifted():
+    b = tokens.batch_at(0, 0, 2, 8, 50)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+    assert (b["labels"][:, -1] == -1).all()
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 50
+
+
+def test_pipeline_resume():
+    p1 = tokens.TokenPipeline(0, 2, 8, 50)
+    for _ in range(3):
+        p1.next()
+    b_at_3 = p1.next()
+    p2 = tokens.TokenPipeline(0, 2, 8, 50, start_step=3)
+    np.testing.assert_array_equal(p2.next()["tokens"], b_at_3["tokens"])
+
+
+def test_mnist_synth_contract():
+    xtr, ytr, xte, yte = mnist_synth.dataset(200, 50, seed=1)
+    assert xtr.shape == (200, 28, 28, 1) and xtr.dtype == np.uint8
+    assert set(np.unique(ytr)) <= set(range(10))
+    # images are non-trivial (ink present, not saturated)
+    assert 5 < xtr.mean() < 128
+    # deterministic
+    xtr2, *_ = mnist_synth.dataset(200, 50, seed=1)
+    np.testing.assert_array_equal(xtr, xtr2)
+
+
+def test_mnist_classes_distinguishable():
+    """Mean images of distinct digits differ substantially."""
+    xtr, ytr, *_ = mnist_synth.dataset(400, 10, seed=0)
+    means = [xtr[ytr == d].mean(0) for d in range(10) if (ytr == d).sum() > 3]
+    dists = []
+    for i in range(len(means)):
+        for j in range(i + 1, len(means)):
+            dists.append(np.abs(means[i] - means[j]).mean())
+    assert min(dists) > 2.0
+
+
+def test_mnist_batches_deterministic():
+    xtr, ytr, *_ = mnist_synth.dataset(100, 10)
+    b1 = list(mnist_synth.batches(xtr, ytr, 8, seed=5, steps=2))
+    b2 = list(mnist_synth.batches(xtr, ytr, 8, seed=5, steps=2))
+    np.testing.assert_array_equal(b1[0][0], b2[0][0])

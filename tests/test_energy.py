@@ -1,0 +1,55 @@
+"""Energy/power/area model vs the paper's Table 3."""
+import numpy as np
+import pytest
+
+from repro.core import energy
+
+
+@pytest.mark.parametrize("bits", range(2, 9))
+def test_energy_rows_match_paper(bits):
+    bp, sp, be, se, ba, sa = energy.PAPER_TABLE3[bits]
+    r = energy.report(bits)
+    assert r.sc_energy_nj == pytest.approx(se, rel=0.02), "SC nJ/frame"
+    assert r.bin_energy_nj == pytest.approx(be, rel=0.03), "binary nJ/frame"
+    assert r.sc_power_mw == pytest.approx(sp, rel=0.02), "SC mW"
+    assert r.bin_power_mw == pytest.approx(bp, rel=0.05), "binary mW"
+    assert r.sc_area_mm2 == pytest.approx(sa, rel=0.03), "SC mm^2"
+    assert r.bin_area_mm2 == pytest.approx(ba, rel=0.02), "binary mm^2"
+
+
+def test_headline_claims():
+    """9.8x energy efficiency at 4-bit; break-even (>=1x) at 8-bit."""
+    assert energy.report(4).efficiency_gain == pytest.approx(9.8, abs=0.3)
+    assert 1.0 <= energy.report(8).efficiency_gain < 1.5
+
+
+def test_exponential_sc_scaling():
+    """SC energy halves per bit removed (stream length halves)."""
+    for b in range(3, 9):
+        ratio = energy.sc_energy_nj(b) / energy.sc_energy_nj(b - 1)
+        assert 1.7 < ratio < 2.4
+
+
+def test_binary_scaling_near_linear():
+    """Binary energy grows ~linearly in datapath width (small quadratic
+    multiplier-array term)."""
+    es = [energy.bin_energy_nj(b) for b in range(2, 9)]
+    diffs = np.diff(es)
+    assert np.std(diffs) / np.mean(diffs) < 0.10
+    assert all(d > 0 for d in diffs)
+
+
+def test_component_shares_sum_to_one():
+    s = energy.component_shares(4)
+    assert sum(s.values()) == pytest.approx(1.0)
+    assert s["tff_adders"] > s["counters"]      # adder tree dominates counters
+
+
+def test_scaled_projection():
+    """Beyond-paper projection: doubling units doubles power, same per-frame
+    time; efficiency gain ratio is preserved."""
+    base = energy.report(4)
+    big = energy.scaled_report(4, energy.K_WINDOW, 2 * energy.N_UNITS,
+                               energy.N_KERNELS)
+    assert big.sc_power_mw == pytest.approx(2 * base.sc_power_mw)
+    assert big.efficiency_gain == pytest.approx(base.efficiency_gain)

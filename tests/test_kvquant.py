@@ -1,0 +1,65 @@
+"""int8 KV-cache quantization (beyond-paper): round-trip bounds + decode
+logit fidelity vs the bf16 cache."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.models import lm
+from repro.serve import engine, kvquant
+
+
+@given(st.integers(1, 64), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_roundtrip_error_bound(d, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 2, (3, 5, d)), jnp.float32)
+    q, s = kvquant.quantize(x)
+    back = kvquant.dequantize(q, s, jnp.float32)
+    maxerr = np.abs(np.asarray(back) - np.asarray(x)).max(-1)
+    bound = np.abs(np.asarray(x)).max(-1) / 127.0
+    assert (maxerr <= bound * 0.5001 + 1e-7).all()
+
+
+@pytest.mark.parametrize("arch", ["stablelm_3b", "hymba_1_5b",
+                                  "deepseek_moe_16b"])
+def test_decode_logits_close_to_bf16_cache(arch):
+    base = configs.smoke_config(arch)
+    base = dataclasses.replace(base, param_dtype="float32")
+    qcfg = dataclasses.replace(base, kv_quant=True)
+    params, _ = lm.init(jax.random.key(0), base, {})
+    rng = np.random.default_rng(0)
+    B, S = 2, 12
+    toks = jnp.asarray(rng.integers(0, base.vocab, (B, S)), jnp.int32)
+
+    outs = {}
+    for name, cfg in (("bf16", base), ("int8", qcfg)):
+        cache, _ = engine.prefill(cfg, params, {"tokens": toks})
+        grown = dict(cache)
+        for k in ("k", "v", "k_scale", "v_scale"):
+            if k in grown:
+                pad = [(0, 0)] * grown[k].ndim
+                pad[-3] = (0, 4)
+                grown[k] = jnp.pad(grown[k], pad)
+        _, logits = engine.decode_step(cfg, params, grown, toks[:, :1])
+        outs[name] = np.asarray(logits, np.float32)
+    # logits track closely; rankings preserved
+    denom = np.abs(outs["bf16"]).max()
+    assert np.abs(outs["int8"] - outs["bf16"]).max() / denom < 0.05
+    assert (outs["int8"].argmax(-1) == outs["bf16"].argmax(-1)).all()
+
+
+def test_cache_size_halves():
+    cfg = configs.smoke_config("stablelm_3b")
+    qcfg = dataclasses.replace(cfg, kv_quant=True)
+    c16 = engine.init_cache(cfg, 4, 128, abstract=True)
+    c8 = engine.init_cache(qcfg, 4, 128, abstract=True)
+
+    def nbytes(c):
+        return sum(np.prod(v.shape) * v.dtype.itemsize
+                   for v in jax.tree.leaves(c))
+    assert nbytes(c8) < 0.6 * nbytes(c16)

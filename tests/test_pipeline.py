@@ -1,0 +1,50 @@
+"""GPipe pipeline parallelism: schedule correctness on a 4-stage virtual
+mesh (subprocess keeps the main process single-device)."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.dist.pipeline import gpipe_apply
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((4,), ("stage",))
+    n_stages, n_micro, B, d = 4, 6, 2, 8
+    rng = np.random.default_rng(0)
+    params = {
+        "w": jnp.asarray(rng.normal(0, 0.5, (n_stages, d, d)), jnp.float32),
+        "b": jnp.asarray(rng.normal(0, 0.1, (n_stages, d)), jnp.float32),
+    }
+    xs = jnp.asarray(rng.normal(0, 1, (n_micro, B, d)), jnp.float32)
+
+    def stage_fn(p, x):
+        return jnp.tanh(x @ p["w"] + p["b"])
+
+    got = gpipe_apply(stage_fn, params, xs, mesh)
+
+    # sequential reference
+    def seq(x):
+        for s in range(n_stages):
+            x = jnp.tanh(x @ params["w"][s] + params["b"][s])
+        return x
+    want = jnp.stack([seq(xs[m]) for m in range(n_micro)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # the compiled module must use point-to-point transfers
+    txt = jax.jit(lambda p, x: gpipe_apply(stage_fn, p, x, mesh)).lower(
+        params, xs).compile().as_text()
+    assert "collective-permute" in txt
+    print("PIPELINE_OK")
+""")
+
+
+@pytest.mark.slow
+def test_gpipe_matches_sequential():
+    r = subprocess.run([sys.executable, "-c", _PROG], capture_output=True,
+                       text=True, timeout=600)
+    assert "PIPELINE_OK" in r.stdout, r.stdout[-1500:] + r.stderr[-1500:]

@@ -1,0 +1,48 @@
+"""The paper's technique as a first-class LM feature: first_layer_mode="sc"
+(DESIGN §Arch-applicability) — forward exact SC sim, backward STE."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm
+
+
+@pytest.mark.parametrize("arch", ["stablelm_3b", "whisper_medium", "rwkv6_7b"])
+def test_sc_frontend_trains(arch):
+    cfg = dataclasses.replace(configs.smoke_config(arch),
+                              first_layer_mode="sc", sc_bits=4)
+    params, specs = lm.init(jax.random.key(0), cfg, {})
+    assert "sc_frontend" in params
+    rng = np.random.default_rng(0)
+    B, S = 2, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "encdec":
+        batch["enc_embed"] = jnp.zeros((B, cfg.enc_len, cfg.d_model),
+                                       jnp.bfloat16)
+
+    def loss_fn(p):
+        return lm.forward(cfg, p, batch)[0]
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss))
+    # STE: gradient reaches the SC frontend weights (retraining can adapt it)
+    gw = np.asarray(grads["sc_frontend"]["w"], np.float32)
+    assert np.isfinite(gw).all() and np.abs(gw).sum() > 0
+
+
+def test_sc_frontend_output_is_ternary_scaled():
+    cfg = dataclasses.replace(configs.smoke_config("stablelm_3b"),
+                              first_layer_mode="sc", sc_bits=4)
+    params, _ = lm.init(jax.random.key(1), cfg, {})
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (1, 8, cfg.d_model)),
+                    jnp.float32)
+    out = lm.sc_frontend(cfg, params["sc_frontend"], x)
+    vals = np.unique(np.round(np.asarray(out, np.float32)
+                              / np.asarray(params["sc_frontend"]["gamma"],
+                                           np.float32), 5))
+    assert set(vals) <= {-1.0, 0.0, 1.0}

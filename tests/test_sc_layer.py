@@ -1,0 +1,96 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sc_layer
+from repro.core.sc_layer import SCConfig
+
+
+@given(st.integers(2, 8), st.integers(1, 30), st.integers(1, 8),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_table_equals_streams(bits, K, O, seed):
+    """The (N+1)^2 product-count table path is bit-identical to materializing
+    the packed streams — for every bit width including N<32."""
+    cfg = SCConfig(bits=bits, adder="tff")
+    rng = np.random.default_rng(seed)
+    N = 1 << bits
+    xl = jnp.asarray(rng.integers(0, N + 1, (3, K)), jnp.int32)
+    wl = jnp.asarray(rng.integers(0, N + 1, (K, O)), jnp.int32)
+    a = sc_layer.counts_via_table(xl, wl, cfg)
+    b = sc_layer.counts_via_streams(xl, wl, cfg)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quantize_weights_split():
+    w = jnp.asarray([[0.5, -0.25], [1.0, 0.75], [-0.1, 0.0]])
+    pos, neg, scale = sc_layer.quantize_weights(w, 4, scale=True)
+    assert pos.shape == w.shape and neg.shape == w.shape
+    # pos and neg never both nonzero
+    assert not np.any((np.asarray(pos) > 0) & (np.asarray(neg) > 0))
+    back = sc_layer.dequantize_weights(pos, neg, scale, 4)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(w), atol=1.1 / 16)
+
+
+def test_weight_scaling_uses_full_range():
+    w = jnp.asarray([[0.1, -0.05], [0.2, 0.01]])  # tiny weights
+    pos, neg, scale = sc_layer.quantize_weights(w, 4, scale=True)
+    m = np.maximum(np.asarray(pos), np.asarray(neg)).max(0)
+    assert (m == 16).all()    # each kernel normalized to full range
+
+
+def test_sign_activation_and_soft_threshold():
+    cfg = SCConfig(bits=6, soft_threshold=0.0)
+    x = jnp.asarray([[1.0, 1.0, 0.0, 0.0]])
+    w = jnp.asarray([[1.0], [1.0], [-1.0], [-1.0]])      # x.w = 2 > 0
+    out = sc_layer.sc_dot_sign(x, w, cfg)
+    assert float(out[0, 0]) == 1.0
+    wneg = -w
+    assert float(sc_layer.sc_dot_sign(x, wneg, cfg)[0, 0]) == -1.0
+    # a large threshold forces 0
+    cfg_t = SCConfig(bits=6, soft_threshold=10.0)
+    assert float(sc_layer.sc_dot_sign(x, w, cfg_t)[0, 0]) == 0.0
+
+
+def test_sc_conv_output_domain():
+    cfg = SCConfig(bits=4)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.random((2, 12, 12, 1)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.3, (5, 5, 1, 8)), jnp.float32)
+    out = sc_layer.sc_conv2d_sign(x, w, cfg)
+    assert out.shape == (2, 12, 12, 8)
+    assert set(np.unique(np.asarray(out))) <= {-1.0, 0.0, 1.0}
+
+
+def test_binary_baseline_matches_float_sign_at_high_precision():
+    """8-bit binary quantized conv ~= sign of the float conv."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.random((1, 8, 8, 1)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.5, (3, 3, 1, 4)), jnp.float32)
+    out = sc_layer.binary_conv2d_sign(x, w, bits=8)
+    patches = sc_layer.extract_patches(x, 3)
+    ref = jnp.sign(jnp.einsum("bhwk,ko->bhwo", patches, w.reshape(9, 4)))
+    agree = (np.asarray(out) == np.asarray(ref)).mean()
+    assert agree > 0.9
+
+
+def test_sc_accuracy_improves_with_bits():
+    """Monte-Carlo: SC dot-product error shrinks ~2x per extra bit."""
+    rng = np.random.default_rng(2)
+    K = 25
+    x = jnp.asarray(rng.random((64, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.4, (K, 4)), jnp.float32)
+    exact = np.asarray(jnp.einsum("mk,ko->mo", x, w))
+    errs = {}
+    for bits in (3, 5, 7):
+        cfg = SCConfig(bits=bits, adder="tff")
+        xl = sc_layer.quantize_levels(x, bits)
+        pos, neg, scale = sc_layer.quantize_weights(w, bits)
+        cp = sc_layer.counts_via_table(xl, pos, cfg)
+        cn = sc_layer.counts_via_table(xl, neg, cfg)
+        d = (np.asarray(cp) - np.asarray(cn)) * 2.0 ** sc_layer.tree_depth(K) \
+            / (1 << bits)
+        errs[bits] = np.abs(d * np.asarray(scale)[None] - exact).mean()
+    assert errs[3] > errs[5] > errs[7]

@@ -1,0 +1,38 @@
+import numpy as np
+import pytest
+
+from repro.core import sng
+
+
+@pytest.mark.parametrize("bits", [2, 4, 6, 8, 10])
+@pytest.mark.parametrize("which", [0, 1])
+def test_lfsr_maximal_period(bits, which):
+    seq = sng.lfsr_sequence(bits, which=which, length=(1 << bits) - 1)
+    assert len(set(seq.tolist())) == (1 << bits) - 1   # visits all but 0
+    assert 0 not in seq
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_deterministic_sequences_are_permutations(bits):
+    N = 1 << bits
+    for fn in (sng.vdc_sequence, sng.ramp_sequence, sng.revgray_sequence):
+        seq = fn(bits)
+        assert sorted(seq.tolist()) == list(range(N)), fn.__name__
+
+
+def test_vdc_is_bit_reversal():
+    assert sng.vdc_sequence(3).tolist() == [0, 4, 2, 6, 1, 5, 3, 7]
+
+
+@pytest.mark.parametrize("scheme", sng.SCHEMES)
+def test_scheme_registry(scheme):
+    ca, cb = sng.codes_for_scheme(scheme, 4)
+    assert len(ca) == len(cb) == 16
+
+
+def test_ramp_stream_is_thermometer():
+    import jax.numpy as jnp
+    from repro.core import bitstream as bs
+    s = sng.ramp_stream(jnp.asarray(5), 32)
+    bits = np.asarray(bs.unpack_bits(s, 32)).astype(int)
+    assert bits.tolist() == [1] * 5 + [0] * 27

@@ -1,0 +1,113 @@
+"""Chunked recurrences vs naive step-by-step references."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.nn import ssm
+
+
+def _wkv_naive(r, k, v, w, u):
+    B, S, H, D = r.shape
+    Sm = np.zeros((B, H, D, D), np.float64)
+    out = np.zeros((B, S, H, D), np.float64)
+    r, k, v, w = (np.asarray(t, np.float64) for t in (r, k, v, w))
+    u = np.asarray(u, np.float64)
+    for t in range(S):
+        kv = k[:, t, :, :, None] * v[:, t, :, None, :]
+        out[:, t] = np.einsum("bhd,bhde->bhe", r[:, t], Sm + u[..., None] * kv)
+        Sm = w[:, t, :, :, None] * Sm + kv
+    return out, Sm
+
+
+@given(st.integers(1, 2), st.sampled_from([4, 8, 16, 32]), st.integers(1, 3),
+       st.sampled_from([4, 8]), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_wkv6_chunked_matches_naive(B, S, H, D, seed):
+    rng = np.random.default_rng(seed)
+    r, k, v = (jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(np.exp(-np.exp(rng.normal(-2, 1, (B, S, H, D)))),
+                    jnp.float32)
+    u = jnp.asarray(rng.normal(0, 0.3, (H, D)), jnp.float32)
+    chunk = min(4, S)
+    out, state = ssm.wkv6_chunked(r, k, v, w, u, chunk=chunk)
+    want, want_state = _wkv_naive(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), want_state,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_step_consistent_with_chunked():
+    rng = np.random.default_rng(0)
+    B, S, H, D = 2, 8, 2, 4
+    r, k, v = (jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(np.exp(-np.exp(rng.normal(-2, 1, (B, S, H, D)))),
+                    jnp.float32)
+    u = jnp.asarray(rng.normal(0, 0.3, (H, D)), jnp.float32)
+    full, state_c = ssm.wkv6_chunked(r, k, v, w, u, chunk=4)
+    state = jnp.zeros((B, H, D, D), jnp.float32)
+    outs = []
+    for t in range(S):
+        o, state = ssm.wkv6_step(r[:, t], k[:, t], v[:, t], w[:, t], u, state)
+        outs.append(o)
+    step_out = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(step_out), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(state_c),
+                               rtol=2e-4, atol=2e-4)
+
+
+def _selective_naive(x, dt, A_log, Bm, Cm, D_skip):
+    x, dt, Bm, Cm = (np.asarray(t, np.float64) for t in (x, dt, Bm, Cm))
+    A = -np.exp(np.asarray(A_log, np.float64))
+    D_ = np.asarray(D_skip, np.float64)
+    B_, S, d = x.shape
+    N = A.shape[-1]
+    h = np.zeros((B_, d, N))
+    ys = np.zeros((B_, S, d))
+    for t in range(S):
+        a = np.exp(dt[:, t, :, None] * A)
+        h = a * h + (dt[:, t] * x[:, t])[..., None] * Bm[:, t, None, :]
+        ys[:, t] = np.einsum("bdn,bn->bd", h, Cm[:, t]) + D_ * x[:, t]
+    return ys, h
+
+
+@given(st.integers(1, 2), st.sampled_from([4, 8, 32]), st.integers(2, 6),
+       st.integers(1, 4), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_selective_scan_matches_naive(B, S, d, N, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, (B, S, d)), jnp.float32)
+    dt = jnp.asarray(rng.random((B, S, d)) * 0.2 + 0.01, jnp.float32)
+    A_log = jnp.asarray(rng.normal(0, 0.5, (d, N)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(0, 1, (B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(0, 1, (B, S, N)), jnp.float32)
+    D_skip = jnp.asarray(rng.normal(0, 1, (d,)), jnp.float32)
+    chunk = min(4, S)
+    y, h = ssm.selective_scan(x, dt, A_log, Bm, Cm, D_skip, chunk=chunk)
+    yw, hw = _selective_naive(x, dt, A_log, Bm, Cm, D_skip)
+    np.testing.assert_allclose(np.asarray(y), yw, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), hw, rtol=2e-4, atol=2e-4)
+
+
+def test_selective_step_consistent():
+    rng = np.random.default_rng(1)
+    B, S, d, N = 2, 6, 3, 4
+    x = jnp.asarray(rng.normal(0, 1, (B, S, d)), jnp.float32)
+    dt = jnp.asarray(rng.random((B, S, d)) * 0.2 + 0.01, jnp.float32)
+    A_log = jnp.asarray(rng.normal(0, 0.5, (d, N)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(0, 1, (B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(0, 1, (B, S, N)), jnp.float32)
+    D_skip = jnp.asarray(rng.normal(0, 1, (d,)), jnp.float32)
+    y_full, h_full = ssm.selective_scan(x, dt, A_log, Bm, Cm, D_skip, chunk=2)
+    h = jnp.zeros((B, d, N), jnp.float32)
+    for t in range(S):
+        y, h = ssm.selective_step(x[:, t], dt[:, t], A_log, Bm[:, t],
+                                  Cm[:, t], D_skip, h)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_full),
+                               rtol=2e-4, atol=2e-4)
