@@ -16,3 +16,11 @@ def timed(fn, *args, warmup: int = 1, iters: int = 3, **kw):
 
 def emit(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
+
+
+def emit_json(path: str, payload: dict):
+    """Write a benchmark result file (BENCH_*.json) and echo the path."""
+    import json
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {path}")

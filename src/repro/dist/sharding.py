@@ -1,0 +1,157 @@
+"""Mesh-axis conventions + sharding helpers shared by init/train/serve.
+
+Convention (see launch.mesh): the innermost mesh axis ``"model"`` carries
+tensor/expert parallelism; every other axis (``"pod"``, ``"data"``, ...) is
+data parallel.  Specs are *functions of the mesh*, never baked into params —
+that is what makes elastic restarts (same checkpoint, different --mesh)
+work.
+
+Two families of helpers live here:
+
+  spec construction — ``batch_spec_axis`` / ``axis_if_divisible`` pick mesh
+    axes only when the dim divides evenly (falling back to replication, never
+    erroring on odd sizes); ``zero_shard_specs`` adds the ZeRO-1 rule: shard
+    each optimizer-state leaf's largest *free* dim across the DP axes
+    (``zero_shard_rule``), so moments/master weights cost 1/dp_size per chip.
+
+  activation hints — ``hint(x, "batch", None, "model")`` places a
+    ``with_sharding_constraint`` when an activation mesh is active
+    (``use_activation_mesh``) and is an exact no-op otherwise, so model code
+    is mesh-agnostic and single-device tests never touch device state.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+MODEL_AXIS = "model"
+
+
+# ==========================================================================
+# Mesh-shape utilities.
+# ==========================================================================
+
+def mesh_shape_dict(mesh) -> dict[str, int]:
+    """{axis_name: size} for a jax Mesh (insertion order = mesh order)."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_axes(mesh_shape: dict[str, int]) -> tuple[str, ...]:
+    """All non-"model" axes, outermost first (the data-parallel group)."""
+    return tuple(a for a in mesh_shape if a != MODEL_AXIS)
+
+
+def dp_size(mesh_shape: dict[str, int]) -> int:
+    return math.prod(mesh_shape[a] for a in dp_axes(mesh_shape)) or 1
+
+
+def axis_if_divisible(axis: str, size: int, mesh_shape: dict[str, int]):
+    """``axis`` when ``size`` divides evenly over it, else None (replicate)."""
+    return axis if size % mesh_shape.get(axis, 1) == 0 else None
+
+
+def batch_spec_axis(mesh_shape: dict[str, int], batch: int):
+    """DP axes to shard a batch dim over: the longest suffix-aligned group
+    of DP axes whose product divides ``batch`` (single axis collapses to its
+    bare name, so ``P(batch_spec_axis(...), None)`` reads naturally)."""
+    axes = dp_axes(mesh_shape)
+    for i in range(len(axes)):
+        cand = axes[i:]
+        size = math.prod(mesh_shape[a] for a in cand)
+        if size > 1 and batch % size == 0:
+            return cand[0] if len(cand) == 1 else cand
+    return None
+
+
+def named(mesh, tree):
+    """PartitionSpec pytree -> NamedSharding pytree on ``mesh``."""
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ==========================================================================
+# ZeRO-1: optimizer state sharded over the DP group.
+# ==========================================================================
+
+def zero_shard_rule(spec: P, shape: tuple[int, ...],
+                    mesh_shape: dict[str, int]) -> P:
+    """Shard the largest free (unsharded) dim divisible by the full DP size
+    across the DP axes; leave the spec untouched when nothing fits."""
+    n = dp_size(mesh_shape)
+    axes = dp_axes(mesh_shape)
+    if n <= 1:
+        return spec
+    padded = tuple(spec) + (None,) * (len(shape) - len(spec))
+    best = None
+    for i, (dim, ax) in enumerate(zip(shape, padded)):
+        if ax is None and dim > 0 and dim % n == 0:
+            if best is None or dim > shape[best]:
+                best = i
+    if best is None:
+        return spec
+    out = list(padded)
+    out[best] = axes[0] if len(axes) == 1 else axes
+    return P(*out)
+
+
+def zero_shard_specs(specs, params, mesh_shape: dict[str, int]):
+    """Apply :func:`zero_shard_rule` leaf-for-leaf (params give the shapes)."""
+    return jax.tree.map(
+        lambda sp, p: zero_shard_rule(sp, p.shape, mesh_shape),
+        specs, params, is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(param_specs, params, mesh_shape: dict[str, int], *,
+                    master: bool = True):
+    """Spec tree mirroring ``optim.init``: moments (and the f32 master copy)
+    get the params' specs plus the ZeRO-1 DP sharding."""
+    z = zero_shard_specs(param_specs, params, mesh_shape)
+    out = {"step": P(), "m": z, "v": z}
+    if master:
+        out["master"] = z
+    return out
+
+
+# ==========================================================================
+# Activation sharding hints.
+# ==========================================================================
+
+_ACTIVATION_MESH = None
+
+
+@contextlib.contextmanager
+def use_activation_mesh(mesh):
+    """Within this context, :func:`hint` places real sharding constraints on
+    ``mesh``; outside it, hint is an exact no-op (single-device tests)."""
+    global _ACTIVATION_MESH
+    prev = _ACTIVATION_MESH
+    _ACTIVATION_MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _ACTIVATION_MESH = prev
+
+
+def hint(x, *axes):
+    """Constrain activation ``x`` dim-by-dim.  Axis entries are mesh axis
+    names, None (replicated), or the logical name "batch" which resolves to
+    the DP axis group.  Non-divisible dims silently fall back to replication
+    (the same contract as the param specs)."""
+    mesh = _ACTIVATION_MESH
+    if mesh is None:
+        return x
+    ms = mesh_shape_dict(mesh)
+    resolved = []
+    for dim, ax in zip(x.shape, axes):
+        if ax == "batch":
+            ax = batch_spec_axis(ms, dim)
+        elif ax is not None:
+            size = ms.get(ax, 1)
+            if size <= 1 or dim % size != 0:
+                ax = None
+        resolved.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))

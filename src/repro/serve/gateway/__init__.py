@@ -1,0 +1,26 @@
+"""Near-sensor serving gateway.
+
+The paper's premise is that the stochastic first layer is cheap enough to
+live *at the sensor*, so that reduced features — not raw pixels — cross the
+link to the host.  This package models the serving side of that story:
+
+  sensors.py   — a fleet of sensor endpoints emitting Poisson/bursty streams
+                 of frames (and token prompts for the LM path)
+  gateway.py   — the async micro-batching front door: fixed bucket shapes
+                 (so jit never recompiles), per-bucket deadlines, admission
+                 control and backpressure
+  frontend.py  — the separable at-sensor stage (SC vs binary first layer)
+                 and its link-payload accounting
+  telemetry.py — per-request energy (core.energy's calibrated model) + link
+                 bytes, aggregated into p50/p99 latency, throughput and
+                 J/inference
+  slots.py     — the family-generic slot batcher (state-slot for rwkv,
+                 per-slot-length KV slots for attention families) behind one
+                 adapter interface
+"""
+from repro.serve.gateway.slots import (ContinuousBatcher, KVSlotAdapter,
+                                       Request, StateSlotAdapter,
+                                       make_adapter)
+
+__all__ = ["ContinuousBatcher", "KVSlotAdapter", "Request",
+           "StateSlotAdapter", "make_adapter"]

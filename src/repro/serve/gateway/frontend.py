@@ -1,0 +1,143 @@
+"""The separable at-sensor stage and its link-payload accounting.
+
+Two partitions of the hybrid LeNet pipeline across the sensor->host link:
+
+  sc      — the paper's design point.  The SC engine's power envelope
+            (~33 mW flat across precisions, Table 3) fits at the sensor, so
+            conv1 (+ the trivial 2x2 sign max-pool) runs there and the link
+            carries ternary features packed at 2 bits/value as int8 words.
+  binary  — the conventional baseline.  The k-bit MAC datapath's power
+            (325 mW at 4 bits) does not fit the sensor envelope, so raw
+            8-bit pixels cross the link and conv1 runs host-side.
+
+Both partitions compute the *same* function (sign conv1 -> pool -> binary
+tail), so accuracy is comparable and the measured difference is exactly
+what the paper claims: energy and bytes moved.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import energy
+from repro.core.sc_layer import SCConfig
+from repro.models import lenet
+from repro.models.lenet import LeNetConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendSpec:
+    mode: str = "sc"                 # "sc" | "binary"
+    bits: int = 4                    # stream length 2**bits / MAC width
+    sc_impl: str = "table"
+    # near-sensor engine geometry: 8 first-layer kernels keep the packed
+    # feature payload (2 bits x 14x14x8 = 392 B) under the raw-pixel payload
+    # (784 B) that the binary partition must move.
+    lenet: LeNetConfig = LeNetConfig(conv1_filters=8, conv2_filters=16,
+                                     dense=64)
+
+    @property
+    def sc_cfg(self) -> SCConfig:
+        return SCConfig(bits=self.bits, adder="tff")
+
+
+# --------------------------------------------------------------------------
+# Link payload accounting.
+# --------------------------------------------------------------------------
+
+def link_bytes_per_frame(spec: FrontendSpec) -> int:
+    """Bytes/frame crossing the sensor->host link."""
+    c = spec.lenet
+    if spec.mode == "sc":
+        n_values = (c.image_size // 2) ** 2 * c.conv1_filters
+        return -(-2 * n_values // 8)          # 2-bit ternary, packed
+    if spec.mode == "binary":
+        return c.image_size ** 2 * c.channels  # raw 8-bit pixels
+    raise ValueError(spec.mode)
+
+
+def frame_energy_nj(spec: FrontendSpec) -> float:
+    """First-layer compute energy/frame from the calibrated Table-3 model,
+    projected onto this spec's layer geometry."""
+    c = spec.lenet
+    r = energy.scaled_report(
+        spec.bits,
+        k_window=c.ksize * c.ksize * c.channels,
+        n_units=c.image_size ** 2,
+        n_kernels=c.conv1_filters)
+    return r.sc_energy_nj if spec.mode == "sc" else r.bin_energy_nj
+
+
+def sensor_latency_s(spec: FrontendSpec) -> float:
+    """At-sensor processing latency before the payload hits the link: the SC
+    engine streams 2**bits cycles/frame; the binary partition transmits
+    immediately (its compute cost lands host-side in the service time)."""
+    if spec.mode != "sc":
+        return 0.0
+    c = spec.lenet
+    passes = c.conv1_filters / energy.N_KERNELS
+    return energy.frame_time_us(spec.bits) * passes * 1e-6
+
+
+# --------------------------------------------------------------------------
+# The two pipeline stages (pure functions of (params, batch)).
+# --------------------------------------------------------------------------
+
+def pack_ternary(h: jax.Array) -> jax.Array:
+    """(B, ...) values in {-1,0,1} -> (B, ceil(n/4)) uint8, 2 bits/value.
+    This IS the wire format: payload.nbytes matches link_bytes_per_frame."""
+    B = h.shape[0]
+    q = (h + 1.0).astype(jnp.uint8).reshape(B, -1)    # {0,1,2}
+    pad = (-q.shape[1]) % 4
+    q = jnp.pad(q, ((0, 0), (0, pad))).reshape(B, -1, 4)
+    return (q[..., 0] | (q[..., 1] << 2) | (q[..., 2] << 4)
+            | (q[..., 3] << 6)).astype(jnp.uint8)
+
+
+def unpack_ternary(packed: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    """Inverse of :func:`pack_ternary` -> float32 values in {-1,0,1}."""
+    B = packed.shape[0]
+    shifts = jnp.asarray([0, 2, 4, 6], jnp.uint8)
+    vals = (packed[..., None] >> shifts) & jnp.uint8(3)   # (B, n/4, 4)
+    n = 1
+    for d in shape:
+        n *= d
+    return vals.reshape(B, -1)[:, :n].astype(jnp.float32).reshape(
+        (B,) + shape) - 1.0
+
+
+def _pooled_shape(cfg: LeNetConfig) -> tuple[int, int, int]:
+    return (cfg.image_size // 2, cfg.image_size // 2, cfg.conv1_filters)
+
+
+def sensor_stage(params, frames_u8: jax.Array, spec: FrontendSpec):
+    """At-sensor compute.  frames_u8: (B, 28, 28, 1) uint8.
+
+    Returns the link payload: 2-bit-packed pooled ternary features for
+    "sc", the untouched frames for "binary" (sensor is a pass-through)."""
+    if spec.mode == "binary":
+        return frames_u8
+    x01 = frames_u8.astype(jnp.float32) / 255.0
+    h1 = lenet.first_layer(params, x01, mode="sc", sc_cfg=spec.sc_cfg,
+                           sc_impl=spec.sc_impl)      # (B,28,28,C) {-1,0,1}
+    return pack_ternary(lenet._maxpool(h1))           # (B, 2*14*14*C/8) u8
+
+
+def gateway_stage(params, payload: jax.Array, spec: FrontendSpec):
+    """Host-side compute: the binary-domain remainder (plus conv1 for the
+    binary partition).  Returns class logits (B, classes)."""
+    cfg = spec.lenet
+    if spec.mode == "binary":
+        x01 = payload.astype(jnp.float32) / 255.0
+        h1 = lenet.first_layer(params, x01, mode="binary", bits=spec.bits)
+        h = lenet._maxpool(h1)
+    else:
+        h = unpack_ternary(payload, _pooled_shape(cfg))
+    h = jax.nn.relu(lenet._conv(h, params["conv2"]["w"],
+                                params["conv2"]["b"]))
+    h = lenet._maxpool(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["dense1"]["w"] + params["dense1"]["b"])
+    return h @ params["dense2"]["w"] + params["dense2"]["b"]

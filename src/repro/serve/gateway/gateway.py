@@ -1,0 +1,223 @@
+"""Async micro-batching front door over virtual time.
+
+JetStream/SHARK-style serving shape: a small fixed set of padded batch
+shapes ("buckets"), one pre-compiled entry point per bucket, so the steady
+state never recompiles regardless of how ragged the arrival process is.
+The loop is a discrete-event simulation over virtual time — deterministic
+given a trace, while service times can still be *measured* from the real
+jitted computation (``service_model="measured"``) or pinned
+(``service_model="fixed"``) for tests.
+
+Per tick the gateway:
+  1. admits arrivals into a bounded queue (admission control: beyond
+     ``max_queue`` the request is rejected and counted — backpressure is
+     explicit, not an OOM);
+  2. flushes a batch when the largest bucket fills OR the oldest queued
+     request hits its ``max_delay_s`` deadline, padding up to the smallest
+     bucket that fits;
+  3. runs the two pipeline stages (at-sensor stage feeds the link; the
+     host stage occupies the server) and charges per-request telemetry.
+
+The LM path (``PromptGateway``) fronts the family-generic slot batcher the
+same way: arrivals admit into slots as they free up, one batched decode
+tick per virtual-time step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lenet
+from repro.serve.gateway import frontend as fe
+from repro.serve.gateway.sensors import Arrival
+from repro.serve.gateway.slots import ContinuousBatcher, Request
+from repro.serve.gateway.telemetry import (E_LINK_PJ_PER_BYTE, RequestRecord,
+                                           Telemetry)
+
+
+@dataclasses.dataclass(frozen=True)
+class GatewayConfig:
+    bucket_sizes: tuple[int, ...] = (1, 2, 4, 8, 16, 32)
+    max_queue: int = 128             # admission control bound
+    max_delay_s: float = 0.02        # oldest-request flush deadline
+    link_mbps: float = 32.0          # sensor->host link bandwidth (Mbit/s)
+    service_model: str = "measured"  # "measured" | "fixed"
+    fixed_service_s: float = 0.0     # per-batch service time for "fixed"
+
+    def __post_init__(self):
+        assert tuple(sorted(self.bucket_sizes)) == tuple(self.bucket_sizes)
+
+
+class MicroBatchGateway:
+    """The frame path: sensor fleet -> buckets -> frontend offload -> tail."""
+
+    def __init__(self, cfg: GatewayConfig, spec: fe.FrontendSpec,
+                 params=None, seed: int = 0):
+        self.cfg = cfg
+        self.spec = spec
+        self.params = params if params is not None else \
+            lenet.init(jax.random.key(seed), spec.lenet)
+        # one fixed-shape entry point per bucket (never recompiles)
+        self._sensor_fns = {
+            bs: jax.jit(lambda p, x, _s=spec: fe.sensor_stage(p, x, _s))
+            for bs in cfg.bucket_sizes}
+        self._gateway_fns = {
+            bs: jax.jit(lambda p, x, _s=spec: fe.gateway_stage(p, x, _s))
+            for bs in cfg.bucket_sizes}
+        self._frame_energy_nj = fe.frame_energy_nj(spec)
+        self._link_bytes = fe.link_bytes_per_frame(spec)
+        self._sensor_lat = fe.sensor_latency_s(spec)
+        self._link_lat = self._link_bytes * 8 / (cfg.link_mbps * 1e6)
+
+    # -- compile management -------------------------------------------------
+    def warmup(self) -> None:
+        """Compile every bucket up front (steady state then never compiles)."""
+        for bs in self.cfg.bucket_sizes:
+            x = jnp.zeros((bs, self.spec.lenet.image_size,
+                           self.spec.lenet.image_size,
+                           self.spec.lenet.channels), jnp.uint8)
+            payload = self._sensor_fns[bs](self.params, x)
+            jax.block_until_ready(self._gateway_fns[bs](self.params, payload))
+
+    def compile_counts(self) -> dict[int, int]:
+        """jit-cache sizes per bucket (tests assert these stay at 1)."""
+        return {bs: self._sensor_fns[bs]._cache_size()
+                + self._gateway_fns[bs]._cache_size()
+                for bs in self.cfg.bucket_sizes}
+
+    # -- one batch ----------------------------------------------------------
+    def _bucket_for(self, n: int) -> int:
+        for bs in self.cfg.bucket_sizes:
+            if bs >= n:
+                return bs
+        return self.cfg.bucket_sizes[-1]
+
+    def _serve_batch(self, frames: np.ndarray, bs: int):
+        """Returns (predictions, host_service_seconds)."""
+        x = jnp.asarray(frames)
+        payload = jax.block_until_ready(
+            self._sensor_fns[bs](self.params, x))   # at-sensor (not server time)
+        t0 = time.perf_counter()
+        logits = jax.block_until_ready(
+            self._gateway_fns[bs](self.params, payload))
+        svc = time.perf_counter() - t0
+        if self.cfg.service_model == "fixed":
+            svc = self.cfg.fixed_service_s
+        return np.asarray(jnp.argmax(logits, -1)), svc
+
+    # -- the event loop -----------------------------------------------------
+    def run(self, arrivals: list[Arrival],
+            telemetry: Telemetry | None = None) -> Telemetry:
+        tel = telemetry if telemetry is not None else Telemetry()
+        arrivals = [a for a in arrivals if a.kind == "frame"]
+        # payload hits the gateway queue after at-sensor compute + link time
+        offset = self._sensor_lat + self._link_lat
+        queue: deque[Arrival] = deque()
+        max_bs = self.cfg.bucket_sizes[-1]
+        now, i, n = 0.0, 0, len(arrivals)
+
+        def admit_until(t: float):
+            nonlocal i
+            while i < n and arrivals[i].t + offset <= t:
+                a = arrivals[i]
+                i += 1
+                if len(queue) >= self.cfg.max_queue:
+                    tel.drop(a.uid, "frame")      # backpressure: reject
+                else:
+                    queue.append(a)
+
+        while i < n or queue:
+            if not queue:
+                now = max(now, arrivals[i].t + offset)
+            admit_until(now)
+            if not queue:
+                continue
+            # wait (in virtual time) for a full bucket or the deadline
+            deadline = queue[0].t + offset + self.cfg.max_delay_s
+            while len(queue) < max_bs and i < n and \
+                    arrivals[i].t + offset <= deadline:
+                now = max(now, arrivals[i].t + offset)
+                admit_until(now)
+            if len(queue) < max_bs:
+                now = max(now, deadline)
+            batch = [queue.popleft()
+                     for _ in range(min(len(queue), max_bs))]
+            bs = self._bucket_for(len(batch))
+            frames = np.zeros((bs,) + batch[0].payload.shape, np.uint8)
+            for j, a in enumerate(batch):
+                frames[j] = a.payload
+            preds, svc = self._serve_batch(frames, bs)
+            now += svc
+            energy_nj = self._frame_energy_nj \
+                + self._link_bytes * E_LINK_PJ_PER_BYTE * 1e-3
+            for j, a in enumerate(batch):
+                tel.record(RequestRecord(
+                    uid=a.uid, endpoint=a.endpoint, kind="frame",
+                    t_arrival=a.t, t_done=now, energy_nj=energy_nj,
+                    link_bytes=self._link_bytes, output=int(preds[j])))
+        return tel
+
+
+class PromptGateway:
+    """The LM path: arrivals -> family-generic slot batcher, virtual time.
+
+    Same contracts as the frame path: ``warmup`` pre-compiles prefill (per
+    prompt length) and the batched decode so one-time XLA compilation never
+    lands in the virtual clock, and admission is bounded by ``max_queue``
+    (excess prompts are rejected and counted, not queued without bound).
+    """
+
+    def __init__(self, batcher: ContinuousBatcher, max_new_tokens: int = 16,
+                 bytes_per_token: int = 4, max_queue: int = 64):
+        self.batcher = batcher
+        self.max_new_tokens = max_new_tokens
+        self.bytes_per_token = bytes_per_token
+        self.max_queue = max_queue
+
+    def warmup(self, prompt_lens: tuple[int, ...], vocab: int = 2) -> None:
+        """Drain one dummy request per prompt length through the batcher
+        (compiles prefill for each length + the batched decode); adapters
+        clear slot state on retire, so real traffic is unaffected.
+        max_new_tokens=2 forces at least one decode tick — a 1-token budget
+        would retire at admission and leave decode uncompiled."""
+        for j, n in enumerate(prompt_lens):
+            self.batcher.submit(Request(
+                uid=-1 - j, prompt=np.zeros((n,), np.int32),
+                max_new_tokens=2))
+        self.batcher.run()
+
+    def run(self, arrivals: list[Arrival],
+            telemetry: Telemetry | None = None) -> Telemetry:
+        tel = telemetry if telemetry is not None else Telemetry()
+        arrivals = [a for a in arrivals if a.kind == "prompt"]
+        arr_t = {a.uid: a.t for a in arrivals}
+        arr_ep = {a.uid: a.endpoint for a in arrivals}
+        now, i, n = 0.0, 0, len(arrivals)
+        while i < n or self.batcher.busy:
+            if not self.batcher.busy:
+                now = max(now, arrivals[i].t)
+            while i < n and arrivals[i].t <= now:
+                a = arrivals[i]
+                i += 1
+                if len(self.batcher.pending) >= self.max_queue:
+                    tel.drop(a.uid, "prompt")
+                    continue
+                self.batcher.submit(Request(
+                    uid=a.uid, prompt=np.asarray(a.payload, np.int32),
+                    max_new_tokens=self.max_new_tokens))
+            t0 = time.perf_counter()
+            finished = self.batcher.step()
+            now += time.perf_counter() - t0
+            for req in finished:
+                link = self.bytes_per_token * (len(req.prompt)
+                                               + len(req.generated))
+                tel.record(RequestRecord(
+                    uid=req.uid, endpoint=arr_ep[req.uid], kind="prompt",
+                    t_arrival=arr_t[req.uid], t_done=now, energy_nj=0.0,
+                    link_bytes=link, output=req.generated[-1]))
+        return tel

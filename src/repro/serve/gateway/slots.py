@@ -1,0 +1,250 @@
+"""Family-generic continuous batching: slot adapters + one scheduler loop.
+
+The scheduler (admit / decode / retire) is family-agnostic; what differs
+between model families is only how a slot's context is stored:
+
+  StateSlotAdapter — O(1)-state families (rwkv): a request's entire context
+    is a state pytree, so admission is a single scatter into the batched
+    slot arrays and there are no position-alignment concerns.
+
+  KVSlotAdapter — attention-cache families (decoder/moe/hybrid/encdec): each
+    slot owns a B=1 cache (k/v padded to ``max_len``) with its *own* length,
+    stacked on a leading slot axis.  The batched decode is a vmapped
+    ``engine.decode_step``, which threads the per-slot lengths through
+    ``attend_decode`` automatically — slots at different positions decode
+    together in one fixed-shape compiled call.
+
+Both adapters mask state writes with the active-slot mask inside the
+batched decode, so a freed (or never-admitted) slot keeps exactly the
+state ``clear`` left it instead of decoding stale context forward between
+retirement and the next admission.  ``clear`` semantics differ by adapter:
+StateSlotAdapter zeroes the slot's state arrays; KVSlotAdapter resets the
+slot's length to 0 — its k/v contents are stale but inert (nothing reads
+past ``len``) and are fully overwritten by the next admission's padded
+prefill.  Code that reads raw cache contents must consult ``len``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LMConfig
+from repro.serve import engine
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    generated: list = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        if self.eos_id is not None and self.generated and \
+                self.generated[-1] == self.eos_id:
+            return True
+        return len(self.generated) >= self.max_new_tokens
+
+
+# ==========================================================================
+# Adapters.
+# ==========================================================================
+
+class StateSlotAdapter:
+    """State-slot engine for the rwkv family (batched decode over slots)."""
+
+    STATE_KEYS = ("wkv", "shift1", "shift2")
+
+    def __init__(self, cfg: LMConfig, params, n_slots: int):
+        assert cfg.family == "rwkv", cfg.family
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = None                      # O(1) state: no length cap
+        self.state = engine.init_cache(cfg, n_slots, 1)
+        self._prefill = jax.jit(lambda p, b: engine.prefill(cfg, p, b))
+
+        def _step(p, state, tokens, mask):
+            new_cache, logits = engine.decode_step(cfg, p, state, tokens)
+            masked = {"len": state["len"]}
+            for key in self.STATE_KEYS:
+                m = mask.reshape((1, -1) + (1,) * (new_cache[key].ndim - 2))
+                masked[key] = jnp.where(m, new_cache[key], state[key])
+            return masked, logits
+        self._decode = jax.jit(_step)
+
+    def insert(self, slot: int, prompt: np.ndarray) -> int:
+        cache1, logits = self._prefill(
+            self.params, {"tokens": jnp.asarray(prompt[None])})
+        for key in self.STATE_KEYS:
+            self.state[key] = self.state[key].at[:, slot].set(
+                cache1[key][:, 0])
+        return int(jnp.argmax(logits[0]))
+
+    def clear(self, slot: int) -> None:
+        for key in self.STATE_KEYS:
+            self.state[key] = self.state[key].at[:, slot].set(0)
+
+    def decode(self, tokens: np.ndarray, active: np.ndarray) -> np.ndarray:
+        self.state, logits = self._decode(
+            self.params, self.state, jnp.asarray(tokens, jnp.int32)[:, None],
+            jnp.asarray(active, bool))
+        return np.asarray(jnp.argmax(logits, -1))
+
+
+class KVSlotAdapter:
+    """KV-slot engine for attention-cache families, per-slot lengths.
+
+    The stacked cache holds one B=1 cache per slot (leading axis =
+    ``n_slots``); ``cache["len"]`` is a (n_slots,) vector.  Decode is one
+    jitted vmap of :func:`engine.decode_step` — fixed shapes, one
+    compilation, any mix of slot positions.
+    """
+
+    # cache keys whose axis -3 is the sequence axis (padded to max_len);
+    # cross-attention keys (xk/xv) are fixed-length and never padded.
+    SEQ_KEYS = ("k", "v", "k_scale", "v_scale", "kx_self", "vx_self")
+
+    def __init__(self, cfg: LMConfig, params, n_slots: int, max_len: int,
+                 extras: Callable[[], dict] | None = None):
+        assert cfg.family != "rwkv", "use StateSlotAdapter for rwkv"
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.extras = extras
+        cache0 = engine.init_cache(cfg, 1, max_len)
+        self.cache = jax.tree.map(
+            lambda a: jnp.zeros((n_slots,) + a.shape, a.dtype), cache0)
+        self._prefill = jax.jit(lambda p, b: engine.prefill(cfg, p, b))
+
+        def _step(p, cache, tokens, mask):
+            new_cache, logits = jax.vmap(
+                lambda c, t: engine.decode_step(cfg, p, c, t),
+                in_axes=(0, 0))(cache, tokens)
+            sel = lambda new, old: jnp.where(
+                mask.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
+            return jax.tree.map(sel, new_cache, cache), logits
+        self._decode = jax.jit(_step)
+
+    def insert(self, slot: int, prompt: np.ndarray) -> int:
+        if len(prompt) > self.max_len:
+            raise ValueError(f"prompt length {len(prompt)} exceeds slot "
+                             f"capacity {self.max_len}")
+        batch = {"tokens": jnp.asarray(prompt[None])}
+        if self.extras is not None:
+            batch.update(self.extras())
+        cache1, logits = self._prefill(self.params, batch)
+        cache1 = dict(cache1)
+        for key in self.SEQ_KEYS:
+            if key in cache1:
+                a = cache1[key]
+                pad = [(0, 0)] * a.ndim
+                pad[-3] = (0, self.max_len - a.shape[-3])
+                cache1[key] = jnp.pad(a, pad)
+        self.cache = jax.tree.map(lambda sl, c1: sl.at[slot].set(c1),
+                                  self.cache, cache1)
+        return int(jnp.argmax(logits[0]))
+
+    def clear(self, slot: int) -> None:
+        # length 0 masks the slot: its (garbage) decodes write at pos 0 and
+        # never walk the cache forward; admission overwrites everything.
+        self.cache["len"] = self.cache["len"].at[slot].set(0)
+
+    def decode(self, tokens: np.ndarray, active: np.ndarray) -> np.ndarray:
+        t = jnp.asarray(tokens, jnp.int32)[:, None, None]    # (slots, 1, 1)
+        self.cache, logits = self._decode(self.params, self.cache, t,
+                                          jnp.asarray(active, bool))
+        return np.asarray(jnp.argmax(logits[:, 0], -1))
+
+
+def make_adapter(cfg: LMConfig, params, n_slots: int, max_len: int = 128,
+                 extras: Callable[[], dict] | None = None):
+    """Family dispatch: state slots for rwkv, KV slots for everything else."""
+    if cfg.family == "rwkv":
+        return StateSlotAdapter(cfg, params, n_slots)
+    return KVSlotAdapter(cfg, params, n_slots, max_len, extras)
+
+
+# ==========================================================================
+# The scheduler loop (family-agnostic).
+# ==========================================================================
+
+class ContinuousBatcher:
+    """vLLM-style continuous batching over any slot adapter.
+
+    Flow per step():
+      1. admit: for each free slot, pop a pending request, prefill (B=1) and
+         scatter its context into the slot; a request whose prefill token
+         already finishes it (EOS or a 1-token budget) retires immediately
+         without occupying the slot;
+      2. decode: one batched decode over all slots;
+      3. retire: finished requests free their slot and the adapter zeroes
+         the slot's state so it cannot keep evolving between admissions.
+    """
+
+    def __init__(self, adapter):
+        self.adapter = adapter
+        self.n_slots = adapter.n_slots
+        self.pending: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * self.n_slots
+        self.last_token = np.zeros((self.n_slots,), np.int32)
+
+    def submit(self, req: Request):
+        if self.adapter.max_len is not None and \
+                len(req.prompt) + req.max_new_tokens > self.adapter.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt {len(req.prompt)} + "
+                f"{req.max_new_tokens} new tokens exceeds slot capacity "
+                f"{self.adapter.max_len}")
+        self.pending.append(req)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.pending) or any(r is not None for r in self.active)
+
+    def step(self) -> list[Request]:
+        """Admit + one decode tick.  Returns requests completed this tick."""
+        finished: list[Request] = []
+        for slot in range(self.n_slots):
+            while self.active[slot] is None and self.pending:
+                req = self.pending.popleft()
+                tok = self.adapter.insert(
+                    slot, np.asarray(req.prompt, np.int32))
+                req.generated.append(tok)
+                if req.done:            # EOS fired on the prefill token
+                    self.adapter.clear(slot)
+                    finished.append(req)
+                    continue
+                self.active[slot] = req
+                self.last_token[slot] = tok
+        active = np.asarray([r is not None for r in self.active])
+        if not active.any():
+            return finished
+        toks = self.adapter.decode(self.last_token, active)
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(toks[slot])
+            req.generated.append(tok)
+            self.last_token[slot] = tok
+            if req.done:
+                finished.append(req)
+                self.active[slot] = None
+                self.adapter.clear(slot)
+                self.last_token[slot] = 0
+        return finished
+
+    def run(self) -> list[Request]:
+        """Drain the queue; returns all completed requests."""
+        done: list[Request] = []
+        while self.busy:
+            done.extend(self.step())
+        return done

@@ -1,109 +1,37 @@
-"""Continuous batching: a slot-based request scheduler over the decode
-engine (vLLM-style admission, without leaving decode idle while prompts
-queue).
+"""Continuous batching front (compatibility module).
 
-The reference adapter targets the RWKV family, where a request's entire
-context is an O(1) state pytree — slot admission is a single state insert
-and there are no per-slot position/length alignment concerns (one of the
-operational payoffs of state-space serving that the long_500k cells
-exercise).  Attention-cache adapters additionally need per-slot lengths
-threaded through `attend_decode` (left as the documented extension).
+The scheduler now lives in :mod:`repro.serve.gateway.slots` as a
+family-generic loop over slot adapters: state-slot for the RWKV family
+(O(1) state, single scatter on admission) and per-slot-length KV slots for
+the attention families (decoder/moe/hybrid/encdec) via a vmapped
+``engine.decode_step``.  The rwkv-only restriction this module used to
+carry — and its "attention adapters left as the documented extension"
+note — is gone; ``RwkvContinuousBatcher`` remains as the established
+entry point for the rwkv family.
 
-Flow per step():
-  1. admit: for each free slot, pop a pending request, prefill it (B=1) and
-     scatter its state into the batched slot arrays;
-  2. decode: one batched decode_step over all slots;
-  3. retire: slots whose request hit max_new_tokens (or EOS) free up.
+Retired slots are masked: decode-state writes for freed slots are
+suppressed and the adapter clears the slot (zeroed state for rwkv,
+length-0 for KV caches), so a slot no longer keeps decoding stale context
+between retirement and the next admission, and EOS is honored even when
+the prefill-produced token is already the EOS token.
 """
 from __future__ import annotations
 
-import dataclasses
-from collections import deque
-from typing import Callable
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.models import lm
-from repro.serve import engine
+from repro.serve.gateway.slots import (ContinuousBatcher, KVSlotAdapter,
+                                       Request, StateSlotAdapter,
+                                       make_adapter)
+
+__all__ = ["ContinuousBatcher", "KVSlotAdapter", "Request",
+           "RwkvContinuousBatcher", "StateSlotAdapter", "make_adapter"]
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray              # (S,) int32
-    max_new_tokens: int = 16
-    eos_id: int | None = None
-    generated: list = dataclasses.field(default_factory=list)
-
-    @property
-    def done(self) -> bool:
-        if self.eos_id is not None and self.generated and \
-                self.generated[-1] == self.eos_id:
-            return True
-        return len(self.generated) >= self.max_new_tokens
-
-
-class RwkvContinuousBatcher:
+class RwkvContinuousBatcher(ContinuousBatcher):
     """Continuous batching for the rwkv family (state-slot engine)."""
 
     def __init__(self, cfg: lm.LMConfig, params, n_slots: int = 4):
         assert cfg.family == "rwkv"
+        super().__init__(StateSlotAdapter(cfg, params, n_slots))
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
-        self.pending: deque[Request] = deque()
-        self.active: list[Request | None] = [None] * n_slots
-        self.state = engine.init_cache(cfg, n_slots, 1)   # batched slots
-        self.last_token = jnp.zeros((n_slots, 1), jnp.int32)
-        self._prefill = jax.jit(lambda p, b: engine.prefill(cfg, p, b))
-        self._decode = jax.jit(
-            lambda p, c, t: engine.decode_step(cfg, p, c, t))
-
-    def submit(self, req: Request):
-        self.pending.append(req)
-
-    # -- internal ----------------------------------------------------------
-    def _insert_slot(self, slot: int, req: Request):
-        cache1, logits = self._prefill(
-            self.params, {"tokens": jnp.asarray(req.prompt[None])})
-        for key in ("wkv", "shift1", "shift2"):
-            self.state[key] = self.state[key].at[:, slot].set(
-                cache1[key][:, 0])
-        tok = int(jnp.argmax(logits[0]))
-        req.generated.append(tok)
-        self.last_token = self.last_token.at[slot, 0].set(tok)
-        self.active[slot] = req
-
-    def step(self) -> list[Request]:
-        """Admit + one decode tick.  Returns requests completed this tick."""
-        for slot in range(self.n_slots):
-            if self.active[slot] is None and self.pending:
-                self._insert_slot(slot, self.pending.popleft())
-        if not any(r is not None for r in self.active):
-            return []
-        new_cache, logits = self._decode(self.params, self.state,
-                                         self.last_token)
-        for key in ("wkv", "shift1", "shift2"):
-            self.state[key] = new_cache[key]
-        toks = np.asarray(jnp.argmax(logits, -1))
-        finished = []
-        for slot, req in enumerate(self.active):
-            if req is None:
-                continue
-            tok = int(toks[slot])
-            req.generated.append(tok)
-            self.last_token = self.last_token.at[slot, 0].set(tok)
-            if req.done:
-                finished.append(req)
-                self.active[slot] = None   # slot freed; state overwritten
-                                           # on next admission
-        return finished
-
-    def run(self) -> list[Request]:
-        """Drain the queue; returns all completed requests."""
-        done: list[Request] = []
-        while self.pending or any(r is not None for r in self.active):
-            done.extend(self.step())
-        return done

@@ -1,0 +1,91 @@
+"""Deterministic stand-in for ``hypothesis`` on bare environments.
+
+The tier-1 suite must collect and run green without any packages beyond
+jax + pytest (the container contract).  When ``hypothesis`` is installed the
+test files use it unchanged; when it is missing they fall back to this shim,
+which turns each ``@given`` property into a fixed parameter sweep:
+
+  - the boundary combination (every strategy at its minimum) and the
+    opposite corner (every strategy at its maximum) always run;
+  - the remaining ``settings(max_examples=N)`` budget is filled with draws
+    from a fixed-seed generator, so failures reproduce exactly.
+
+No shrinking, ``assume``, or stateful testing — none of the suite's
+properties need them.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+
+import numpy as np
+
+_SEED = 0x5EED
+
+
+class _Strategy:
+    def __init__(self, boundary, sample):
+        self.boundary = boundary      # (lo_example, hi_example)
+        self.sample = sample          # rng -> value
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy((min_value, max_value),
+                     lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy((elements[0], elements[-1]),
+                     lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def _booleans() -> _Strategy:
+    return _Strategy((False, True), lambda rng: bool(rng.integers(2)))
+
+
+def _floats(min_value=0.0, max_value=1.0, **_kw) -> _Strategy:
+    return _Strategy((min_value, max_value),
+                     lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+st = types.SimpleNamespace(integers=_integers, sampled_from=_sampled_from,
+                           booleans=_booleans, floats=_floats)
+strategies = st
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    """Record the example budget; accepted in either decorator order."""
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+    return deco
+
+
+def _examples(strats, n):
+    combos = [tuple(s.boundary[0] for s in strats),
+              tuple(s.boundary[1] for s in strats)]
+    rng = np.random.default_rng(_SEED)
+    while len(combos) < n:
+        combos.append(tuple(s.sample(rng) for s in strats))
+    return combos[:max(n, 1)]
+
+
+def given(*strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_compat_max_examples", 20)
+            for ex in _examples(strats, n):
+                fn(*args, *ex, **kwargs)
+
+        # Hide the strategy-supplied parameters from pytest's fixture
+        # resolution (hypothesis does the same via its own wrapper).
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        if strats:
+            params = params[:-len(strats)]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+    return deco

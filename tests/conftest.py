@@ -5,3 +5,26 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def sequential_decode_reference(cfg, params, prompt, n_new, max_len=None):
+    """Single-request greedy decode oracle: prefill then n_new-1 decode
+    steps, argmax at each.  ``max_len`` pads attention k/v caches so decode
+    can write past the prompt (None for O(1)-state families)."""
+    import jax.numpy as jnp
+    from repro.serve import engine
+
+    cache, logits = engine.prefill(cfg, params,
+                                   {"tokens": jnp.asarray(prompt[None])})
+    if max_len is not None:
+        for k in ("k", "v"):
+            if k in cache:
+                pad = [(0, 0)] * cache[k].ndim
+                pad[-3] = (0, max_len - cache[k].shape[-3])
+                cache[k] = jnp.pad(cache[k], pad)
+    toks = [int(jnp.argmax(logits[0]))]
+    for _ in range(n_new - 1):
+        cache, logits = engine.decode_step(
+            cfg, params, cache, jnp.asarray([[toks[-1]]], jnp.int32))
+        toks.append(int(jnp.argmax(logits[0])))
+    return toks

@@ -2,7 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # bare env: deterministic sweep fallback
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import arith, bitstream as bs, sng
 

@@ -1,6 +1,9 @@
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # bare env: deterministic sweep fallback
+    from _hypothesis_compat import given, settings, st
 
 from repro.dist import compress
 

@@ -60,7 +60,11 @@ _SUBPROCESS_PROG = textwrap.dedent("""
     cfg = lm.LMConfig(name="t", family="decoder", n_layers=2, d_model=64,
                       n_heads=4, n_kv_heads=2, d_head=16, d_ff=128,
                       vocab=256, remat="full")
-    tcfg = TrainConfig(microbatches=2)
+    # lr sized so the tiny model visibly learns inside the 10-step budget
+    tcfg = TrainConfig(microbatches=2,
+                       adamw=optim.AdamWConfig(lr=1e-2, weight_decay=0.1,
+                                               grad_clip=1.0,
+                                               master_dtype=jnp.float32))
     with shd.use_activation_mesh(mesh):
         params, specs = lm.init(jax.random.key(0), cfg, ms)
         params = jax.device_put(params, shd.named(mesh, specs))

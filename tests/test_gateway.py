@@ -1,0 +1,214 @@
+"""Near-sensor serving gateway: bucket-shape stability (no recompiles),
+backpressure under oversubscription, telemetry conservation, and
+slot-batcher parity across model families."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import sequential_decode_reference
+
+from repro import configs
+from repro.models import lm
+from repro.serve.gateway import frontend as fe
+from repro.serve.gateway.gateway import (GatewayConfig, MicroBatchGateway,
+                                         PromptGateway)
+from repro.serve.gateway.sensors import Arrival, FleetConfig, SensorFleet
+from repro.serve.gateway.slots import (ContinuousBatcher, Request,
+                                       make_adapter)
+from repro.serve.gateway.telemetry import Telemetry
+
+
+def _frame_trace(n, dt=0.001, start=0.0):
+    """Synthetic arrivals with a fixed inter-arrival time."""
+    rng = np.random.default_rng(0)
+    frames = rng.integers(0, 255, size=(n, 28, 28, 1), dtype=np.uint8)
+    return [Arrival(uid=i, t=start + i * dt, endpoint=i % 4, kind="frame",
+                    payload=frames[i]) for i in range(n)]
+
+
+# ==========================================================================
+# Micro-batching gateway (frame path).
+# ==========================================================================
+
+def test_bucket_shapes_never_recompile():
+    """After warmup, arbitrary traffic reuses the per-bucket executables —
+    the jit caches must stay at exactly one entry per stage per bucket."""
+    spec = fe.FrontendSpec(mode="sc", bits=2)
+    gw = MicroBatchGateway(GatewayConfig(bucket_sizes=(1, 2, 4),
+                                         service_model="fixed",
+                                         fixed_service_s=1e-4), spec)
+    gw.warmup()
+    baseline = gw.compile_counts()
+    assert all(v == 2 for v in baseline.values()), baseline  # sensor+gateway
+    for trace in (_frame_trace(1), _frame_trace(7), _frame_trace(23),
+                  _frame_trace(5, dt=0.1)):    # ragged + sparse arrivals
+        gw.run(trace)
+    assert gw.compile_counts() == baseline
+
+
+def test_backpressure_rejects_beyond_queue_bound():
+    """Oversubscription (service slower than offered load) must shed load
+    through admission control, not grow the queue without bound."""
+    spec = fe.FrontendSpec(mode="binary", bits=4)
+    cfg = GatewayConfig(bucket_sizes=(1, 2), max_queue=4,
+                        max_delay_s=0.001, service_model="fixed",
+                        fixed_service_s=0.05)      # 2/0.05 = 40 Hz capacity
+    gw = MicroBatchGateway(cfg, spec)
+    gw.warmup()
+    trace = _frame_trace(200, dt=0.001)            # 1000 Hz offered
+    tel = gw.run(trace)
+    assert len(tel.dropped) > 0
+    assert len(tel.records) + len(tel.dropped) == len(trace)
+    # every admitted request completed and was charged
+    tel.assert_conserved()
+
+
+def test_deadline_flush_bounds_latency_when_idle():
+    """A lone request must not wait for a full bucket: the deadline flushes
+    it after max_delay_s (plus service + link/sensor offsets)."""
+    spec = fe.FrontendSpec(mode="sc", bits=2)
+    cfg = GatewayConfig(bucket_sizes=(1, 2, 4, 8), max_delay_s=0.005,
+                        service_model="fixed", fixed_service_s=1e-4)
+    gw = MicroBatchGateway(cfg, spec)
+    gw.warmup()
+    tel = gw.run(_frame_trace(1))
+    assert len(tel.records) == 1
+    lat = tel.records[0].latency_s
+    assert lat < 0.05, lat
+
+
+def test_telemetry_energy_conservation_and_link_bytes():
+    """Sum of per-request energy equals the fleet total exactly, and the sc
+    partition moves strictly fewer bytes/frame than the binary one."""
+    trace = _frame_trace(40)
+    per_frontend = {}
+    for mode in ("sc", "binary"):
+        spec = fe.FrontendSpec(mode=mode, bits=4)
+        gw = MicroBatchGateway(GatewayConfig(service_model="fixed",
+                                             fixed_service_s=1e-4), spec)
+        gw.warmup()
+        tel = gw.run(trace)
+        tel.assert_conserved()
+        assert len(tel.records) == len(trace)
+        per_req = sum(r.energy_nj for r in tel.records)
+        assert per_req == pytest.approx(tel.fleet_energy_nj, abs=1e-9)
+        per_frontend[mode] = (fe.link_bytes_per_frame(spec),
+                              tel.report(1.0)["mean_energy_nj"])
+    assert per_frontend["sc"][0] < per_frontend["binary"][0]
+    assert per_frontend["sc"][1] < per_frontend["binary"][1]
+
+
+def test_ternary_wire_format_roundtrip_matches_accounting():
+    """The packed payload IS the accounted wire format: nbytes equals
+    link_bytes_per_frame, and unpack inverts pack exactly."""
+    spec = fe.FrontendSpec(mode="sc", bits=2)
+    c = spec.lenet
+    shape = (c.image_size // 2, c.image_size // 2, c.conv1_filters)
+    rng = np.random.default_rng(0)
+    h = rng.integers(-1, 2, (3,) + shape).astype(np.float32)
+    packed = fe.pack_ternary(jnp.asarray(h))
+    assert packed.dtype == jnp.uint8
+    assert packed[0].nbytes == fe.link_bytes_per_frame(spec)
+    out = np.asarray(fe.unpack_ternary(packed, shape))
+    np.testing.assert_array_equal(out, h)
+
+
+def test_fleet_trace_deterministic():
+    f1 = SensorFleet(FleetConfig(n_endpoints=4, frame_rate_hz=8.0,
+                                 image_pool=16, seed=3))
+    f2 = SensorFleet(FleetConfig(n_endpoints=4, frame_rate_hz=8.0,
+                                 image_pool=16, seed=3))
+    e1, e2 = f1.events(2.0), f2.events(2.0)
+    assert [a.t for a in e1] == [a.t for a in e2]
+    assert all(np.array_equal(a.payload, b.payload)
+               for a, b in zip(e1, e2))
+
+
+# ==========================================================================
+# Family-generic slot batcher.
+# ==========================================================================
+
+@pytest.mark.parametrize("arch", ["stablelm_3b", "hymba_1_5b",
+                                  "deepseek_moe_16b"])
+def test_decoder_family_slot_batcher_parity(arch):
+    """Attention-cache families (decoder / hybrid / moe) serve through the
+    same slot batcher API as rwkv, with token-level parity vs sequential
+    decode_step."""
+    cfg = dataclasses.replace(configs.smoke_config(arch),
+                              param_dtype="float32")
+    params, _ = lm.init(jax.random.key(0), cfg, {})
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=s).astype(np.int32)
+               for s in (5, 9, 7)]
+    n_new, max_len = 4, 32
+    batcher = ContinuousBatcher(
+        make_adapter(cfg, params, n_slots=2, max_len=max_len))
+    for i, p in enumerate(prompts):           # 3 requests > 2 slots
+        batcher.submit(Request(uid=i, prompt=p, max_new_tokens=n_new))
+    got = {r.uid: r.generated for r in batcher.run()}
+    assert len(got) == len(prompts)
+    for i, p in enumerate(prompts):
+        want = sequential_decode_reference(cfg, params, p, n_new, max_len)
+        assert got[i] == want, (i, got[i], want)
+
+
+def test_freed_slots_do_not_decode_stale_state():
+    """After draining, every slot's state is exactly the cleared value —
+    freed slots must not keep evolving stale context between admissions."""
+    cfg = dataclasses.replace(configs.smoke_config("rwkv6_7b"),
+                              param_dtype="float32")
+    params, _ = lm.init(jax.random.key(0), cfg, {})
+    rng = np.random.default_rng(1)
+    batcher = ContinuousBatcher(make_adapter(cfg, params, n_slots=2))
+    batcher.submit(Request(uid=0,
+                           prompt=rng.integers(0, cfg.vocab, size=6,
+                                               dtype=np.int32),
+                           max_new_tokens=4))
+    batcher.run()
+    for key in ("wkv", "shift1", "shift2"):
+        a = np.asarray(batcher.adapter.state[key], np.float32)
+        assert np.abs(a).max() == 0.0, key
+
+
+def test_eos_honored_on_prefill_token():
+    cfg = dataclasses.replace(configs.smoke_config("rwkv6_7b"),
+                              param_dtype="float32")
+    params, _ = lm.init(jax.random.key(0), cfg, {})
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab, size=6, dtype=np.int32)
+    probe = ContinuousBatcher(make_adapter(cfg, params, n_slots=1))
+    probe.submit(Request(uid=0, prompt=prompt, max_new_tokens=1))
+    first_tok = probe.run()[0].generated[0]
+
+    batcher = ContinuousBatcher(make_adapter(cfg, params, n_slots=1))
+    batcher.submit(Request(uid=1, prompt=prompt, max_new_tokens=8,
+                           eos_id=first_tok))
+    done = batcher.run()
+    assert done[0].generated == [first_tok]
+
+
+def test_prompt_gateway_serves_lm_path():
+    cfg = dataclasses.replace(configs.smoke_config("rwkv6_7b"),
+                              param_dtype="float32")
+    params, _ = lm.init(jax.random.key(0), cfg, {})
+    rng = np.random.default_rng(3)
+    arrivals = [Arrival(uid=i, t=0.01 * i, endpoint=i, kind="prompt",
+                        payload=rng.integers(0, cfg.vocab, size=8,
+                                             dtype=np.int32))
+                for i in range(5)]
+    batcher = ContinuousBatcher(make_adapter(cfg, params, n_slots=2))
+    pgw = PromptGateway(batcher, max_new_tokens=4)
+    pgw.warmup((8,), cfg.vocab)     # compile outside the virtual clock
+    tel = pgw.run(arrivals)
+    tel.assert_conserved()
+    assert len(tel.records) == 5
+    assert all(r.t_done >= r.t_arrival for r in tel.records)
+    rep = tel.report(1.0, kind="prompt")
+    assert rep["completed"] == 5 and rep["p99_latency_ms"] > 0
+    # drop accounting is kind-scoped: frame drops never leak into the
+    # prompt report
+    tel.drop(99, "frame")
+    assert tel.report(1.0, kind="prompt")["dropped"] == 0
+    assert tel.report(1.0, kind="frame")["dropped"] == 1

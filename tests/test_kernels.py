@@ -3,7 +3,10 @@ shape/bit-width sweeps and hypothesis-random inputs."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # bare env: deterministic sweep fallback
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import sc_layer, sng
 from repro.kernels import ops, ref

@@ -1,24 +1,12 @@
 """Continuous batching: slot reuse, isolation between concurrent requests,
 and equivalence with dedicated single-request decoding."""
 import jax
-import jax.numpy as jnp
 import numpy as np
+from conftest import sequential_decode_reference
 
 from repro import configs
 from repro.models import lm
-from repro.serve import engine
 from repro.serve.scheduler import Request, RwkvContinuousBatcher
-
-
-def _single_request_reference(cfg, params, prompt, n_new):
-    cache, logits = engine.prefill(cfg, params,
-                                   {"tokens": jnp.asarray(prompt[None])})
-    toks = [int(jnp.argmax(logits[0]))]
-    for _ in range(n_new - 1):
-        cache, logits = engine.decode_step(
-            cfg, params, cache, jnp.asarray([[toks[-1]]], jnp.int32))
-        toks.append(int(jnp.argmax(logits[0])))
-    return toks
 
 
 def test_continuous_batching_matches_dedicated_decode():
@@ -39,7 +27,7 @@ def test_continuous_batching_matches_dedicated_decode():
     by_uid = {r.uid: r.generated for r in done}
 
     for i, p in enumerate(prompts):
-        want = _single_request_reference(cfg, params, p, n_new)
+        want = sequential_decode_reference(cfg, params, p, n_new)
         assert by_uid[i] == want, (i, by_uid[i], want)
 
 
