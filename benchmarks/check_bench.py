@@ -1,0 +1,104 @@
+"""BENCH_*.json schema gate for CI.
+
+Validates every benchmark result file against its per-bench schema and
+exits non-zero on any violation, so a refactor that silently breaks a
+benchmark's output (missing field, wrong type, empty results, paged losing
+to dense) fails the pipeline instead of rotting the trend data.
+
+Run:  python benchmarks/check_bench.py benchmarks/BENCH_*.json
+"""
+from __future__ import annotations
+
+import json
+import numbers
+import sys
+
+# bench name -> (top-level required fields, per-result required fields)
+SCHEMAS = {
+    "gateway": (
+        {"bench": str, "results": list},
+        {"frontend": str, "bits": numbers.Integral,
+         "endpoints": numbers.Integral, "offered_hz": numbers.Real,
+         "achieved_hz": numbers.Real, "p50_latency_ms": numbers.Real,
+         "p99_latency_ms": numbers.Real, "j_per_inference": numbers.Real,
+         "link_bytes_per_frame": numbers.Integral,
+         "dropped": numbers.Integral},
+    ),
+    "kvcache": (
+        {"bench": str, "budget_bytes": numbers.Integral,
+         "max_len": numbers.Integral, "block_size": numbers.Integral,
+         "results": list, "paged_gt_dense": bool},
+        {"layout": str, "budget_bytes": numbers.Integral,
+         "kv_bytes_allocated": numbers.Integral,
+         "n_slots": numbers.Integral,
+         "max_concurrent_slots": numbers.Integral,
+         "completed": numbers.Integral, "dropped": numbers.Integral,
+         "p50_latency_ms": numbers.Real, "p99_latency_ms": numbers.Real,
+         "j_per_inference": numbers.Real},
+    ),
+}
+
+
+def _check_fields(obj: dict, fields: dict, where: str) -> list[str]:
+    errs = []
+    for name, typ in fields.items():
+        if name not in obj:
+            errs.append(f"{where}: missing field '{name}'")
+        elif not isinstance(obj[name], typ) or isinstance(obj[name], bool) \
+                and typ is not bool:
+            errs.append(f"{where}: field '{name}' is "
+                        f"{type(obj[name]).__name__}, want {typ.__name__}")
+    return errs
+
+
+def check(path: str) -> list[str]:
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    bench = payload.get("bench")
+    if bench not in SCHEMAS:
+        return [f"{path}: unknown bench '{bench}' "
+                f"(known: {sorted(SCHEMAS)})"]
+    top, per_result = SCHEMAS[bench]
+    errs = _check_fields(payload, top, path)
+    results = payload.get("results") or []
+    if not results:
+        errs.append(f"{path}: empty results")
+    for i, rec in enumerate(results):
+        if not isinstance(rec, dict):
+            errs.append(f"{path}: results[{i}] is not an object")
+            continue
+        errs += _check_fields(rec, per_result, f"{path}: results[{i}]")
+    # bench-specific invariants
+    if bench == "kvcache" and not errs:
+        layouts = {r["layout"] for r in results}
+        if layouts != {"dense", "paged"}:
+            errs.append(f"{path}: need one dense and one paged result, "
+                        f"got {sorted(layouts)}")
+        elif not payload["paged_gt_dense"]:
+            errs.append(f"{path}: paged did not sustain more concurrent "
+                        f"slots than dense at the shared budget")
+        if any(r["completed"] == 0 for r in results):
+            errs.append(f"{path}: a layout completed zero requests")
+    return errs
+
+
+def main() -> int:
+    paths = sys.argv[1:]
+    if not paths:
+        print("usage: check_bench.py BENCH_foo.json [BENCH_bar.json ...]")
+        return 2
+    errs = []
+    for path in paths:
+        errs += check(path)
+    for e in errs:
+        print(f"SCHEMA ERROR: {e}")
+    if not errs:
+        print(f"{len(paths)} BENCH file(s) valid")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,157 @@
+"""Dense vs paged KV slots at a fixed simulated HBM budget.
+
+Gives both layouts the same KV byte budget, offers the same prompt trace
+(mixed lengths, a shared system-prefix cohort), and reports what each
+sustains: max concurrent slots, p99 latency, completion, and — paged only —
+the pool counters (prefix-hit rate, bytes saved vs dense, evictions).
+
+Dense spends the budget on whole ``max_len`` slots; the pool spends it on
+blocks, so short requests stop paying for their worst case and shared
+prefixes stop paying at all.  The acceptance bar (checked by
+``benchmarks/check_bench.py`` in CI) is ``paged.max_concurrent_slots >
+dense.max_concurrent_slots`` at equal bytes.
+
+Run:  PYTHONPATH=src python benchmarks/kvcache_bench.py
+      [--arch stablelm_3b] [--budget-slots 4] [--requests 32] [--smoke]
+"""
+import argparse
+import dataclasses
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+
+import common  # noqa: E402
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.models import lm  # noqa: E402
+from repro.serve import engine  # noqa: E402
+from repro.serve.gateway.gateway import PromptGateway  # noqa: E402
+from repro.serve.gateway.sensors import Arrival  # noqa: E402
+from repro.serve.gateway.slots import ContinuousBatcher, make_adapter  # noqa: E402
+
+
+def kv_bytes_per_slot(cfg, max_len: int) -> int:
+    """Sequence-axis cache bytes of one dense max_len slot."""
+    arena = engine.init_paged_arena(cfg, 1, max_len, abstract=True)
+    return sum(a.dtype.itemsize * int(np.prod(a.shape[1:]))
+               for a in arena.values())
+
+
+def make_trace(cfg, n_requests: int, max_len: int, n_new: int, seed: int = 0):
+    """Short prompts, half sharing a common system prefix, arriving in one
+    burst so concurrency is limited by memory, not by the arrival process."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab, size=8, dtype=np.int32)
+    arrivals = []
+    for i in range(n_requests):
+        tail = rng.integers(0, cfg.vocab, size=int(rng.integers(2, 7)),
+                            dtype=np.int32)
+        prompt = np.concatenate([prefix, tail]) if i % 2 == 0 else \
+            np.concatenate([rng.integers(0, cfg.vocab, size=4,
+                                         dtype=np.int32), tail])
+        arrivals.append(Arrival(uid=i, t=0.0005 * i, endpoint=i % 8,
+                                kind="prompt", payload=prompt))
+    return arrivals
+
+
+def run_layout(layout: str, cfg, params, arrivals, *, max_len: int,
+               n_new: int, budget_bytes: int, block_size: int,
+               warm_lens: tuple) -> dict:
+    slot_bytes = kv_bytes_per_slot(cfg, max_len)
+    block_bytes = kv_bytes_per_slot(cfg, block_size)
+    if layout == "dense":
+        n_slots = max(1, budget_bytes // slot_bytes)
+        adapter = make_adapter(cfg, params, n_slots=n_slots, max_len=max_len)
+    else:
+        num_blocks = max(2, budget_bytes // block_bytes)   # incl. trash blk
+        n_slots = min(len(arrivals), num_blocks - 1)
+        adapter = make_adapter(cfg, params, n_slots=n_slots, max_len=max_len,
+                               paged=True, block_size=block_size,
+                               num_blocks=num_blocks)
+    batcher = ContinuousBatcher(adapter)
+    gw = PromptGateway(batcher, max_new_tokens=n_new,
+                       max_queue=len(arrivals))
+    gw.warmup(warm_lens, cfg.vocab)
+    batcher.peak_active = 0                       # don't count warmup
+    t0 = time.perf_counter()
+    tel = gw.run(arrivals)
+    wall = time.perf_counter() - t0
+    tel.assert_conserved()
+    rep = tel.report(max(wall, 1e-9), kind="prompt")
+    out = {
+        "layout": layout,
+        "budget_bytes": budget_bytes,
+        "kv_bytes_allocated": (n_slots * slot_bytes if layout == "dense"
+                               else (num_blocks - 1) * block_bytes),
+        "n_slots": n_slots,
+        "max_concurrent_slots": batcher.peak_active,
+        "completed": rep["completed"],
+        "dropped": rep["dropped"],
+        "p50_latency_ms": rep.get("p50_latency_ms", 0.0),
+        "p99_latency_ms": rep.get("p99_latency_ms", 0.0),
+        "j_per_inference": rep.get("j_per_inference", 0.0),
+    }
+    if layout == "paged":
+        out["block_size"] = block_size
+        out["pool"] = tel.pool
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm_3b")
+    ap.add_argument("--budget-slots", type=int, default=4,
+                    help="HBM budget expressed in dense max_len slots")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: minimal sizes, same schema")
+    ap.add_argument("--out", default=str(pathlib.Path(__file__).parent
+                                         / "BENCH_kvcache.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests, args.max_len, args.budget_slots = 8, 32, 2
+
+    cfg = dataclasses.replace(configs.smoke_config(args.arch),
+                              param_dtype="float32")
+    params, _ = lm.init(jax.random.key(0), cfg, {})
+    arrivals = make_trace(cfg, args.requests, args.max_len, args.max_new)
+    warm_lens = tuple(sorted({len(a.payload) for a in arrivals}))
+    budget_bytes = args.budget_slots * kv_bytes_per_slot(cfg, args.max_len)
+
+    results = []
+    for layout in ("dense", "paged"):
+        rec = run_layout(layout, cfg, params, arrivals,
+                         max_len=args.max_len, n_new=args.max_new,
+                         budget_bytes=budget_bytes,
+                         block_size=args.block_size, warm_lens=warm_lens)
+        results.append(rec)
+        common.emit(
+            f"kvcache_{layout}", rec["p99_latency_ms"] * 1e3,
+            f"{rec['max_concurrent_slots']}slots,"
+            f"{rec['completed']}done,{rec['dropped']}drop")
+    dense, paged = results
+    payload = {
+        "bench": "kvcache",
+        "arch": args.arch,
+        "budget_bytes": budget_bytes,
+        "max_len": args.max_len,
+        "block_size": args.block_size,
+        "results": results,
+        "paged_gt_dense": (paged["max_concurrent_slots"]
+                           > dense["max_concurrent_slots"]),
+    }
+    common.emit_json(args.out, payload)
+    if not payload["paged_gt_dense"]:
+        print("WARNING: paged did not beat dense concurrency at this budget")
+
+
+if __name__ == "__main__":
+    main()

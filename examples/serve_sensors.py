@@ -53,6 +53,9 @@ def main():
     ap.add_argument("--no-lm", action="store_true",
                     help="skip the token-prompt path")
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV slots (block pool + prefix sharing); "
+                         "no-op for rwkv, which has O(1) state")
     args = ap.parse_args()
 
     prompt_frac = 0.0 if args.no_lm else 0.125
@@ -105,9 +108,10 @@ def main():
         elif cfg.family == "vlm":
             extras = lambda: {"vision_embed": jnp.zeros(    # noqa: E731
                 (1, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)}
+        paged = args.paged and cfg.family != "rwkv"
         batcher = ContinuousBatcher(
             make_adapter(cfg, params, n_slots=args.slots, max_len=64,
-                         extras=extras))
+                         extras=extras, paged=paged, block_size=8))
         pgw = PromptGateway(batcher, max_new_tokens=8)
         pgw.warmup(fleet.cfg.prompt_lens, cfg.vocab)
         tel = pgw.run(events)
@@ -116,9 +120,20 @@ def main():
               f"{r['throughput_hz']:6.1f} req/s  "
               f"p50 {r['p50_latency_ms']:6.1f} ms  "
               f"p99 {r['p99_latency_ms']:6.1f} ms  "
+              f"{r.get('j_per_inference', 0.0):.2e} J/req  "
               f"dropped {r['dropped']}  "
               f"(slot batcher: {args.slots} slots, "
-              f"family={cfg.family})")
+              f"family={cfg.family}, kv={'paged' if paged else 'dense'})")
+        if paged and "pool" in r:
+            p = r["pool"]
+            print(f"[lm:pool] peak {p['peak_blocks_in_use']}"
+                  f"/{p['num_blocks']} blocks in use, "
+                  f"peak {p['peak_bytes_saved_vs_dense'] / 1024:.0f} KiB "
+                  f"saved vs dense, "
+                  f"{p['blocks_cached']} cached at drain, "
+                  f"prefix hit rate {p['prefix_hit_rate']:.0%}, "
+                  f"{p['evictions']} evictions, "
+                  f"{p['cow_copies']} CoW copies")
 
 
 if __name__ == "__main__":

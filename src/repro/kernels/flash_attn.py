@@ -72,10 +72,13 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 @functools.partial(jax.jit, static_argnames=("causal", "qc", "kc",
                                              "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, qc: int = 128,
-                    kc: int = 128, interpret: bool = True):
+                    kc: int = 128, interpret: bool | None = None):
     """q, k, v: (BH, S, D) — batch*heads flattened (GQA repeat upstream).
     Returns (BH, S, D) in v.dtype.  S must divide by qc and kc.
+    ``interpret=None`` auto-detects the backend (Mosaic on TPU only).
     """
+    from repro.kernels.ops import resolve_interpret
+    interpret = resolve_interpret(interpret)
     BH, S, D = q.shape
     assert S % qc == 0 and S % kc == 0
     nq, nk = S // qc, S // kc

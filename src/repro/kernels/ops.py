@@ -1,9 +1,11 @@
 """Public jit'd wrappers for the Pallas kernels: padding, blocking, and the
 level->stream->dot composition used by the SC first layer.
 
-The container is CPU-only, so ``interpret=True`` is the default execution
-mode (the kernel body runs bit-exactly); on a real TPU deployment set
-``interpret=False`` to lower through Mosaic.
+Execution mode is auto-detected: off-TPU the kernels run in ``interpret``
+mode (the kernel body executes bit-exactly through the Pallas interpreter);
+on a TPU backend they lower through Mosaic.  Every kernel entry point takes
+``interpret=None`` meaning "ask :func:`default_interpret`", so tests and
+benchmarks can still force either mode explicitly.
 """
 from __future__ import annotations
 
@@ -17,6 +19,21 @@ from repro.core import sng
 from repro.kernels import ref
 from repro.kernels.sc_dot import sc_dot_pallas
 from repro.kernels.sng_pack import sng_pack_pallas
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode unless a real TPU backend is attached.
+
+    The single backend probe shared by every kernel wrapper (sng_pack,
+    sc_dot, flash_attn, paged_attn): Mosaic lowering exists only for TPU, so
+    anything else — the CPU CI container included — interprets.
+    """
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> auto-detect; an explicit bool always wins."""
+    return default_interpret() if interpret is None else bool(interpret)
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
@@ -35,7 +52,7 @@ def _next_pow2(k: int) -> int:
 
 def sc_dot(x_packed: jax.Array, w_packed: jax.Array, *, s0_mode: str = "alt",
            adder: str = "tff", bm: int = 128, bo: int = 128,
-           interpret: bool = True) -> jax.Array:
+           interpret: bool | None = None) -> jax.Array:
     """Stochastic dot product on packed streams.
 
     x_packed: (M, K, Wd) uint32;  w_packed: (K, O, Wd) uint32.
@@ -43,6 +60,7 @@ def sc_dot(x_packed: jax.Array, w_packed: jax.Array, *, s0_mode: str = "alt",
     power of two adds all-zero streams — exactly the fixed tree's unused
     leaves (bit-identical to the oracle, which pads the same way).
     """
+    interpret = resolve_interpret(interpret)
     M, K, Wd = x_packed.shape
     _, O, _ = w_packed.shape
     Kp = _next_pow2(K)
@@ -59,13 +77,15 @@ def sc_dot(x_packed: jax.Array, w_packed: jax.Array, *, s0_mode: str = "alt",
 
 def sc_dot_from_levels(x_lvl: jax.Array, w_lvl: jax.Array, bits: int, *,
                        scheme: str = "ramp_lowdisc", s0_mode: str = "alt",
-                       adder: str = "tff", interpret: bool = True) -> jax.Array:
+                       adder: str = "tff",
+                       interpret: bool | None = None) -> jax.Array:
     """Full SC datapath from integer levels: SNG pack (kernel) -> dot (kernel).
 
     x_lvl: (M, K) int32 levels 0..N;  w_lvl: (K, O) int32 levels.
     Stream length N = 2**bits must be >= 32 to use the packed kernels
     (shorter streams use the sc_layer table path).
     """
+    interpret = resolve_interpret(interpret)
     N = 1 << bits
     codes_a, codes_b = sng.codes_for_scheme(scheme, bits)
     x_stream = sng_pack(x_lvl, jnp.asarray(codes_a, jnp.int32), N,
@@ -77,11 +97,12 @@ def sc_dot_from_levels(x_lvl: jax.Array, w_lvl: jax.Array, bits: int, *,
 
 
 def sng_pack(levels: jax.Array, codes: jax.Array, length: int, *,
-             interpret: bool = True, block: int = 256) -> jax.Array:
+             interpret: bool | None = None, block: int = 256) -> jax.Array:
     """Comparator SNG + packing as a Pallas kernel.
 
     levels: any shape, int32 in [0, N]; returns (..., N//32) uint32.
     """
+    interpret = resolve_interpret(interpret)
     assert length % 32 == 0, "packed SNG kernel needs N % 32 == 0"
     shape = levels.shape
     flat = levels.reshape(-1)

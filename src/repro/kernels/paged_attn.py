@@ -1,0 +1,116 @@
+"""Pallas TPU paged decode-attention kernel (single layer, one query token).
+
+The XLA paged path (``nn.attention.attend_decode_paged``) gathers each
+request's block chain into a dense (B, S, Hkv, D) array before attending —
+at production sizes that materializes the whole cache in HBM every decode
+tick.  This kernel reads K/V *directly out of the block arena*: the block
+table rides in as a scalar-prefetch operand, so the BlockSpec index map can
+route grid step (b, j) at the arena block ``table[b, j]`` and the DMA
+engine streams exactly the blocks each request owns — HBM traffic is one
+read of the live blocks and nothing else, and the trash block (id 0) that
+pads short chains is masked out by ``lens`` like any overlong position.
+
+Grid (B, nb): the trailing dim iterates a request's chain sequentially, so
+the online-softmax state (m, l, acc) lives in VMEM scratch across the sweep
+— the same structure as ``flash_attn.py`` with the block table supplying
+the indirection.  GQA is handled in-kernel: q (Hq, D) is viewed as
+(Hkv, n_rep, D) and batched against the block's (Hkv, bs, D) K tile.
+
+Validated in interpret mode against ``attend_decode_paged`` over
+shape/dtype/table permutations (tests/test_paged_attn.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, bs: int, nb: int, n_rep: int,
+                  scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)              # (Hq, D)
+    k = k_ref[0].astype(jnp.float32)              # (bs, Hkv, D)
+    Hq, D = q.shape
+    Hkv = k.shape[1]
+    kt = jnp.swapaxes(k, 0, 1)                    # (Hkv, bs, D)
+    qh = q.reshape(Hkv, n_rep, D)
+    s = jax.lax.dot_general(qh, kt, (((2,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32) * scale
+    s = s.reshape(Hq, bs)
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    s = jnp.where(pos < lens_ref[b], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])               # (Hq, bs)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_prev * corr + jnp.sum(p, axis=-1)
+    m_scr[...] = m_new
+    vt = jnp.swapaxes(v_ref[0].astype(jnp.float32), 0, 1)   # (Hkv, bs, D)
+    ph = p.reshape(Hkv, n_rep, bs)
+    o = jax.lax.dot_general(ph, vt, (((2,), (1,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + o.reshape(Hq, D)
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_arena, v_arena, tables, lens, *,
+                           interpret: bool | None = None):
+    """q: (B, Hq, D); k_arena, v_arena: (num_blocks, bs, Hkv, D);
+    tables: (B, nb) int32 arena block ids; lens: (B,) int32 valid lengths.
+    Returns (B, Hq, D) in v_arena.dtype.
+    ``interpret=None`` auto-detects the backend (Mosaic on TPU only).
+    """
+    from repro.kernels.ops import resolve_interpret
+    interpret = resolve_interpret(interpret)
+    B, Hq, D = q.shape
+    _, bs, Hkv, _ = k_arena.shape
+    nb = tables.shape[1]
+    n_rep = Hq // Hkv
+    scale = D ** -0.5
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, bs=bs, nb=nb, n_rep=n_rep,
+                          scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, nb),
+            in_specs=[
+                pl.BlockSpec((1, Hq, D), lambda b, j, t, ln: (b, 0, 0)),
+                pl.BlockSpec((1, bs, Hkv, D),
+                             lambda b, j, t, ln: (t[b, j], 0, 0, 0)),
+                pl.BlockSpec((1, bs, Hkv, D),
+                             lambda b, j, t, ln: (t[b, j], 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, Hq, D), lambda b, j, t, ln: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((Hq,), jnp.float32),      # running max
+                pltpu.VMEM((Hq,), jnp.float32),      # running sum
+                pltpu.VMEM((Hq, D), jnp.float32),    # output accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), v_arena.dtype),
+        interpret=interpret,
+    )(jnp.asarray(tables, jnp.int32), jnp.asarray(lens, jnp.int32),
+      q, k_arena, v_arena)

@@ -79,10 +79,14 @@ def _sc_dot_kernel(x_ref, w_ref, o_ref, *, s0_mode: str, adder: str):
                    static_argnames=("bm", "bo", "s0_mode", "adder", "interpret"))
 def sc_dot_pallas(x_packed: jax.Array, w_packed: jax.Array, *,
                   bm: int = 128, bo: int = 128, s0_mode: str = "alt",
-                  adder: str = "tff", interpret: bool = True) -> jax.Array:
+                  adder: str = "tff",
+                  interpret: bool | None = None) -> jax.Array:
     """Raw pallas_call (operands must already be padded to block multiples
     and K padded to a power of two).  Use :mod:`repro.kernels.ops` instead.
+    ``interpret=None`` auto-detects the backend (Mosaic on TPU only).
     """
+    from repro.kernels.ops import resolve_interpret   # deferred: ops imports us
+    interpret = resolve_interpret(interpret)
     M, K, Wd = x_packed.shape
     K2, O, Wd2 = w_packed.shape
     assert K == K2 and Wd == Wd2 and M % bm == 0 and O % bo == 0

@@ -31,9 +31,13 @@ def _sng_pack_kernel(lvl_ref, codes_ref, out_ref, *, length: int):
 
 @functools.partial(jax.jit, static_argnames=("length", "block", "interpret"))
 def sng_pack_pallas(levels: jax.Array, codes: jax.Array, *, length: int,
-                    block: int = 256, interpret: bool = True) -> jax.Array:
+                    block: int = 256,
+                    interpret: bool | None = None) -> jax.Array:
     """levels: (M,) int32 (M % block == 0); codes: (length,) int32.
-    Returns (M, length//32) uint32 packed streams."""
+    Returns (M, length//32) uint32 packed streams.
+    ``interpret=None`` auto-detects the backend (Mosaic on TPU only)."""
+    from repro.kernels.ops import resolve_interpret   # deferred: ops imports us
+    interpret = resolve_interpret(interpret)
     M = levels.shape[0]
     assert M % block == 0
     nw = length // 32

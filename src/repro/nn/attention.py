@@ -355,3 +355,50 @@ def attend_decode(q, k_cache, v_cache, cache_len, *, window=0) -> jax.Array:
     out = jnp.einsum("bhrs,bshd->bhrd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
     return out.reshape(B, 1, Hq, D).astype(v_cache.dtype)
+
+
+def gather_paged_kv(arena, block_table) -> jax.Array:
+    """arena: (num_blocks, bs, Hkv, D); block_table: (B, nb) int32.
+
+    Returns the dense (B, nb*bs, Hkv, D) view of each row's block chain —
+    the ``jnp.take``-based gather that feeds :func:`attend_decode`.  Unused
+    table entries point at the trash block (id 0); whatever it holds is
+    masked out by ``cache_len`` downstream.
+    """
+    nb, bs = block_table.shape[1], arena.shape[1]
+    g = jnp.take(arena, block_table, axis=0)        # (B, nb, bs, Hkv, D)
+    return g.reshape(g.shape[0], nb * bs, *g.shape[3:])
+
+
+def attend_decode_paged(q, k_arena, v_arena, block_table, cache_len, *,
+                        window=0) -> jax.Array:
+    """One-token decode attention against a *paged* cache (single layer).
+
+    q: (B, 1, Hq, D); k_arena, v_arena: (num_blocks, bs, Hkv, D);
+    block_table: (B, nb) int32 block ids; cache_len: (B,) int32 per-row
+    valid lengths (the new token's K/V already written at cache_len - 1).
+
+    Gathers each row's block chain into the dense layout and applies the
+    same masked softmax as :func:`attend_decode`, with a per-row length
+    vector instead of a shared scalar.  This is the XLA reference semantics
+    for ``kernels/paged_attn.py``.
+    """
+    B, _, Hq, D = q.shape
+    Hkv = k_arena.shape[2]
+    n_rep = Hq // Hkv
+    scale = D ** -0.5
+    k = gather_paged_kv(k_arena, block_table)       # (B, S, Hkv, D)
+    v = gather_paged_kv(v_arena, block_table)
+    qh = q[:, 0].reshape(B, Hkv, n_rep, D)
+    s = jnp.einsum("bhrd,bshd->bhrs", qh, k,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(k.shape[1])
+    valid = pos[None, None, None, :] < cache_len[:, None, None, None]
+    if not _static_zero(window):
+        valid &= pos[None, None, None, :] >= \
+            (cache_len[:, None, None, None] - window)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhrs,bshd->bhrd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, D).astype(v.dtype)

@@ -76,6 +76,28 @@ def init_cache(cfg: LMConfig, batch: int, max_len: int, abstract: bool = False,
     return cache
 
 
+# Cache keys whose axis -3 is the (paged) sequence axis.  Everything else —
+# rwkv/ssm states, conv taps, encoder/vision cross K/V — is O(1) per slot and
+# stays densely slot-stacked even under the paged layout.
+PAGED_SEQ_KEYS = ("k", "v", "k_scale", "v_scale", "kx_self", "vx_self")
+
+
+def init_paged_arena(cfg: LMConfig, num_blocks: int, block_size: int,
+                     abstract: bool = False) -> dict:
+    """Block arenas for the paged KV cache (serve/kvcache/).
+
+    One ``(num_blocks,)``-leading array per sequence-axis cache key;
+    ``arena[key][bid]`` is exactly the B=1 cache of ``max_len=block_size``
+    for that key, so block granularity and cache layout can never drift
+    apart: both come from :func:`init_cache`.
+    """
+    blk = init_cache(cfg, 1, block_size, abstract=True)
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else \
+         (lambda s, d: jnp.zeros(s, d))
+    return {key: mk((num_blocks,) + blk[key].shape, blk[key].dtype)
+            for key in PAGED_SEQ_KEYS if key in blk}
+
+
 def cache_specs(cfg: LMConfig, mesh_shape: dict[str, int], batch: int):
     """PartitionSpec tree matching init_cache."""
     b = batch_spec_axis(mesh_shape, batch)

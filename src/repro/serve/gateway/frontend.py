@@ -70,6 +70,20 @@ def frame_energy_nj(spec: FrontendSpec) -> float:
     return r.sc_energy_nj if spec.mode == "sc" else r.bin_energy_nj
 
 
+def lm_token_energy_nj(spec: FrontendSpec, d_model: int) -> float:
+    """Per-token first-projection energy for the LM path.
+
+    The near-sensor frontend of a prompt endpoint is the embedding-row
+    projection: one ``d_model``-wide dot-product window per token (one
+    "unit", ``n_kernels`` weight passes), run through the same calibrated
+    Table-3 model (``energy.scaled_report``) the frame path charges —
+    so frame and LM requests land in the ledger in the same joules.
+    """
+    r = energy.scaled_report(spec.bits, k_window=d_model, n_units=1,
+                             n_kernels=spec.lenet.conv1_filters)
+    return r.sc_energy_nj if spec.mode == "sc" else r.bin_energy_nj
+
+
 def sensor_latency_s(spec: FrontendSpec) -> float:
     """At-sensor processing latency before the payload hits the link: the SC
     engine streams 2**bits cycles/frame; the binary partition transmits

@@ -170,14 +170,27 @@ class PromptGateway:
     prompt length) and the batched decode so one-time XLA compilation never
     lands in the virtual clock, and admission is bounded by ``max_queue``
     (excess prompts are rejected and counted, not queued without bound).
+
+    LM requests are charged energy the same way frames are: per processed
+    token, the calibrated Table-3 model projected onto the embedding-row
+    geometry (``frontend.lm_token_energy_nj``), plus link energy on the
+    token bytes — so every request in the ledger, frame or prompt, carries
+    a J/inference figure.  When the batcher runs over the paged KV adapter,
+    the pool's counters are snapshotted into the telemetry at drain.
     """
 
     def __init__(self, batcher: ContinuousBatcher, max_new_tokens: int = 16,
-                 bytes_per_token: int = 4, max_queue: int = 64):
+                 bytes_per_token: int = 4, max_queue: int = 64,
+                 energy_spec: fe.FrontendSpec | None = None):
         self.batcher = batcher
         self.max_new_tokens = max_new_tokens
         self.bytes_per_token = bytes_per_token
         self.max_queue = max_queue
+        if energy_spec is None:
+            energy_spec = fe.FrontendSpec()
+        self.energy_spec = energy_spec
+        self._token_energy_nj = fe.lm_token_energy_nj(
+            energy_spec, batcher.adapter.cfg.d_model)
 
     def warmup(self, prompt_lens: tuple[int, ...], vocab: int = 2) -> None:
         """Drain one dummy request per prompt length through the batcher
@@ -214,10 +227,17 @@ class PromptGateway:
             finished = self.batcher.step()
             now += time.perf_counter() - t0
             for req in finished:
-                link = self.bytes_per_token * (len(req.prompt)
-                                               + len(req.generated))
+                n_tokens = len(req.prompt) + len(req.generated)
+                link = self.bytes_per_token * n_tokens
+                energy_nj = self._token_energy_nj * n_tokens \
+                    + link * E_LINK_PJ_PER_BYTE * 1e-3
                 tel.record(RequestRecord(
                     uid=req.uid, endpoint=arr_ep[req.uid], kind="prompt",
-                    t_arrival=arr_t[req.uid], t_done=now, energy_nj=0.0,
-                    link_bytes=link, output=req.generated[-1]))
+                    t_arrival=arr_t[req.uid], t_done=now,
+                    energy_nj=energy_nj, link_bytes=link,
+                    output=req.generated[-1], kv_blocks=req.kv_blocks,
+                    prefix_hit_blocks=req.prefix_hit_blocks))
+        pool_stats = getattr(self.batcher.adapter, "pool_stats", None)
+        if pool_stats is not None:
+            tel.record_pool(pool_stats())
         return tel

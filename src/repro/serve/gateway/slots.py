@@ -14,6 +14,18 @@ between model families is only how a slot's context is stored:
     ``attend_decode`` automatically — slots at different positions decode
     together in one fixed-shape compiled call.
 
+  PagedKVSlotAdapter (serve/kvcache/, ``make_adapter(..., paged=True)``) —
+    same families, same batcher surface, but slots hold block tables into a
+    shared refcounted block pool instead of dense ``max_len`` buffers:
+    prefix sharing, copy-on-write, LRU eviction, and block-granular
+    admission.  The dense KVSlotAdapter remains the reference oracle the
+    paged path is parity-tested against (tests/test_kvcache.py).
+
+The batcher discovers paging hooks by presence: ``can_admit`` (queue while
+the pool cannot cover a request's worst-case block demand),
+``validate_request`` (reject at submit what could never fit), and
+``slot_stats`` (per-request block accounting stamped onto the Request).
+
 Both adapters mask state writes with the active-slot mask inside the
 batched decode, so a freed (or never-admitted) slot keeps exactly the
 state ``clear`` left it instead of decoding stale context forward between
@@ -35,6 +47,7 @@ import numpy as np
 
 from repro.models.lm import LMConfig
 from repro.serve import engine
+from repro.serve.kvcache.pool import PoolExhausted
 
 
 @dataclasses.dataclass
@@ -44,6 +57,9 @@ class Request:
     max_new_tokens: int = 16
     eos_id: int | None = None
     generated: list = dataclasses.field(default_factory=list)
+    # paged-adapter accounting, stamped at retire (0 under dense slots)
+    kv_blocks: int = 0
+    prefix_hit_blocks: int = 0
 
     @property
     def done(self) -> bool:
@@ -80,7 +96,8 @@ class StateSlotAdapter:
             return masked, logits
         self._decode = jax.jit(_step)
 
-    def insert(self, slot: int, prompt: np.ndarray) -> int:
+    def insert(self, slot: int, prompt: np.ndarray,
+               max_new: int | None = None) -> int:
         cache1, logits = self._prefill(
             self.params, {"tokens": jnp.asarray(prompt[None])})
         for key in self.STATE_KEYS:
@@ -134,7 +151,8 @@ class KVSlotAdapter:
             return jax.tree.map(sel, new_cache, cache), logits
         self._decode = jax.jit(_step)
 
-    def insert(self, slot: int, prompt: np.ndarray) -> int:
+    def insert(self, slot: int, prompt: np.ndarray,
+               max_new: int | None = None) -> int:
         if len(prompt) > self.max_len:
             raise ValueError(f"prompt length {len(prompt)} exceeds slot "
                              f"capacity {self.max_len}")
@@ -162,14 +180,28 @@ class KVSlotAdapter:
         t = jnp.asarray(tokens, jnp.int32)[:, None, None]    # (slots, 1, 1)
         self.cache, logits = self._decode(self.params, self.cache, t,
                                           jnp.asarray(active, bool))
+        self.last_logits = logits[:, 0]     # (n_slots, vocab) — parity tests
         return np.asarray(jnp.argmax(logits[:, 0], -1))
 
 
 def make_adapter(cfg: LMConfig, params, n_slots: int, max_len: int = 128,
-                 extras: Callable[[], dict] | None = None):
-    """Family dispatch: state slots for rwkv, KV slots for everything else."""
+                 extras: Callable[[], dict] | None = None, *,
+                 paged: bool = False, block_size: int = 16,
+                 num_blocks: int | None = None):
+    """Family dispatch: state slots for rwkv, KV slots for everything else.
+
+    ``paged=True`` swaps the dense per-slot KV buffers for the block-pool
+    adapter (``serve/kvcache/``): same batcher surface, shared-prefix blocks,
+    and admission priced in blocks instead of whole slots.  rwkv has O(1)
+    state, so ``paged`` is a no-op for it.
+    """
     if cfg.family == "rwkv":
         return StateSlotAdapter(cfg, params, n_slots)
+    if paged:
+        from repro.serve.kvcache import PagedKVSlotAdapter
+        return PagedKVSlotAdapter(cfg, params, n_slots, max_len,
+                                  block_size=block_size,
+                                  num_blocks=num_blocks, extras=extras)
     return KVSlotAdapter(cfg, params, n_slots, max_len, extras)
 
 
@@ -196,6 +228,7 @@ class ContinuousBatcher:
         self.pending: deque[Request] = deque()
         self.active: list[Request | None] = [None] * self.n_slots
         self.last_token = np.zeros((self.n_slots,), np.int32)
+        self.peak_active = 0            # max concurrent slots ever decoded
 
     def submit(self, req: Request):
         if self.adapter.max_len is not None and \
@@ -204,7 +237,21 @@ class ContinuousBatcher:
                 f"request {req.uid}: prompt {len(req.prompt)} + "
                 f"{req.max_new_tokens} new tokens exceeds slot capacity "
                 f"{self.adapter.max_len}")
+        validate = getattr(self.adapter, "validate_request", None)
+        if validate is not None:        # paged: whole-pool capacity bound
+            validate(len(req.prompt), req.max_new_tokens)
         self.pending.append(req)
+
+    def _admissible(self, req: Request) -> bool:
+        can = getattr(self.adapter, "can_admit", None)
+        return can is None or can(req.prompt, req.max_new_tokens)
+
+    def _stamp_stats(self, slot: int, req: Request) -> None:
+        stats = getattr(self.adapter, "slot_stats", None)
+        if stats is not None:
+            st = stats(slot)
+            req.kv_blocks = st.get("kv_blocks", 0)
+            req.prefix_hit_blocks = st.get("prefix_hit_blocks", 0)
 
     @property
     def busy(self) -> bool:
@@ -213,19 +260,35 @@ class ContinuousBatcher:
     def step(self) -> list[Request]:
         """Admit + one decode tick.  Returns requests completed this tick."""
         finished: list[Request] = []
+        stalled = False                 # FIFO: head can't admit -> stop
         for slot in range(self.n_slots):
-            while self.active[slot] is None and self.pending:
+            while self.active[slot] is None and self.pending and not stalled:
+                if not self._admissible(self.pending[0]):
+                    stalled = True      # blocks free up as requests retire
+                    break
                 req = self.pending.popleft()
-                tok = self.adapter.insert(
-                    slot, np.asarray(req.prompt, np.int32))
+                try:
+                    tok = self.adapter.insert(
+                        slot, np.asarray(req.prompt, np.int32),
+                        max_new=req.max_new_tokens)
+                except PoolExhausted:
+                    # insert rolled its allocations back; requeue at the
+                    # head and let retirements free blocks (can_admit makes
+                    # this unreachable, but admission must degrade to
+                    # queueing, never to a crashed serving loop)
+                    self.pending.appendleft(req)
+                    stalled = True
+                    break
                 req.generated.append(tok)
                 if req.done:            # EOS fired on the prefill token
+                    self._stamp_stats(slot, req)
                     self.adapter.clear(slot)
                     finished.append(req)
                     continue
                 self.active[slot] = req
                 self.last_token[slot] = tok
         active = np.asarray([r is not None for r in self.active])
+        self.peak_active = max(self.peak_active, int(active.sum()))
         if not active.any():
             return finished
         toks = self.adapter.decode(self.last_token, active)
@@ -236,6 +299,7 @@ class ContinuousBatcher:
             req.generated.append(tok)
             self.last_token[slot] = tok
             if req.done:
+                self._stamp_stats(slot, req)
                 finished.append(req)
                 self.active[slot] = None
                 self.adapter.clear(slot)

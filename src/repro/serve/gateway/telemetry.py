@@ -32,6 +32,8 @@ class RequestRecord:
     energy_nj: float             # frontend + link
     link_bytes: int
     output: int = -1             # predicted class / last token
+    kv_blocks: int = 0           # paged KV blocks reserved (0 = dense slots)
+    prefix_hit_blocks: int = 0   # of those, satisfied from the radix index
 
     @property
     def latency_s(self) -> float:
@@ -46,6 +48,7 @@ class Telemetry:
         self.dropped: list[tuple[int, str]] = []   # (uid, kind) rejections
         self._fleet_energy_nj = 0.0
         self._fleet_link_bytes = 0
+        self.pool: dict = {}          # paged KV pool snapshot (LM path)
 
     # -- charging ----------------------------------------------------------
     def record(self, rec: RequestRecord) -> None:
@@ -55,6 +58,11 @@ class Telemetry:
 
     def drop(self, uid: int, kind: str) -> None:
         self.dropped.append((uid, kind))
+
+    def record_pool(self, stats: dict) -> None:
+        """Snapshot the paged KV pool's counters (blocks in use, prefix-hit
+        rate, bytes saved vs dense, evictions) into the ledger."""
+        self.pool = dict(stats)
 
     # -- aggregation -------------------------------------------------------
     @property
@@ -95,4 +103,11 @@ class Telemetry:
                 j_per_inference=float(energy.mean() * 1e-9),
                 link_bytes_per_req=float(link.mean()),
             )
+            kv = sum(r.kv_blocks for r in recs)
+            if kv:
+                out["kv_blocks_per_req"] = kv / len(recs)
+                out["kv_prefix_hit_blocks_per_req"] = \
+                    sum(r.prefix_hit_blocks for r in recs) / len(recs)
+        if self.pool and kind in (None, "prompt"):
+            out["pool"] = dict(self.pool)
         return out

@@ -1,0 +1,14 @@
+"""Paged KV cache: refcounted block pool + block-table slot adapter.
+
+``BlockPool`` owns block identity (refcounts, radix prefix index, LRU
+eviction); ``PagedKVSlotAdapter`` owns block contents (device arenas,
+gather/scatter decode, copy-on-write) and plugs into the gateway's
+``ContinuousBatcher`` next to the dense ``KVSlotAdapter`` it replaces.
+See docs/kvcache.md.
+"""
+from repro.serve.kvcache.paged import PagedKVSlotAdapter
+from repro.serve.kvcache.pool import (TRASH_BLOCK, BlockPool, PoolExhausted,
+                                      chain_keys)
+
+__all__ = ["BlockPool", "PagedKVSlotAdapter", "PoolExhausted", "TRASH_BLOCK",
+           "chain_keys"]

@@ -1,0 +1,370 @@
+"""Block-table-backed KV slots: the paged counterpart of ``KVSlotAdapter``.
+
+Layout
+    One preallocated device arena per sequence-axis cache key —
+    ``arena[key]: (num_blocks,) + B=1 block shape`` from
+    :func:`engine.init_paged_arena` — shared by every slot.  Each slot holds
+    a block table (row of ``(n_slots, nb_max)`` int32) mapping logical block
+    j to an arena block id; non-sequence state (rwkv-style taps, ssm/conv,
+    encoder cross K/V, ``len``) stays densely slot-stacked exactly as in the
+    dense adapter.
+
+Decode tick (one jitted call, fixed shapes)
+    gather each slot's chain (``jnp.take`` over the tables) into the dense
+    per-slot layout -> the same vmapped :func:`engine.decode_step` the dense
+    adapter runs -> scatter back only the one block each slot wrote
+    (position ``len`` lives in exactly one block).  Inactive lanes scatter
+    into the reserved trash block 0, so the call never changes shape.
+    Because the gathered view agrees with the dense cache at every position
+    the model can read (< len; everything else is masked at NEG_INF before
+    the softmax), paged decode is *bitwise* identical to dense decode.
+
+Sharing / copy-on-write
+    Admission walks the pool's radix index: full prompt blocks that match an
+    earlier request's chain are referenced instead of written (their prefill
+    values are discarded).  A trailing partial prompt block can be shared
+    too when the whole chain plus the partial chunk matches; since decode
+    extends partial blocks in place, every holder of a shared partial block
+    carries a pre-allocated *spare* and copies into it before its first
+    write (copy-on-write) — the sibling keeps the original, bit-for-bit.
+
+Admission control
+    ``can_admit`` prices a request at its worst case,
+    ``ceil((P + max_new) / bs)`` blocks minus full-prefix hits (a partial
+    hit is net zero: the spare takes its place), and admits only when the
+    pool's free + evictable supply covers it — the batcher queues the
+    request otherwise instead of letting an allocation fail mid-flight.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LMConfig
+from repro.serve import engine
+from repro.serve.kvcache.pool import (TRASH_BLOCK, BlockPool, PoolExhausted)
+
+
+def _pad_seq(a: jax.Array, target: int) -> jax.Array:
+    """Zero-pad a cache array's sequence axis (-3) to ``target``."""
+    pad = [(0, 0)] * a.ndim
+    pad[-3] = (0, target - a.shape[-3])
+    return jnp.pad(a, pad)
+
+
+class PagedKVSlotAdapter:
+    """Paged KV slots for the attention families (decoder/moe/hybrid/encdec).
+
+    Drop-in for ``KVSlotAdapter`` in :class:`ContinuousBatcher` (same
+    ``insert`` / ``decode`` / ``clear`` surface), plus the paging hooks the
+    batcher discovers by presence: ``can_admit``, ``validate_request``,
+    ``slot_stats``, ``pool_stats``.
+    """
+
+    def __init__(self, cfg: LMConfig, params, n_slots: int, max_len: int,
+                 *, block_size: int = 16, num_blocks: int | None = None,
+                 extras: Callable[[], dict] | None = None):
+        assert cfg.family != "rwkv", "rwkv has O(1) state; nothing to page"
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.bs = block_size
+        self.nb_max = -(-max_len // block_size)
+        self.max_len = self.nb_max * block_size
+        self.extras = extras
+        if num_blocks is None:
+            # dense-equivalent capacity + the reserved trash block
+            num_blocks = n_slots * self.nb_max + 1
+        self.pool = BlockPool(num_blocks, block_size)
+        self.arena = engine.init_paged_arena(cfg, num_blocks, block_size)
+        self.seq_keys = tuple(self.arena)
+
+        # densely slot-stacked non-sequence state (incl. the scalar "len")
+        cache0 = engine.init_cache(cfg, 1, self.max_len)
+        self.cache = {
+            key: jnp.zeros((n_slots,) + np.shape(a), jnp.asarray(a).dtype)
+            for key, a in cache0.items() if key not in self.arena}
+
+        # host-side paging state
+        self.tables = np.zeros((n_slots, self.nb_max), np.int32)
+        self.lens = np.zeros(n_slots, np.int64)
+        self.slot_bids: list[list[int]] = [[] for _ in range(n_slots)]
+        self.cow_blk: list[int | None] = [None] * n_slots
+        self.cow_spare: list[int | None] = [None] * n_slots
+        self.partial_reg: list[tuple[int, int] | None] = [None] * n_slots
+        self._stats: list[dict] = [{} for _ in range(n_slots)]
+        # per-token arena bytes (for the bytes-saved-vs-dense telemetry)
+        self._token_bytes = sum(
+            a.dtype.itemsize * int(np.prod(a.shape[1:])) // block_size
+            for a in self.arena.values())
+        # peak occupancy: a drained pool always reads 0 blocks in use, so
+        # the memory-savings evidence is tracked at its high-water mark
+        self.peak_blocks_in_use = 0
+        self.peak_bytes_saved = 0
+
+        self._prefill = jax.jit(lambda p, b: engine.prefill(cfg, p, b))
+        # donate the arena (and dense cache) through every call that rebinds
+        # it, so the .at[].set updates alias in place instead of holding a
+        # second full arena copy — the whole point of the fixed byte budget.
+        # CPU XLA cannot donate (it would only warn), so gate on backend.
+        dn = jax.default_backend() != "cpu"
+        self._scatter = jax.jit(self._scatter_impl,
+                                donate_argnums=(0,) if dn else ())
+        self._copy = jax.jit(
+            lambda arena, dst, src: {
+                key: a.at[dst].set(a[src]) for key, a in arena.items()},
+            donate_argnums=(0,) if dn else ())
+        self._decode = jax.jit(self._tick_impl,
+                               donate_argnums=(1, 2) if dn else ())
+
+    # -- jitted bodies ------------------------------------------------------
+
+    def _scatter_impl(self, arena, padded, wbids):
+        """Write a prompt's blocks: ``padded[key]`` is the B=1 cache padded
+        to max_len; ``wbids[j]`` is the arena slot for logical block j (the
+        trash block for shared/unused blocks, whose values are discarded)."""
+        out = {}
+        for key in self.seq_keys:
+            a = padded[key]
+            ax = a.ndim - 3
+            b = a.reshape(a.shape[:ax] + (self.nb_max, self.bs)
+                          + a.shape[ax + 1:])
+            b = jnp.moveaxis(b, ax, 0)          # (nb_max, *pre, bs, *post)
+            out[key] = arena[key].at[wbids].set(b)
+        return out
+
+    def _tick_impl(self, p, arena, dense, tables, tokens, mask, wbids):
+        """gather -> vmapped decode_step -> scatter the written blocks."""
+        cache = dict(dense)
+        for key in self.seq_keys:
+            g = jnp.take(arena[key], tables, axis=0)
+            g = jnp.moveaxis(g, 1, g.ndim - 4)  # (slots, *pre, nb, bs, *post)
+            cache[key] = g.reshape(
+                g.shape[:g.ndim - 4] + (self.nb_max * self.bs,)
+                + g.shape[-2:])
+        new_cache, logits = jax.vmap(
+            lambda c, t: engine.decode_step(self.cfg, p, c, t),
+            in_axes=(0, 0))(cache, tokens)
+        sel = lambda new, old: jnp.where(
+            mask.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
+        new_dense = {key: sel(new_cache[key], dense[key]) for key in dense}
+        # each slot wrote exactly one position (pre-increment len), hence
+        # exactly one block; inactive lanes target the trash block
+        start = jnp.minimum((dense["len"] // self.bs) * self.bs,
+                            self.max_len - self.bs)
+        new_arena = {}
+        for key in self.seq_keys:
+            blk = jax.vmap(
+                lambda a, s: jax.lax.dynamic_slice_in_dim(
+                    a, s, self.bs, axis=a.ndim - 3))(new_cache[key], start)
+            new_arena[key] = arena[key].at[wbids].set(blk)
+        return new_arena, new_dense, logits
+
+    # -- admission ----------------------------------------------------------
+
+    def _block_demand(self, prompt_len: int, max_new: int) -> int:
+        return -(-(prompt_len + max_new) // self.bs)
+
+    def validate_request(self, prompt_len: int, max_new: int) -> None:
+        n_total = self._block_demand(prompt_len, max_new)
+        if n_total > self.pool.capacity:
+            raise ValueError(
+                f"request needs {n_total} blocks worst-case; pool holds "
+                f"{self.pool.capacity} (block_size={self.bs})")
+
+    def _arming_demand(self, partial_hit: int | None) -> int:
+        """Spares newly required by existing holders of a shared partial."""
+        if partial_hit is None:
+            return 0
+        return sum(1 for s in range(self.n_slots)
+                   if self.partial_reg[s]
+                   and self.partial_reg[s][1] == partial_hit
+                   and self.cow_spare[s] is None)
+
+    def can_admit(self, prompt: np.ndarray, max_new: int) -> bool:
+        """Worst-case block demand vs free + evictable supply.
+
+        Full-prefix hits reduce *allocations* one-for-one; a partial hit is
+        net zero (its copy-on-write spare replaces the fresh partial block
+        it would otherwise allocate), but may oblige existing holders to
+        take spares of their own (``_arming_demand``).  A hit currently
+        parked in the LRU still consumes supply when revived — it leaves the
+        evictable pool without an allocation — so it counts toward demand;
+        otherwise admission would overcommit exactly in the prefix-cache-
+        warm steady state and ``insert`` would raise mid-flight.
+        """
+        pool = self.pool
+        n_total = self._block_demand(len(prompt), max_new)
+        hits, partial_hit, _, _ = pool.match_prefix(
+            np.asarray(prompt, np.int32), count=False)
+        revived = sum(1 for b in hits if pool.refcount[b] == 0)
+        if partial_hit is not None and pool.refcount[partial_hit] == 0:
+            revived += 1
+        demand = n_total - len(hits) + revived \
+            + self._arming_demand(partial_hit)
+        return demand <= pool.available()
+
+    # -- slot lifecycle ------------------------------------------------------
+
+    def insert(self, slot: int, prompt: np.ndarray,
+               max_new: int | None = None) -> int:
+        P = len(prompt)
+        if max_new is None:
+            max_new = max(1, self.max_len - P)
+        if P + max_new > self.max_len:
+            raise ValueError(f"prompt {P} + {max_new} new tokens exceeds "
+                             f"slot capacity {self.max_len}")
+        pool = self.pool
+        n_total = self._block_demand(P, max_new)
+        n_full = P // self.bs
+        hits, partial_hit, keys, pkey = pool.match_prefix(
+            np.asarray(prompt, np.int32))
+
+        # take references on every hit before allocating (allocation may
+        # evict from the LRU the hits are parked in); on exhaustion release
+        # everything this insert took so a failed admission leaks nothing
+        bids = []
+        fresh: list[tuple[int, bytes, int]] = []       # (blk_idx, key, bid)
+        try:
+            bids.extend(pool.acquire(b) for b in hits)
+            for j in range(len(hits), n_full):
+                b = pool.alloc()
+                fresh.append((j, keys[j], b))
+                bids.append(b)
+            if n_full * self.bs < P:                   # partial prompt block
+                if partial_hit is not None:
+                    # share it; every holder copies before its first write
+                    self._arm_holders(partial_hit)
+                    pool.acquire(partial_hit)
+                    bids.append(partial_hit)
+                    self.cow_blk[slot] = n_full
+                    self.cow_spare[slot] = pool.alloc()
+                else:
+                    b = pool.alloc()
+                    fresh.append((n_full, pkey, b))
+                    bids.append(b)
+            while len(bids) < n_total:                 # generation blocks
+                bids.append(pool.alloc())
+        except PoolExhausted:
+            for b in bids:
+                pool.release(b)
+            if self.cow_spare[slot] is not None:
+                pool.release(self.cow_spare[slot])
+            self.cow_blk[slot] = self.cow_spare[slot] = None
+            self.partial_reg[slot] = None
+            raise
+
+        # prefill and write the freshly-owned prompt blocks into the arena;
+        # shared blocks keep the sibling's (bit-identical) values
+        batch = {"tokens": jnp.asarray(np.asarray(prompt, np.int32)[None])}
+        if self.extras is not None:
+            batch.update(self.extras())
+        cache1, logits = self._prefill(self.params, batch)
+        cache1 = dict(cache1)
+        padded = {key: _pad_seq(cache1.pop(key), self.max_len)
+                  for key in self.seq_keys}
+        wbids = np.zeros(self.nb_max, np.int32)
+        for j, key, b in fresh:
+            wbids[j] = b
+        self.arena = self._scatter(self.arena, padded,
+                                   jnp.asarray(wbids))
+        # index only after the contents exist (a failed insert must never
+        # leave a key pointing at an unwritten block)
+        for j, key, b in fresh:
+            pool.register(key, b, partial=j >= n_full)
+            if j >= n_full:
+                self.partial_reg[slot] = (j, b)
+        for key in self.cache:
+            if key == "len":
+                continue
+            self.cache[key] = self.cache[key].at[slot].set(cache1[key])
+        self.cache["len"] = self.cache["len"].at[slot].set(P)
+
+        self.tables[slot, :] = TRASH_BLOCK
+        self.tables[slot, :len(bids)] = bids
+        self.lens[slot] = P
+        self.slot_bids[slot] = bids
+        self._stats[slot] = {
+            "kv_blocks": n_total,
+            "prefix_hit_blocks": len(hits)
+            + (1 if partial_hit is not None else 0)}
+        self._update_peaks()
+        return int(jnp.argmax(logits[0]))
+
+    def _update_peaks(self) -> None:
+        in_use = self.pool.blocks_in_use()
+        live = sum(1 for b in self.slot_bids if b)
+        saved = (live * self.max_len - in_use * self.bs) * self._token_bytes
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use, in_use)
+        self.peak_bytes_saved = max(self.peak_bytes_saved, saved)
+
+    def _arm_holders(self, bid: int) -> None:
+        """Give every live holder of a newly-shared partial block a spare."""
+        for s in range(self.n_slots):
+            if (self.partial_reg[s] and self.partial_reg[s][1] == bid
+                    and self.cow_spare[s] is None):
+                self.cow_blk[s] = self.partial_reg[s][0]
+                self.cow_spare[s] = self.pool.alloc()
+                self.partial_reg[s] = None
+
+    def clear(self, slot: int) -> None:
+        for bid in self.slot_bids[slot]:
+            self.pool.release(bid)
+        if self.cow_spare[slot] is not None:
+            self.pool.release(self.cow_spare[slot])
+        self.cow_blk[slot] = self.cow_spare[slot] = None
+        self.partial_reg[slot] = None
+        self.slot_bids[slot] = []
+        self.tables[slot, :] = TRASH_BLOCK
+        self.lens[slot] = 0
+        self.cache["len"] = self.cache["len"].at[slot].set(0)
+
+    # -- decode --------------------------------------------------------------
+
+    def decode(self, tokens: np.ndarray, active: np.ndarray) -> np.ndarray:
+        active = np.asarray(active, bool)
+        wbids = np.full(self.n_slots, TRASH_BLOCK, np.int32)
+        for slot in np.nonzero(active)[0]:
+            blk = int(self.lens[slot]) // self.bs
+            bid = int(self.tables[slot, blk])
+            if self.cow_blk[slot] is not None and blk == self.cow_blk[slot]:
+                spare = self.cow_spare[slot]
+                self.arena = self._copy(self.arena, spare, bid)
+                self.pool.cow_copies += 1
+                self.pool.release(bid)
+                self.tables[slot, blk] = spare
+                self.slot_bids[slot][blk] = spare
+                self.cow_blk[slot] = self.cow_spare[slot] = None
+                bid = spare
+            elif self.pool.is_partial(bid):
+                # sole owner writes in place: the cached chunk changes, so
+                # the index entry must go before the write lands
+                self.pool.drop_partial(bid)
+                self.partial_reg[slot] = None
+            wbids[slot] = bid
+        self.arena, self.cache, logits = self._decode(
+            self.params, self.arena, self.cache, jnp.asarray(self.tables),
+            jnp.asarray(tokens, jnp.int32)[:, None, None],
+            jnp.asarray(active, bool), jnp.asarray(wbids))
+        self.lens[active] += 1
+        self.last_logits = logits[:, 0]     # (n_slots, vocab) — parity tests
+        return np.asarray(jnp.argmax(logits[:, 0], -1))
+
+    # -- telemetry -----------------------------------------------------------
+
+    def slot_stats(self, slot: int) -> dict:
+        return dict(self._stats[slot])
+
+    def pool_stats(self) -> dict:
+        st = self.pool.stats()
+        live = sum(1 for b in self.slot_bids if b)
+        st["bytes_dense_equiv"] = live * self.max_len * self._token_bytes
+        st["bytes_paged"] = st["blocks_in_use"] * self.bs * self._token_bytes
+        st["bytes_saved_vs_dense"] = (st["bytes_dense_equiv"]
+                                      - st["bytes_paged"])
+        st["peak_blocks_in_use"] = self.peak_blocks_in_use
+        st["peak_bytes_saved_vs_dense"] = self.peak_bytes_saved
+        return st

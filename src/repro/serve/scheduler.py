@@ -21,9 +21,11 @@ from repro.models import lm
 from repro.serve.gateway.slots import (ContinuousBatcher, KVSlotAdapter,
                                        Request, StateSlotAdapter,
                                        make_adapter)
+from repro.serve.kvcache import BlockPool, PagedKVSlotAdapter
 
-__all__ = ["ContinuousBatcher", "KVSlotAdapter", "Request",
-           "RwkvContinuousBatcher", "StateSlotAdapter", "make_adapter"]
+__all__ = ["BlockPool", "ContinuousBatcher", "KVSlotAdapter",
+           "PagedKVSlotAdapter", "Request", "RwkvContinuousBatcher",
+           "StateSlotAdapter", "make_adapter"]
 
 
 class RwkvContinuousBatcher(ContinuousBatcher):

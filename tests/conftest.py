@@ -7,15 +7,19 @@ def rng():
     return np.random.default_rng(0)
 
 
-def sequential_decode_reference(cfg, params, prompt, n_new, max_len=None):
+def sequential_decode_reference(cfg, params, prompt, n_new, max_len=None,
+                                extras=None):
     """Single-request greedy decode oracle: prefill then n_new-1 decode
     steps, argmax at each.  ``max_len`` pads attention k/v caches so decode
-    can write past the prompt (None for O(1)-state families)."""
+    can write past the prompt (None for O(1)-state families).  ``extras``
+    supplies family prefill inputs (enc_embed / vision_embed)."""
     import jax.numpy as jnp
     from repro.serve import engine
 
-    cache, logits = engine.prefill(cfg, params,
-                                   {"tokens": jnp.asarray(prompt[None])})
+    batch = {"tokens": jnp.asarray(prompt[None])}
+    if extras is not None:
+        batch.update(extras() if callable(extras) else extras)
+    cache, logits = engine.prefill(cfg, params, batch)
     if max_len is not None:
         for k in ("k", "v"):
             if k in cache:

@@ -1,0 +1,85 @@
+"""Pallas paged decode-attention kernel vs the XLA gather reference
+(interpret mode), plus the gather path's own masking semantics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.paged_attn import paged_decode_attention
+from repro.nn import attention
+
+
+def _make_case(rng, B, nb, bs, Hq, Hkv, D, num_blocks, dtype):
+    q = jnp.asarray(rng.normal(0, 1, (B, Hq, D)), dtype)
+    k_arena = jnp.asarray(rng.normal(0, 1, (num_blocks, bs, Hkv, D)), dtype)
+    v_arena = jnp.asarray(rng.normal(0, 1, (num_blocks, bs, Hkv, D)), dtype)
+    # each row gets a distinct permutation of arena blocks (block 0 = trash)
+    tables = np.zeros((B, nb), np.int32)
+    lens = np.zeros((B,), np.int32)
+    for b in range(B):
+        lens[b] = int(rng.integers(1, nb * bs + 1))
+        used = -(-int(lens[b]) // bs)
+        tables[b, :used] = rng.choice(
+            np.arange(1, num_blocks), size=used, replace=False)
+    return q, k_arena, v_arena, jnp.asarray(tables), jnp.asarray(lens)
+
+
+@pytest.mark.parametrize("B,nb,bs,Hq,Hkv,D,dtype", [
+    (3, 4, 8, 4, 4, 32, jnp.float32),       # MHA
+    (2, 3, 16, 8, 2, 64, jnp.float32),      # GQA 4:1
+    (4, 2, 8, 6, 6, 16, jnp.bfloat16),
+    (1, 5, 4, 4, 1, 32, jnp.float32),       # MQA
+])
+def test_paged_kernel_matches_gather_reference(B, nb, bs, Hq, Hkv, D, dtype):
+    rng = np.random.default_rng(B * nb * bs)
+    num_blocks = B * nb + 1
+    q, ka, va, tables, lens = _make_case(rng, B, nb, bs, Hq, Hkv, D,
+                                         num_blocks, dtype)
+    got = paged_decode_attention(q, ka, va, tables, lens, interpret=True)
+    want = attention.attend_decode_paged(q[:, None], ka, va, tables, lens)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want[:, 0], np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_gather_reference_matches_dense_attend_decode():
+    """attend_decode_paged == attend_decode on the densely-laid-out cache:
+    paging is a pure relayout, not a different attention."""
+    rng = np.random.default_rng(0)
+    B, nb, bs, Hq, Hkv, D = 2, 3, 8, 4, 2, 32
+    S = nb * bs
+    k = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), jnp.float32)
+    q = jnp.asarray(rng.normal(0, 1, (B, 1, Hq, D)), jnp.float32)
+    # identity block layout: row b owns blocks [1 + b*nb, 1 + (b+1)*nb)
+    k_arena = jnp.concatenate(
+        [jnp.zeros((1, bs, Hkv, D))] + [k[b].reshape(nb, bs, Hkv, D)
+                                        for b in range(B)]).astype(k.dtype)
+    v_arena = jnp.concatenate(
+        [jnp.zeros((1, bs, Hkv, D))] + [v[b].reshape(nb, bs, Hkv, D)
+                                        for b in range(B)]).astype(v.dtype)
+    tables = jnp.asarray([[1 + b * nb + j for j in range(nb)]
+                          for b in range(B)], jnp.int32)
+    for ln in (1, bs, S - 3, S):
+        want = attention.attend_decode(q, k, v, ln)
+        got = attention.attend_decode_paged(
+            q, k_arena, v_arena, tables, jnp.full((B,), ln, jnp.int32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_paged_kernel_ignores_trash_block_contents():
+    """Positions masked by ``lens`` never reach the softmax, whatever the
+    trash block or stale tail blocks hold."""
+    rng = np.random.default_rng(3)
+    B, nb, bs, H, D = 1, 3, 4, 2, 16
+    q, ka, va, tables, lens = _make_case(rng, B, nb, bs, H, H, D, 8,
+                                         jnp.float32)
+    lens = jnp.asarray([5], jnp.int32)          # only block 0-1 partially live
+    base = paged_decode_attention(q, ka, va, tables, lens, interpret=True)
+    ka2 = ka.at[0].set(1e9)                     # poison the trash block
+    va2 = va.at[0].set(-1e9)
+    tables2 = jnp.asarray(tables).at[0, 2:].set(0)
+    got = paged_decode_attention(q, ka2, va2, tables2, lens, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-6, atol=1e-6)
