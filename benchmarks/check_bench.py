@@ -36,6 +36,15 @@ SCHEMAS = {
          "p50_latency_ms": numbers.Real, "p99_latency_ms": numbers.Real,
          "j_per_inference": numbers.Real},
     ),
+    "prefix": (
+        {"bench": str, "block_size": numbers.Integral, "results": list,
+         "warm_beats_cold": bool},
+        {"shared_blocks": numbers.Integral, "prompt_len": numbers.Integral,
+         "suffix_len": numbers.Integral,
+         "prefill_tokens_skipped": numbers.Integral,
+         "cold_ms": numbers.Real, "warm_ms": numbers.Real,
+         "speedup": numbers.Real},
+    ),
 }
 
 
@@ -82,6 +91,21 @@ def check(path: str) -> list[str]:
                         f"slots than dense at the shared budget")
         if any(r["completed"] == 0 for r in results):
             errs.append(f"{path}: a layout completed zero requests")
+    if bench == "prefix" and not errs:
+        # trend gate: prefix-hit admission must actually get cheaper once a
+        # meaningful prefix (>= 2 shared blocks) is resumed
+        if not payload["warm_beats_cold"]:
+            errs.append(f"{path}: warm_beats_cold is false")
+        for r in results:
+            if r["shared_blocks"] >= 2 and not r["warm_ms"] < r["cold_ms"]:
+                errs.append(
+                    f"{path}: shared_blocks={r['shared_blocks']} warm "
+                    f"({r['warm_ms']:.3f} ms) did not beat cold "
+                    f"({r['cold_ms']:.3f} ms)")
+            if (r["shared_blocks"] >= 1
+                    and r["prefill_tokens_skipped"] == 0):
+                errs.append(f"{path}: shared_blocks={r['shared_blocks']} "
+                            f"skipped zero prefill tokens")
     return errs
 
 

@@ -134,6 +134,13 @@ def main():
                   f"prefix hit rate {p['prefix_hit_rate']:.0%}, "
                   f"{p['evictions']} evictions, "
                   f"{p['cow_copies']} CoW copies")
+            skipped = p.get("prefill_tokens_skipped", 0)
+            if p.get("prefill_tokens_total"):
+                print(f"[lm:prefill] {skipped}"
+                      f"/{p['prefill_tokens_total']} prompt tokens "
+                      f"skipped via prefix-hit chunked prefill "
+                      f"({r.get('prefill_energy_saved_nj', 0.0):.1f} nJ "
+                      f"frontend energy saved)")
 
 
 if __name__ == "__main__":

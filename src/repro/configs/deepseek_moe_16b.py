@@ -20,5 +20,5 @@ def smoke_config() -> LMConfig:
         n_layers=3, d_model=128, n_heads=4, n_kv_heads=4, d_head=32,
         d_ff=96, vocab=512, mlp_type="swiglu", rope_theta=10000.0,
         n_experts=8, top_k=2, n_shared=1, d_expert=96, first_dense_ff=384,
-        moe_group_size=64, remat="none",
+        moe_group_size=64, remat="none", moe_dropless_prefill=True,
     )

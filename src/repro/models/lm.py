@@ -68,6 +68,10 @@ class LMConfig:
     moe_group_size: int = 2048
     moe_impl: str = "einsum"
     capacity_factor: float = 1.25
+    # serving prefill routes dropless (see decoder_block): required for
+    # prefix-cache resumption; off by default so the training forward and
+    # the dry-run roofline cells keep GShard capacity semantics
+    moe_dropless_prefill: bool = False
     # --- vlm ---
     cross_every: int = 0              # a cross-attn layer every k layers
     n_vision_tokens: int = 1024
@@ -445,8 +449,26 @@ def _proj(x, w, b=None):
 
 
 def _attn_apply(cfg: LMConfig, p, x, positions, *, causal=True, window=0,
-                kv_override=None, q_offset=0):
-    """Full-sequence attention (train / prefill).  Returns (out, (k, v))."""
+                kv_override=None, q_offset=0, kv_prefix=None):
+    """Full-sequence attention (train / prefill).  Returns (out, (k, v)).
+
+    ``kv_prefix``: (k, v) of an already-computed (post-RoPE) cache prefix of
+    ``q_offset`` positions — suffix-only chunked prefill.  Queries come from
+    ``x`` (the suffix, at absolute positions given by ``positions``), keys
+    concatenate prefix + suffix, and the returned ``(k, v)`` covers the full
+    prefix+suffix length so the caller can assemble the whole cache.  The
+    resumed path always attends through ``attend_chunked`` (sliding windows
+    become masks): ``attend_sliding``'s tile slicing assumes queries and
+    keys start at the same position, which a resumed call violates.
+
+    Bit-exactness is a property of the *chunk schedule*, not of this
+    function: chunk j of a block-aligned prefill fold has the same static
+    shapes whether the fold started at 0 or resumed at a prefix hit, so XLA
+    compiles the identical graph and the outputs match bitwise (see
+    ``engine.prefill_chunked``).  A one-shot suffix call is mathematically
+    identical to full prefill but may drift in the last ulp — differently
+    shaped graphs fuse differently.
+    """
     B, S, d = x.shape
     q = _proj(x, p["wq"], p.get("bq")).reshape(B, S, cfg.n_heads, cfg.d_head)
     if kv_override is None:
@@ -460,6 +482,34 @@ def _attn_apply(cfg: LMConfig, p, x, positions, *, causal=True, window=0,
         k, v = kv_override
         if cfg.pos_embedding == "rope" and causal:
             q = rope.apply_rope(q, positions, cfg.rope_theta)
+    if kv_prefix is not None:
+        pk, pv = kv_prefix
+        assert pk.shape[1] == q_offset, (pk.shape, q_offset)
+        k_full = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+        v_full = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+        if (isinstance(window, int) and 0 < window < q_offset and causal
+                and kv_override is None):
+            # a static-window layer only sees the trailing `window` prefix
+            # positions — slice them (static shapes, so the fold's bitwise
+            # resume property survives) to keep the O(S·window) bound the
+            # one-shot path gets from attend_sliding.  Relative positions
+            # are preserved by shifting q_offset with the slice.
+            ka = jnp.concatenate(
+                [pk[:, q_offset - window:].astype(k.dtype), k], axis=1)
+            va = jnp.concatenate(
+                [pv[:, q_offset - window:].astype(v.dtype), v], axis=1)
+            o = attention.attend_chunked(q, ka, va, causal=True,
+                                         window=window, q_offset=window,
+                                         q_chunk=cfg.q_chunk,
+                                         kv_chunk=cfg.kv_chunk)
+        else:
+            o = attention.attend_chunked(q, k_full, v_full, causal=causal,
+                                         window=window, q_offset=q_offset,
+                                         q_chunk=cfg.q_chunk,
+                                         kv_chunk=cfg.kv_chunk)
+        out = _proj(o.reshape(B, S, cfg.n_heads * cfg.d_head), p["wo"],
+                    p.get("bo"))
+        return out, (k_full, v_full)
     if (isinstance(window, int) and window > 0 and causal
             and kv_override is None and k.shape[1] == S):
         # static sliding window: true KV skipping (O(S*window) attention)
@@ -483,25 +533,44 @@ def _mlp_apply(cfg: LMConfig, p, x, kind=None):
 
 
 def decoder_block(cfg: LMConfig, p, x, positions, *, window=0, moe_layer=False,
-                  q_offset=0, causal=True):
-    """Pre-norm transformer block.  Returns (x, kv, aux)."""
+                  q_offset=0, causal=True, kv_prefix=None, moe_dropless=False):
+    """Pre-norm transformer block.  Returns (x, kv, aux).
+
+    ``kv_prefix`` + ``q_offset`` resume from an existing KV prefix
+    (suffix-only chunked prefill); ``kv`` then spans prefix + suffix.
+    ``moe_dropless`` routes the MoE FFN with one whole-sequence dispatch
+    group and never drops a token (serving prefill: a token's output must
+    not depend on the rest of its dispatch group, or a prompt could not be
+    resumed from a cached prefix — see ``cfg.moe_dropless_prefill``).
+    """
     x = hint(x, "batch", None, None)
     h, kv = _attn_apply(cfg, p["attn"], _norm_apply(cfg, p["ln1"], x),
                         positions, causal=causal, window=window,
-                        q_offset=q_offset)
+                        q_offset=q_offset, kv_prefix=kv_prefix)
     x = x + h
     z = _norm_apply(cfg, p["ln2"], x)
     if moe_layer:
-        y, aux = moe_ffn(z, p["moe"], cfg.moe)
+        mcfg = cfg.moe
+        if moe_dropless:
+            mcfg = dataclasses.replace(
+                mcfg, group_size=z.shape[0] * z.shape[1], dropless=True)
+        y, aux = moe_ffn(z, p["moe"], mcfg)
     else:
         y, aux = _mlp_apply(cfg, p["mlp"], z), jnp.float32(0.0)
     return x + y, kv, aux
 
 
-def cross_block(cfg: LMConfig, p, x, positions, enc_kv, *, q_offset=0):
-    """Self-attn + gated cross-attn + mlp (VLM cross layer, whisper decoder)."""
+def cross_block(cfg: LMConfig, p, x, positions, enc_kv, *, q_offset=0,
+                kv_prefix=None):
+    """Self-attn + gated cross-attn + mlp (VLM cross layer, whisper decoder).
+
+    ``kv_prefix`` resumes the causal self-attention from an existing KV
+    prefix; the cross-attention needs no prefix (its K/V are the fixed
+    encoder projections and each query row is independent of the others).
+    """
     h, kv = _attn_apply(cfg, p["attn"], _norm_apply(cfg, p["ln1"], x),
-                        positions, causal=True, q_offset=q_offset)
+                        positions, causal=True, q_offset=q_offset,
+                        kv_prefix=kv_prefix)
     x = x + h
     hx, _ = _attn_apply(cfg, p["xattn"], _norm_apply(cfg, p["ln_x"], x),
                         positions, causal=False, kv_override=enc_kv)
@@ -568,13 +637,19 @@ def _causal_conv(x, w, prev):
     return out, xp[:, -(K - 1):]
 
 
-def hymba_block(cfg: LMConfig, p, x, positions, state, *, window, q_offset=0):
+def hymba_block(cfg: LMConfig, p, x, positions, state, *, window, q_offset=0,
+                kv_prefix=None):
     """Parallel GQA + Mamba block.  state: {"conv": (B,K-1,di),
-    "ssm": (B,di,N) f32}.  Returns (x, kv, new_state)."""
+    "ssm": (B,di,N) f32}.  Returns (x, kv, new_state).
+
+    ``state`` is the recurrent boundary condition: fresh zeros for a
+    from-scratch prefill, or the conv taps / SSM state at position
+    ``q_offset`` when resuming with ``kv_prefix`` (chunked prefill)."""
     B, S, d = x.shape
     z = _norm_apply(cfg, p["ln1"], x)
     att, kv = _attn_apply(cfg, p["attn"], z, positions, causal=True,
-                          window=window, q_offset=q_offset)
+                          window=window, q_offset=q_offset,
+                          kv_prefix=kv_prefix)
     xz = _proj(z, p["in_proj"])
     xm, gate = jnp.split(xz, 2, axis=-1)
     xm, conv_state = _causal_conv(xm, p["conv_w"], state["conv"])
@@ -588,7 +663,8 @@ def hymba_block(cfg: LMConfig, p, x, positions, state, *, window, q_offset=0):
     Bm, Cm = dbc[..., dtr:dtr + N], dbc[..., dtr + N:]
     y, ssm_state = ssm.selective_scan(xm, dt.astype(x.dtype), p["A_log"],
                                       Bm, Cm, p["D_skip"],
-                                      chunk=min(cfg.ssm_chunk, S))
+                                      chunk=min(cfg.ssm_chunk, S),
+                                      state0=state["ssm"])
     y = y * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
     y = _proj(y, p["ssm_out"])
     beta = p["beta"].astype(jnp.float32)
@@ -647,10 +723,13 @@ def sc_frontend(cfg: LMConfig, p, x):
     return (out * p["gamma"].astype(jnp.float32)).astype(x.dtype)
 
 
-def embed_tokens(cfg: LMConfig, params, tokens):
+def embed_tokens(cfg: LMConfig, params, tokens, pos_offset: int = 0):
+    """``pos_offset``: absolute position of tokens[0] (suffix-only prefill
+    embeds its tokens at their true positions, not from 0)."""
     x = params["embed"][tokens]
     if cfg.pos_embedding == "sinusoidal":
-        x = x + _sinusoidal(tokens.shape[1], cfg.d_model).astype(x.dtype)[None]
+        x = x + _sinusoidal(tokens.shape[1], cfg.d_model,
+                            offset=pos_offset).astype(x.dtype)[None]
     if cfg.first_layer_mode == "sc":
         x = x + sc_frontend(cfg, params["sc_frontend"], x)   # residual insert
     return hint(x, "batch", None, None)

@@ -219,7 +219,11 @@ def attend_sliding(q, k, v, *, window: int, q_offset: int = 0,
     Each q chunk attends only to the ``window + q_chunk`` keys it can see —
     FLOPs and traffic are O(S·window) instead of O(S^2) (the §Perf
     iteration-2 fix for sliding-window layers; a 21x FLOP cut at 32k/1024).
-    q: (B, S, Hq, D); k, v: (B, S, Hkv, D) — self-attention layout.
+    q: (B, S, Hq, D); k, v: (B, S, Hkv, D) — self-attention layout:
+    queries and keys share an origin (``q_offset`` shifts both together),
+    so a *resumed* prefill — queries starting mid-sequence against a longer
+    prefix+suffix key axis — must go through :func:`attend_chunked`'s
+    mask-only windowing instead (``lm._attn_apply`` routes this).
     """
     B, S, Hq, D = q.shape
     _, Sk, Hkv, _ = k.shape

@@ -31,9 +31,16 @@ class MoEConfig:
     group_size: int = 2048
     aux_loss_weight: float = 0.01
     impl: str = "einsum"   # "einsum" | "sort"
+    # dropless: capacity = the whole group, so routing never drops a token.
+    # Serving prefill uses this (a token's output must not depend on which
+    # other prompts share its dispatch group — the prerequisite for resuming
+    # a prompt from a cached prefix); training keeps GShard drop semantics.
+    dropless: bool = False
 
 
 def capacity(cfg: MoEConfig, group_tokens: int) -> int:
+    if cfg.dropless:
+        return -(-group_tokens // 4) * 4    # every token always fits
     c = int(group_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
     return max(cfg.top_k, -(-c // 4) * 4)   # round up to 4 for layout
 

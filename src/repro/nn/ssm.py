@@ -92,12 +92,19 @@ def wkv6_step(r1, k1, v1, w1, u, state):
 # Mamba-style selective SSM (diagonal state, data-dependent dt/B/C).
 # --------------------------------------------------------------------------
 
-def selective_scan(x, dt, A_log, Bm, Cm, D_skip, chunk: int = 32):
+def selective_scan(x, dt, A_log, Bm, Cm, D_skip, chunk: int = 32,
+                   state0=None):
     """x, dt: (B, S, d);  A_log: (d, N);  Bm, Cm: (B, S, N);  D_skip: (d,).
 
     h_t = exp(dt_t ⊙ A) h_{t-1} + (dt_t x_t) B_t;  y_t = (h_t C_t) + D x_t.
     Chunked: outer scan over S/chunk carries h (B, d, N); inner associative
     scan parallelizes within the chunk.  Returns (y (B,S,d), final h).
+
+    ``state0``: optional initial (B, d, N) f32 state (cache continuation —
+    chunked prefill resumes the stream mid-sequence).  The outer scan
+    threads the carry exactly, so a resumed scan is bit-identical to the
+    uninterrupted one whenever the chunk boundaries line up (``chunk=1``
+    makes the whole scan a sequential fold, decomposable at any position).
     """
     B, S, d = x.shape
     N = A_log.shape[-1]
@@ -128,7 +135,7 @@ def selective_scan(x, dt, A_log, Bm, Cm, D_skip, chunk: int = 32):
         y = jnp.einsum("bcdn,bcn->bcd", h, cc) + D_skip.astype(f32) * xc
         return h[:, -1], y
 
-    h0 = jnp.zeros((B, d, N), f32)
+    h0 = jnp.zeros((B, d, N), f32) if state0 is None else state0.astype(f32)
     hf, ys = jax.lax.scan(body, h0, (xr, dtr, Br, Cr))
     y = ys.transpose(1, 0, 2, 3).reshape(B, S, d)
     return y.astype(x.dtype), hf

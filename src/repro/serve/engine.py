@@ -152,9 +152,10 @@ def prefill(cfg: LMConfig, params, batch):
             x, kv0, _ = lm.decoder_block(cfg, p0, x, positions)
 
         def body(lp, x, idx):
-            x, kv, _ = lm.decoder_block(cfg, lp, x, positions,
-                                        window=layer_window(cfg, idx),
-                                        moe_layer=(fam == "moe"))
+            x, kv, _ = lm.decoder_block(
+                cfg, lp, x, positions, window=layer_window(cfg, idx),
+                moe_layer=(fam == "moe"),
+                moe_dropless=cfg.moe_dropless_prefill)
             return x, kv
         L = cfg.n_layers - (1 if fam == "moe" else 0)
         x, kvs = lm._stack_scan(cfg, params["blocks"], body, x,
@@ -290,6 +291,177 @@ def prefill(cfg: LMConfig, params, batch):
     logits = jnp.einsum("bsd,dv->bsv", x, head,
                         preferred_element_type=jnp.float32)
     return cache, logits[:, 0]
+
+
+# ==========================================================================
+# Chunked (suffix-only) prefill: resume from an existing KV prefix.
+# ==========================================================================
+
+def encode_cross(cfg: LMConfig, params, enc_embed):
+    """Encoder pass + per-decoder-layer cross K/V projections (encdec).
+
+    Returns (xk, xv): (L, B, enc_len, Hkv, Dh).  Factored out of
+    :func:`prefill` so a chunked prefill fold runs the encoder exactly once
+    per request — every chunk (and every resumed fold) then consumes the
+    same arrays, keeping the fold's cross-attention bit-stable.
+    """
+    assert cfg.family == "encdec", cfg.family
+    B = enc_embed.shape[0]
+    enc = enc_embed.astype(cfg.dtype)
+    enc = enc + _sinusoidal(enc.shape[1], cfg.d_model).astype(enc.dtype)
+    enc_pos = jnp.broadcast_to(jnp.arange(enc.shape[1]), (B, enc.shape[1]))
+
+    def enc_body(lp, h, _):
+        h, _, _ = lm.decoder_block(cfg, lp, h, enc_pos, causal=False)
+        return h, jnp.float32(0.0)
+    enc, _ = lm._stack_scan(cfg, params["enc_blocks"], enc_body, enc)
+    enc = _norm_apply(cfg, params["enc_norm"], enc)
+
+    def proj_body(lp, h, _):
+        kx = _proj(enc, lp["xattn"]["wk"]).reshape(
+            B, -1, cfg.n_kv_heads, cfg.d_head)
+        vx = _proj(enc, lp["xattn"]["wv"], lp["xattn"].get("bv")).reshape(
+            B, -1, cfg.n_kv_heads, cfg.d_head)
+        return h, (kx, vx)
+    _, (xk, xv) = lm._stack_scan(cfg, params["dec_blocks"], proj_body,
+                                 jnp.float32(0.0))
+    return xk, xv
+
+
+def prefill_chunked(cfg: LMConfig, params, batch, cache, q_offset: int):
+    """Process one prompt chunk against an existing KV prefix.
+
+    batch: {"tokens": (B, S_chunk)} — ONLY the tokens past the prefix.
+    ``cache``: the prefix context — k/v of exactly ``q_offset`` positions
+    on the sequence axis (zero-length arrays for a from-scratch fold), the
+    conv taps / SSM state at the boundary for the hybrid family, and the
+    precomputed :func:`encode_cross` xk/xv for encdec.  Returns (cache
+    covering prefix+chunk, last-chunk-token logits).
+
+    This is the step function of the serving **prefill fold**: a prompt is
+    prefilled as a sequence of fixed-size chunks, and a radix prefix hit of
+    H blocks resumes the fold at chunk H with the prefix gathered from the
+    block arena.  Bit-exactness of the resume is structural: chunk j has
+    the same static shapes whether the fold started at 0 or at H <= j, so
+    XLA compiles the identical executable and the resumed fold reproduces
+    the cold fold's K/V and logits bit-for-bit (tests/test_chunked_prefill
+    asserts exactly this).  ``cfg.kv_quant`` is unsupported (the int8 cache
+    no longer holds the pre-quantization values prefill attends over).
+    """
+    assert not cfg.kv_quant, "chunked prefill: int8 KV prefix unsupported"
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = lm.embed_tokens(cfg, params, tokens, pos_offset=q_offset)
+    positions = jnp.broadcast_to(jnp.arange(q_offset, q_offset + S), (B, S))
+    fam = cfg.family
+    new_cache = {"len": jnp.int32(q_offset + S)}
+    assert fam in ("decoder", "moe", "hybrid", "encdec"), fam
+    pk_all, pv_all = cache["k"], cache["v"]     # (L, B, q_offset, Hkv, Dh)
+    assert pk_all.shape[-3] == q_offset, (pk_all.shape, q_offset)
+
+    if fam in ("decoder", "moe"):
+        if fam == "moe":
+            p0 = jax.tree.map(lambda a: a[0], params["dense0"])
+            x, kv0, _ = lm.decoder_block(cfg, p0, x, positions,
+                                         q_offset=q_offset,
+                                         kv_prefix=(pk_all[0], pv_all[0]))
+
+        def body(lp, x, inp):
+            pk, pv, idx = inp
+            x, kv, _ = lm.decoder_block(cfg, lp, x, positions,
+                                        window=layer_window(cfg, idx),
+                                        moe_layer=(fam == "moe"),
+                                        moe_dropless=cfg.moe_dropless_prefill,
+                                        q_offset=q_offset,
+                                        kv_prefix=(pk, pv))
+            return x, kv
+        L = cfg.n_layers - (1 if fam == "moe" else 0)
+        off = 1 if fam == "moe" else 0
+        x, kvs = lm._stack_scan(cfg, params["blocks"], body, x,
+                                (pk_all[off:], pv_all[off:],
+                                 jnp.arange(L, dtype=jnp.int32)))
+        k, v = kvs
+        if fam == "moe":
+            k = jnp.concatenate([kv0[0][None], k], 0)
+            v = jnp.concatenate([kv0[1][None], v], 0)
+        new_cache["k"], new_cache["v"] = k, v
+
+    elif fam == "hybrid":
+        if lm.hybrid_grouped(cfg):
+            G, ge = cfg.n_layers // cfg.global_every, cfg.global_every
+            regroup = lambda a: a.reshape((G, ge) + a.shape[1:])
+            grouped = jax.tree.map(regroup, params["blocks"])
+            xs = (grouped, regroup(pk_all), regroup(pv_all),
+                  regroup(cache["conv"]), regroup(cache["ssm"]))
+
+            def group_body(inp, x, _):
+                gp, pk, pv, conv, ssm_st = inp
+                g0 = jax.tree.map(lambda a: a[0], gp)
+                rest = jax.tree.map(lambda a: a[1:], gp)
+                x, kv0, st0 = lm.hymba_block(
+                    cfg, g0, x, positions,
+                    {"conv": conv[0], "ssm": ssm_st[0]}, window=0,
+                    q_offset=q_offset, kv_prefix=(pk[0], pv[0]))
+
+                def inner(lp, x, einp):
+                    ipk, ipv, iconv, issm = einp
+                    x, kv, st = lm.hymba_block(
+                        cfg, lp, x, positions,
+                        {"conv": iconv, "ssm": issm}, window=cfg.window,
+                        q_offset=q_offset, kv_prefix=(ipk, ipv))
+                    return x, (kv, st)
+                x, (kvs, sts) = lm._stack_scan(
+                    cfg, rest, inner, x,
+                    (pk[1:], pv[1:], conv[1:], ssm_st[1:]))
+                kv_all = jax.tree.map(
+                    lambda a0, a: jnp.concatenate([a0[None], a], 0),
+                    kv0, kvs)
+                st_all = jax.tree.map(
+                    lambda a0, a: jnp.concatenate([a0[None], a], 0),
+                    st0, sts)
+                return x, (kv_all, st_all)
+
+            def outer(carry, inp):
+                return lm._maybe_remat(cfg, group_body)(inp, carry, None)
+            x, (kvs, states) = jax.lax.scan(outer, x, xs)
+            kvs = jax.tree.map(
+                lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), kvs)
+            states = jax.tree.map(
+                lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), states)
+        else:
+            def body(lp, x, inp):
+                pk, pv, conv, ssm_st, idx = inp
+                x, kv, st = lm.hymba_block(
+                    cfg, lp, x, positions, {"conv": conv, "ssm": ssm_st},
+                    window=layer_window(cfg, idx), q_offset=q_offset,
+                    kv_prefix=(pk, pv))
+                return x, (kv, st)
+            x, (kvs, states) = lm._stack_scan(
+                cfg, params["blocks"], body, x,
+                (pk_all, pv_all, cache["conv"], cache["ssm"],
+                 jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+        new_cache["k"], new_cache["v"] = kvs
+        new_cache.update(states)
+
+    elif fam == "encdec":
+        # cross K/V come precomputed from encode_cross — the whole fold
+        # (every chunk, cold or resumed) consumes the same arrays
+        def dec_body(lp, x, inp):
+            pk, pv, kx, vx = inp
+            x, kv = lm.cross_block(cfg, lp, x, positions,
+                                   (kx.astype(x.dtype), vx.astype(x.dtype)),
+                                   q_offset=q_offset, kv_prefix=(pk, pv))
+            return x, kv
+        x, kvs = lm._stack_scan(cfg, params["dec_blocks"], dec_body, x,
+                                (pk_all, pv_all, cache["xk"], cache["xv"]))
+        new_cache["k"], new_cache["v"] = kvs
+        new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+
+    x = _norm_apply(cfg, params["final_norm"], x[:, -1:])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head,
+                        preferred_element_type=jnp.float32)
+    return new_cache, logits[:, 0]
 
 
 # ==========================================================================

@@ -228,15 +228,21 @@ class PromptGateway:
             now += time.perf_counter() - t0
             for req in finished:
                 n_tokens = len(req.prompt) + len(req.generated)
+                # prefix-cache resumes skip the frontend compute for the
+                # shared prompt tokens; the link still carries every token
+                processed = n_tokens - req.prefill_tokens_skipped
                 link = self.bytes_per_token * n_tokens
-                energy_nj = self._token_energy_nj * n_tokens \
+                energy_nj = self._token_energy_nj * processed \
                     + link * E_LINK_PJ_PER_BYTE * 1e-3
                 tel.record(RequestRecord(
                     uid=req.uid, endpoint=arr_ep[req.uid], kind="prompt",
                     t_arrival=arr_t[req.uid], t_done=now,
                     energy_nj=energy_nj, link_bytes=link,
                     output=req.generated[-1], kv_blocks=req.kv_blocks,
-                    prefix_hit_blocks=req.prefix_hit_blocks))
+                    prefix_hit_blocks=req.prefix_hit_blocks,
+                    prefill_tokens_skipped=req.prefill_tokens_skipped,
+                    energy_saved_nj=self._token_energy_nj
+                    * req.prefill_tokens_skipped))
         pool_stats = getattr(self.batcher.adapter, "pool_stats", None)
         if pool_stats is not None:
             tel.record_pool(pool_stats())

@@ -60,6 +60,8 @@ class Request:
     # paged-adapter accounting, stamped at retire (0 under dense slots)
     kv_blocks: int = 0
     prefix_hit_blocks: int = 0
+    # prompt tokens whose prefill was skipped via a prefix-cache resume
+    prefill_tokens_skipped: int = 0
 
     @property
     def done(self) -> bool:
@@ -187,13 +189,16 @@ class KVSlotAdapter:
 def make_adapter(cfg: LMConfig, params, n_slots: int, max_len: int = 128,
                  extras: Callable[[], dict] | None = None, *,
                  paged: bool = False, block_size: int = 16,
-                 num_blocks: int | None = None):
+                 num_blocks: int | None = None, chunked: bool = True):
     """Family dispatch: state slots for rwkv, KV slots for everything else.
 
     ``paged=True`` swaps the dense per-slot KV buffers for the block-pool
     adapter (``serve/kvcache/``): same batcher surface, shared-prefix blocks,
-    and admission priced in blocks instead of whole slots.  rwkv has O(1)
-    state, so ``paged`` is a no-op for it.
+    and admission priced in blocks instead of whole slots.  ``chunked``
+    (paged only) prefills via the block-size chunk fold so prefix hits skip
+    recomputing the shared prompt; ``chunked=False`` keeps the one-shot
+    prefill with storage-only sharing.  rwkv has O(1) state, so ``paged``
+    is a no-op for it.
     """
     if cfg.family == "rwkv":
         return StateSlotAdapter(cfg, params, n_slots)
@@ -201,7 +206,8 @@ def make_adapter(cfg: LMConfig, params, n_slots: int, max_len: int = 128,
         from repro.serve.kvcache import PagedKVSlotAdapter
         return PagedKVSlotAdapter(cfg, params, n_slots, max_len,
                                   block_size=block_size,
-                                  num_blocks=num_blocks, extras=extras)
+                                  num_blocks=num_blocks, extras=extras,
+                                  chunked=chunked)
     return KVSlotAdapter(cfg, params, n_slots, max_len, extras)
 
 
@@ -252,6 +258,7 @@ class ContinuousBatcher:
             st = stats(slot)
             req.kv_blocks = st.get("kv_blocks", 0)
             req.prefix_hit_blocks = st.get("prefix_hit_blocks", 0)
+            req.prefill_tokens_skipped = st.get("prefill_tokens_skipped", 0)
 
     @property
     def busy(self) -> bool:
@@ -287,6 +294,18 @@ class ContinuousBatcher:
                     continue
                 self.active[slot] = req
                 self.last_token[slot] = tok
+        # a slot whose context filled every KV block cannot take another
+        # token — surface it as finished instead of letting its next write
+        # be silently clamped onto the final (possibly shared) block
+        cap = getattr(self.adapter, "at_capacity", None)
+        if cap is not None:
+            for slot, req in enumerate(self.active):
+                if req is not None and cap(slot):
+                    self._stamp_stats(slot, req)
+                    finished.append(req)
+                    self.active[slot] = None
+                    self.adapter.clear(slot)
+                    self.last_token[slot] = 0
         active = np.asarray([r is not None for r in self.active])
         self.peak_active = max(self.peak_active, int(active.sum()))
         if not active.any():

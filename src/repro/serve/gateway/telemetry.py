@@ -34,6 +34,11 @@ class RequestRecord:
     output: int = -1             # predicted class / last token
     kv_blocks: int = 0           # paged KV blocks reserved (0 = dense slots)
     prefix_hit_blocks: int = 0   # of those, satisfied from the radix index
+    # prompt tokens never prefilled (prefix-cache resume); energy_nj covers
+    # only the tokens actually processed, energy_saved_nj is the frontend
+    # energy those skipped tokens would have cost (scaled_report pricing)
+    prefill_tokens_skipped: int = 0
+    energy_saved_nj: float = 0.0
 
     @property
     def latency_s(self) -> float:
@@ -108,6 +113,10 @@ class Telemetry:
                 out["kv_blocks_per_req"] = kv / len(recs)
                 out["kv_prefix_hit_blocks_per_req"] = \
                     sum(r.prefix_hit_blocks for r in recs) / len(recs)
+                out["prefill_tokens_skipped_per_req"] = \
+                    sum(r.prefill_tokens_skipped for r in recs) / len(recs)
+                out["prefill_energy_saved_nj"] = \
+                    float(sum(r.energy_saved_nj for r in recs))
         if self.pool and kind in (None, "prompt"):
             out["pool"] = dict(self.pool)
         return out

@@ -28,15 +28,36 @@ Sharing / copy-on-write
     carries a pre-allocated *spare* and copies into it before its first
     write (copy-on-write) — the sibling keeps the original, bit-for-bit.
 
+Chunked prefill (prefix-hit compute skipping)
+    Admission prefills a prompt as a *fold* of fixed block-size chunks
+    through :func:`engine.prefill_chunked` — chunk j extends the KV prefix
+    of j*bs positions by one block.  A radix prefix hit of H blocks gathers
+    those blocks from the arena and resumes the fold at chunk H: the shared
+    prompt's transformer work is skipped, not just its storage.  Chunk j's
+    compiled graph has the same static shapes whether the fold started at
+    0 or resumed at H, so a resumed prefill is *bitwise* identical to the
+    cold one — same logits, same written blocks.  Hybrid (SSM) resumption
+    additionally needs the recurrent state at the boundary; the fold
+    snapshots it per indexed chain key (dropped when the pool unindexes the
+    key), and falls back to an earlier boundary (or a cold fold) when the
+    snapshot is gone.  ``chunked=False`` keeps the one-shot prefill path of
+    PR 2 (share storage, recompute everything; lazy copy-on-write).
+
 Admission control
     ``can_admit`` prices a request at its worst case,
-    ``ceil((P + max_new) / bs)`` blocks minus full-prefix hits (a partial
-    hit is net zero: the spare takes its place), and admits only when the
-    pool's free + evictable supply covers it — the batcher queues the
-    request otherwise instead of letting an allocation fail mid-flight.
+    ``ceil((P + max_new) / bs)`` blocks minus full-prefix hits, and admits
+    only when the pool's free + evictable supply covers it — the batcher
+    queues the request otherwise instead of letting an allocation fail
+    mid-flight.  The boundary (partial) block is priced once: under the
+    chunked fold the slot recomputes it into its own spare (already inside
+    ``n_total - hits``) without ever referencing the shared partial, while
+    the legacy path additionally holds the shared partial (its LRU revival
+    consumes supply) and may oblige existing holders to take copy-on-write
+    spares — see ``_admission_demand``.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Callable
 
 import jax
@@ -66,7 +87,8 @@ class PagedKVSlotAdapter:
 
     def __init__(self, cfg: LMConfig, params, n_slots: int, max_len: int,
                  *, block_size: int = 16, num_blocks: int | None = None,
-                 extras: Callable[[], dict] | None = None):
+                 extras: Callable[[], dict] | None = None,
+                 chunked: bool = True):
         assert cfg.family != "rwkv", "rwkv has O(1) state; nothing to page"
         self.cfg = cfg
         self.params = params
@@ -75,12 +97,30 @@ class PagedKVSlotAdapter:
         self.nb_max = -(-max_len // block_size)
         self.max_len = self.nb_max * block_size
         self.extras = extras
+        # chunked prefill needs the pre-quantization KV the int8 cache no
+        # longer holds, and a family prefill_chunked implements
+        self.chunked = (chunked and not cfg.kv_quant and cfg.family in
+                        ("decoder", "moe", "hybrid", "encdec"))
         if num_blocks is None:
             # dense-equivalent capacity + the reserved trash block
             num_blocks = n_slots * self.nb_max + 1
         self.pool = BlockPool(num_blocks, block_size)
         self.arena = engine.init_paged_arena(cfg, num_blocks, block_size)
         self.seq_keys = tuple(self.arena)
+        # hybrid: recurrent (conv/ssm) state at each indexed block boundary,
+        # keyed by the boundary's chain key — what lets an SSM stream resume
+        # mid-prompt; invalidated with the index entry itself.  Entries are
+        # naturally bounded by the indexed-key count (<= pool capacity), and
+        # an explicit LRU cap keeps the side cache's bytes proportional to
+        # the arena budget even so (evicting one only costs a longer
+        # re-fold); pool_stats reports the bytes it holds.
+        self._boundary_states: "OrderedDict[bytes, dict]" = OrderedDict()
+        self._max_boundary_states = self.pool.capacity
+        self.pool.on_unindex = \
+            lambda bid, key: self._boundary_states.pop(key, None)
+        # compute-skip telemetry (prefill_tokens_* in pool_stats)
+        self.prefill_tokens_total = 0
+        self.prefill_tokens_skipped_total = 0
 
         # densely slot-stacked non-sequence state (incl. the scalar "len")
         cache0 = engine.init_cache(cfg, 1, self.max_len)
@@ -106,6 +146,17 @@ class PagedKVSlotAdapter:
         self.peak_bytes_saved = 0
 
         self._prefill = jax.jit(lambda p, b: engine.prefill(cfg, p, b))
+        # the chunked-prefill fold: one step per prompt block.  jit
+        # specializes per (q_offset, chunk/prefix shape) — a fixed bucket
+        # set in the steady state, shared by cold and resumed folds (that
+        # sharing is what makes a resume bitwise: same executable)
+        self._chunk_fn = jax.jit(
+            lambda p, batch, cache, q: engine.prefill_chunked(
+                cfg, p, batch, cache, q),
+            static_argnums=(3,))
+        self._gather_prefix = jax.jit(self._gather_prefix_impl)
+        if cfg.family == "encdec":
+            self._encode = jax.jit(lambda p, e: engine.encode_cross(cfg, p, e))
         # donate the arena (and dense cache) through every call that rebinds
         # it, so the .at[].set updates alias in place instead of holding a
         # second full arena copy — the whole point of the fixed byte budget.
@@ -136,6 +187,70 @@ class PagedKVSlotAdapter:
             out[key] = arena[key].at[wbids].set(b)
         return out
 
+    def _gather_prefix_impl(self, arena, bids):
+        """Gather an H-block chain into the dense prefix layout that
+        :func:`engine.prefill_chunked` consumes: per sequence key,
+        ``(nb,) + block shape -> (..., nb*bs, *post)`` (B=1 row)."""
+        out = {}
+        for key in self.seq_keys:
+            g = jnp.take(arena[key], bids, axis=0)
+            g = jnp.moveaxis(g, 0, g.ndim - 4)  # (*pre, nb, bs, *post)
+            out[key] = g.reshape(g.shape[:g.ndim - 4]
+                                 + (bids.shape[0] * self.bs,) + g.shape[-2:])
+        return out
+
+    # -- the chunked-prefill fold -------------------------------------------
+
+    def _prefix_cache(self, n_blocks: int, bids=None, state=None):
+        """Prefix cache for a fold starting at block ``n_blocks``: gathered
+        arena blocks (or zero-length arrays for a cold fold), the hybrid
+        boundary state, and the encdec cross K/V."""
+        q0 = n_blocks * self.bs
+        if n_blocks:
+            cache = dict(self._gather_prefix(self.arena,
+                                             jnp.asarray(bids, jnp.int32)))
+        else:
+            empty = engine.init_cache(self.cfg, 1, 0, abstract=True)
+            cache = {key: jnp.zeros(empty[key].shape, empty[key].dtype)
+                     for key in self.seq_keys if key in empty}
+        cache["len"] = jnp.int32(q0)
+        if self.cfg.family == "hybrid":
+            if state is None:
+                L = self.cfg.n_layers
+                state = {
+                    "conv": jnp.zeros((L, 1, self.cfg.conv_k - 1,
+                                       self.cfg.inner), self.cfg.dtype),
+                    "ssm": jnp.zeros((L, 1, self.cfg.inner,
+                                      self.cfg.ssm_state), jnp.float32)}
+            cache.update(state)
+        if self.cfg.family == "encdec":
+            batch = self.extras() if self.extras is not None else {}
+            cache["xk"], cache["xv"] = self._encode(self.params,
+                                                    batch["enc_embed"])
+        return cache
+
+    def _fold_prefill(self, prompt: np.ndarray, q0: int, cache,
+                      keys: list[bytes]):
+        """Run the chunk fold over ``prompt[q0:]``.  Returns (final cache,
+        last-token logits, boundary-state snapshots to commit on success)."""
+        P = len(prompt)
+        n_full = P // self.bs
+        snapshots: list[tuple[bytes, dict]] = []
+        q, logits = q0, None
+        while q < P:
+            c = min(self.bs, P - q)
+            batch = {"tokens": jnp.asarray(
+                np.asarray(prompt[q:q + c], np.int32)[None])}
+            cache, logits = self._chunk_fn(self.params, batch, cache, q)
+            q += c
+            if (self.cfg.family == "hybrid" and q % self.bs == 0
+                    and q // self.bs <= n_full):
+                key = keys[q // self.bs - 1]
+                if key not in self._boundary_states:
+                    snapshots.append((key, {"conv": cache["conv"],
+                                            "ssm": cache["ssm"]}))
+        return cache, logits, snapshots
+
     def _tick_impl(self, p, arena, dense, tables, tokens, mask, wbids):
         """gather -> vmapped decode_step -> scatter the written blocks."""
         cache = dict(dense)
@@ -152,7 +267,11 @@ class PagedKVSlotAdapter:
             mask.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
         new_dense = {key: sel(new_cache[key], dense[key]) for key in dense}
         # each slot wrote exactly one position (pre-increment len), hence
-        # exactly one block; inactive lanes target the trash block
+        # exactly one block; inactive lanes target the trash block.  The
+        # clamp only keeps the dynamic_slice of *inactive* lanes in range —
+        # at-capacity lanes (len == max_len) are masked to the trash block
+        # host-side in decode(), never clamped onto a real (possibly
+        # shared) final block.
         start = jnp.minimum((dense["len"] // self.bs) * self.bs,
                             self.max_len - self.bs)
         new_arena = {}
@@ -184,28 +303,43 @@ class PagedKVSlotAdapter:
                    and self.partial_reg[s][1] == partial_hit
                    and self.cow_spare[s] is None)
 
-    def can_admit(self, prompt: np.ndarray, max_new: int) -> bool:
-        """Worst-case block demand vs free + evictable supply.
+    def _admission_demand(self, prompt: np.ndarray, max_new: int) -> int:
+        """Exact worst-case supply (free + evictable) an ``insert`` of this
+        request consumes — asserted against the measured delta in
+        tests/test_chunked_prefill.py.
 
-        Full-prefix hits reduce *allocations* one-for-one; a partial hit is
-        net zero (its copy-on-write spare replaces the fresh partial block
-        it would otherwise allocate), but may oblige existing holders to
-        take spares of their own (``_arming_demand``).  A hit currently
-        parked in the LRU still consumes supply when revived — it leaves the
-        evictable pool without an allocation — so it counts toward demand;
-        otherwise admission would overcommit exactly in the prefix-cache-
-        warm steady state and ``insert`` would raise mid-flight.
+        Every path: ``ceil((P + max_new)/bs)`` chain blocks minus full-
+        prefix hits (referenced, not allocated), plus one unit per hit
+        currently parked in the LRU (revival removes an evictable block
+        without an allocation — ignoring it would overcommit exactly in the
+        prefix-cache-warm steady state).
+
+        The boundary (partial) block differs by path and must be priced
+        once, not twice.  Chunked fold: the slot recomputes the boundary
+        chunk into its own fresh block — already inside ``n_total - hits``
+        — and never references the shared partial, so a partial hit adds
+        nothing.  Legacy one-shot path: the shared partial is additionally
+        held for the slot's lifetime (its LRU revival consumes supply) and
+        newly-shared status obliges existing holders to take copy-on-write
+        spares (``_arming_demand``).
         """
         pool = self.pool
         n_total = self._block_demand(len(prompt), max_new)
         hits, partial_hit, _, _ = pool.match_prefix(
             np.asarray(prompt, np.int32), count=False)
         revived = sum(1 for b in hits if pool.refcount[b] == 0)
-        if partial_hit is not None and pool.refcount[partial_hit] == 0:
-            revived += 1
-        demand = n_total - len(hits) + revived \
-            + self._arming_demand(partial_hit)
-        return demand <= pool.available()
+        demand = n_total - len(hits) + revived
+        if not self.chunked:
+            if partial_hit is not None and pool.refcount[partial_hit] == 0:
+                demand += 1
+            demand += self._arming_demand(partial_hit)
+        return demand
+
+    def can_admit(self, prompt: np.ndarray, max_new: int) -> bool:
+        """Worst-case block demand vs free + evictable supply; the batcher
+        queues the request when it does not fit (never fails mid-flight)."""
+        return self._admission_demand(prompt, max_new) <= \
+            self.pool.available()
 
     # -- slot lifecycle ------------------------------------------------------
 
@@ -217,17 +351,128 @@ class PagedKVSlotAdapter:
         if P + max_new > self.max_len:
             raise ValueError(f"prompt {P} + {max_new} new tokens exceeds "
                              f"slot capacity {self.max_len}")
-        pool = self.pool
+        prompt = np.asarray(prompt, np.int32)
         n_total = self._block_demand(P, max_new)
         n_full = P // self.bs
-        hits, partial_hit, keys, pkey = pool.match_prefix(
-            np.asarray(prompt, np.int32))
+        hits, partial_hit, keys, pkey = self.pool.match_prefix(prompt)
+        if self.chunked:
+            return self._insert_chunked(slot, prompt, n_total, n_full,
+                                        hits, partial_hit, keys, pkey)
+        return self._insert_oneshot(slot, prompt, n_total, n_full,
+                                    hits, partial_hit, keys, pkey)
 
+    def _resume_blocks(self, P: int, hits: list[int],
+                       keys: list[bytes]) -> int:
+        """How many prefix blocks the fold can skip: the hit chain, capped
+        so at least one prompt token remains (the fold must produce the
+        last-token logits), and for hybrid capped at the deepest boundary
+        whose recurrent-state snapshot is still cached."""
+        H = len(hits)
+        if self.cfg.family == "hybrid":
+            while H > 0 and keys[H - 1] not in self._boundary_states:
+                H -= 1
+        while H > 0 and H * self.bs >= P:
+            H -= 1
+        return H
+
+    def _insert_chunked(self, slot: int, prompt: np.ndarray, n_total: int,
+                        n_full: int, hits, partial_hit, keys, pkey) -> int:
+        """Chunk-fold admission: reference every full-block hit (storage
+        sharing), resume the prefill fold past the deepest usable boundary
+        (compute skipping), and recompute the trailing partial chunk into a
+        private block — the shared partial is never referenced, so no
+        copy-on-write arming and nothing to disarm on rollback."""
+        P = len(prompt)
+        pool = self.pool
         # take references on every hit before allocating (allocation may
         # evict from the LRU the hits are parked in); on exhaustion release
         # everything this insert took so a failed admission leaks nothing
+        bids: list[int] = []
+        fresh: list[tuple[int, bytes | None, int]] = []  # (blk_idx, key, bid)
+        try:
+            bids.extend(pool.acquire(b) for b in hits)
+            for j in range(len(hits), n_full):
+                b = pool.alloc()
+                fresh.append((j, keys[j], b))
+                bids.append(b)
+            if n_full * self.bs < P:                   # partial prompt block
+                b = pool.alloc()
+                # register only when the chunk is not already indexed by a
+                # sibling (first registration wins anyway); the block is
+                # private either way — decode writes it in place
+                fresh.append((n_full, None if partial_hit is not None
+                              else pkey, b))
+                bids.append(b)
+            while len(bids) < n_total:                 # generation blocks
+                bids.append(pool.alloc())
+        except PoolExhausted:
+            for b in bids:
+                pool.release(b)
+            raise
+
+        H = self._resume_blocks(P, hits, keys)
+        q0 = H * self.bs
+        state = None
+        if H and self.cfg.family == "hybrid":
+            state = self._boundary_states[keys[H - 1]]
+            self._boundary_states.move_to_end(keys[H - 1])   # LRU recency
+        cache = self._prefix_cache(H, bids[:H] if H else None, state)
+        cache, logits, snapshots = self._fold_prefill(prompt, q0, cache,
+                                                      keys)
+        cache = dict(cache)
+        padded = {key: _pad_seq(cache.pop(key), self.max_len)
+                  for key in self.seq_keys}
+        wbids = np.zeros(self.nb_max, np.int32)
+        for j, key, b in fresh:
+            wbids[j] = b
+        self.arena = self._scatter(self.arena, padded, jnp.asarray(wbids))
+        # index only after the contents exist (a failed insert must never
+        # leave a key pointing at an unwritten block)
+        for j, key, b in fresh:
+            if key is not None:
+                pool.register(key, b, partial=j >= n_full)
+                if j >= n_full:
+                    self.partial_reg[slot] = (j, b)
+        for key, st in snapshots:
+            self._boundary_states.setdefault(key, st)
+            self._boundary_states.move_to_end(key)
+        while len(self._boundary_states) > self._max_boundary_states:
+            self._boundary_states.popitem(last=False)
+        for key in self.cache:
+            if key == "len":
+                continue
+            self.cache[key] = self.cache[key].at[slot].set(cache[key])
+        self.cache["len"] = self.cache["len"].at[slot].set(P)
+
+        self.tables[slot, :] = TRASH_BLOCK
+        self.tables[slot, :len(bids)] = bids
+        self.lens[slot] = P
+        self.slot_bids[slot] = bids
+        self.prefill_tokens_total += P
+        self.prefill_tokens_skipped_total += q0
+        self._stats[slot] = {
+            "kv_blocks": n_total,
+            "prefix_hit_blocks": len(hits)
+            + (1 if partial_hit is not None else 0),
+            "prefill_tokens_skipped": q0}
+        self._update_peaks()
+        return int(jnp.argmax(logits[0]))
+
+    def _insert_oneshot(self, slot: int, prompt: np.ndarray, n_total: int,
+                        n_full: int, hits, partial_hit, keys, pkey) -> int:
+        """Legacy (PR 2) path: one-shot prefill over the whole prompt —
+        storage is shared (hit blocks are referenced, their recomputed
+        values discarded) but no compute is skipped; a shared partial block
+        is held read-only with lazy copy-on-write."""
+        P = len(prompt)
+        pool = self.pool
+        # take references on every hit before allocating (allocation may
+        # evict from the LRU the hits are parked in); on exhaustion release
+        # everything this insert took — including the spares it armed other
+        # holders with — so a failed admission leaks nothing
         bids = []
         fresh: list[tuple[int, bytes, int]] = []       # (blk_idx, key, bid)
+        armed: list[tuple[int, tuple[int, int]]] = []  # (slot, partial_reg)
         try:
             bids.extend(pool.acquire(b) for b in hits)
             for j in range(len(hits), n_full):
@@ -237,7 +482,7 @@ class PagedKVSlotAdapter:
             if n_full * self.bs < P:                   # partial prompt block
                 if partial_hit is not None:
                     # share it; every holder copies before its first write
-                    self._arm_holders(partial_hit)
+                    self._arm_holders(partial_hit, armed)
                     pool.acquire(partial_hit)
                     bids.append(partial_hit)
                     self.cow_blk[slot] = n_full
@@ -255,11 +500,15 @@ class PagedKVSlotAdapter:
                 pool.release(self.cow_spare[slot])
             self.cow_blk[slot] = self.cow_spare[slot] = None
             self.partial_reg[slot] = None
+            for s, prev in armed:                      # disarm: un-leak the
+                pool.release(self.cow_spare[s])        # holders' spares
+                self.cow_blk[s] = self.cow_spare[s] = None
+                self.partial_reg[s] = prev
             raise
 
         # prefill and write the freshly-owned prompt blocks into the arena;
         # shared blocks keep the sibling's (bit-identical) values
-        batch = {"tokens": jnp.asarray(np.asarray(prompt, np.int32)[None])}
+        batch = {"tokens": jnp.asarray(prompt[None])}
         if self.extras is not None:
             batch.update(self.extras())
         cache1, logits = self._prefill(self.params, batch)
@@ -287,10 +536,12 @@ class PagedKVSlotAdapter:
         self.tables[slot, :len(bids)] = bids
         self.lens[slot] = P
         self.slot_bids[slot] = bids
+        self.prefill_tokens_total += P
         self._stats[slot] = {
             "kv_blocks": n_total,
             "prefix_hit_blocks": len(hits)
-            + (1 if partial_hit is not None else 0)}
+            + (1 if partial_hit is not None else 0),
+            "prefill_tokens_skipped": 0}
         self._update_peaks()
         return int(jnp.argmax(logits[0]))
 
@@ -301,14 +552,23 @@ class PagedKVSlotAdapter:
         self.peak_blocks_in_use = max(self.peak_blocks_in_use, in_use)
         self.peak_bytes_saved = max(self.peak_bytes_saved, saved)
 
-    def _arm_holders(self, bid: int) -> None:
-        """Give every live holder of a newly-shared partial block a spare."""
+    def _arm_holders(self, bid: int,
+                     armed: list[tuple[int, tuple[int, int]]]) -> None:
+        """Give every live holder of a newly-shared partial block a spare.
+
+        Each successfully armed holder is appended to ``armed`` (with its
+        prior ``partial_reg`` entry) *before* the next allocation can
+        raise, so the caller's rollback can disarm exactly the holders this
+        insert armed — spares must not leak on a failed admission."""
         for s in range(self.n_slots):
             if (self.partial_reg[s] and self.partial_reg[s][1] == bid
                     and self.cow_spare[s] is None):
-                self.cow_blk[s] = self.partial_reg[s][0]
-                self.cow_spare[s] = self.pool.alloc()
+                prev = self.partial_reg[s]
+                spare = self.pool.alloc()
+                self.cow_blk[s] = prev[0]
+                self.cow_spare[s] = spare
                 self.partial_reg[s] = None
+                armed.append((s, prev))
 
     def clear(self, slot: int) -> None:
         for bid in self.slot_bids[slot]:
@@ -324,10 +584,24 @@ class PagedKVSlotAdapter:
 
     # -- decode --------------------------------------------------------------
 
+    def at_capacity(self, slot: int) -> bool:
+        """A slot whose context has filled every block cannot take another
+        token: its next write has no block to land in.  The batcher
+        discovers this hook and retires such a request as finished."""
+        return bool(self.slot_bids[slot]) and \
+            int(self.lens[slot]) >= self.max_len
+
     def decode(self, tokens: np.ndarray, active: np.ndarray) -> np.ndarray:
-        active = np.asarray(active, bool)
+        active = np.asarray(active, bool).copy()
         wbids = np.full(self.n_slots, TRASH_BLOCK, np.int32)
         for slot in np.nonzero(active)[0]:
+            if self.at_capacity(slot):
+                # a full slot must not scatter: len // bs indexes past the
+                # table and the pre-fix clamp silently overwrote the final
+                # block — which may be a *shared* prefix block.  Route the
+                # lane to the trash block and keep its state frozen.
+                active[slot] = False
+                continue
             blk = int(self.lens[slot]) // self.bs
             bid = int(self.tables[slot, blk])
             if self.cow_blk[slot] is not None and blk == self.cow_blk[slot]:
@@ -367,4 +641,9 @@ class PagedKVSlotAdapter:
                                       - st["bytes_paged"])
         st["peak_blocks_in_use"] = self.peak_blocks_in_use
         st["peak_bytes_saved_vs_dense"] = self.peak_bytes_saved
+        st["prefill_tokens_total"] = self.prefill_tokens_total
+        st["prefill_tokens_skipped"] = self.prefill_tokens_skipped_total
+        st["boundary_state_bytes"] = sum(
+            a.nbytes for state in self._boundary_states.values()
+            for a in state.values())
         return st

@@ -78,6 +78,11 @@ class BlockPool:
         self.block_key: dict[int, bytes] = {}    # inverse (for eviction)
         self.partial_blocks: set[int] = set()    # indexed-partial block ids
         self.lru: OrderedDict[int, None] = OrderedDict()  # evictable blocks
+        # observer: called as on_unindex(bid, key) whenever a key leaves the
+        # index (eviction / partial invalidation) — the paged adapter hangs
+        # its per-boundary recurrent-state side cache off this, so that
+        # cache can never outlive the blocks it describes
+        self.on_unindex = None
         # counters (surfaced through gateway telemetry)
         self.evictions = 0
         self.prefix_queries = 0
@@ -164,6 +169,8 @@ class BlockPool:
         key = self.block_key.pop(bid, None)
         if key is not None:
             self.index.pop(key, None)
+            if self.on_unindex is not None:
+                self.on_unindex(bid, key)
         self.partial_blocks.discard(bid)
 
     # -- prefix matching ---------------------------------------------------

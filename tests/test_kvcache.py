@@ -175,13 +175,16 @@ def test_cow_divergence_preserves_sibling_bitwise():
     """Two requests sharing a partial prompt block are forced to write
     *different* tokens into it.  Copy-on-write must give each its own copy:
     every decode step's logits match a 2-slot dense adapter running the same
-    isolated requests, bit for bit."""
+    isolated requests, bit for bit.  (``chunked=False``: the legacy
+    one-shot path is what shares the partial block read-only and copies
+    lazily; the chunk fold recomputes it into a private block instead —
+    its isolation is covered in tests/test_chunked_prefill.py.)"""
     cfg, params, _ = _setup("stablelm_3b")
     rng = np.random.default_rng(3)
     bs, max_len = 4, 32
     prompt = rng.integers(0, cfg.vocab, size=6, dtype=np.int32)  # partial blk
     paged = make_adapter(cfg, params, n_slots=2, max_len=max_len,
-                         paged=True, block_size=bs)
+                         paged=True, block_size=bs, chunked=False)
     dense = make_adapter(cfg, params, n_slots=2, max_len=max_len)
     paged.insert(0, prompt, max_new=8)
     paged.insert(1, prompt, max_new=8)
