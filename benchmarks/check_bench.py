@@ -27,7 +27,7 @@ SCHEMAS = {
     "kvcache": (
         {"bench": str, "budget_bytes": numbers.Integral,
          "max_len": numbers.Integral, "block_size": numbers.Integral,
-         "results": list, "paged_gt_dense": bool},
+         "results": list, "paged_gt_dense": bool, "decode_tick": list},
         {"layout": str, "budget_bytes": numbers.Integral,
          "kv_bytes_allocated": numbers.Integral,
          "n_slots": numbers.Integral,
@@ -36,6 +36,18 @@ SCHEMAS = {
          "p50_latency_ms": numbers.Real, "p99_latency_ms": numbers.Real,
          "j_per_inference": numbers.Real},
     ),
+}
+
+# per-record schema of the kvcache "decode_tick" series (gather tick vs
+# in-place tick; see kvcache_bench.decode_tick_series)
+DECODE_TICK_FIELDS = {
+    "nb_max": numbers.Integral, "block_size": numbers.Integral,
+    "n_slots": numbers.Integral, "gather_tok_s": numbers.Real,
+    "inplace_tok_s": numbers.Real, "gather_bytes_proxy": numbers.Integral,
+    "inplace_bytes_proxy": numbers.Integral, "speedup": numbers.Real,
+}
+
+SCHEMAS |= {
     "prefix": (
         {"bench": str, "block_size": numbers.Integral, "results": list,
          "warm_beats_cold": bool},
@@ -91,6 +103,38 @@ def check(path: str) -> list[str]:
                         f"slots than dense at the shared budget")
         if any(r["completed"] == 0 for r in results):
             errs.append(f"{path}: a layout completed zero requests")
+        # trend gate: the gather-free tick must not lose to the gather
+        # tick once chains are non-trivially deep, and its dataflow must
+        # always move strictly fewer arena bytes
+        ticks = payload.get("decode_tick") or []
+        if not ticks:
+            errs.append(f"{path}: empty decode_tick series")
+        for i, rec in enumerate(ticks):
+            if not isinstance(rec, dict):
+                errs.append(f"{path}: decode_tick[{i}] is not an object")
+                continue
+            errs += _check_fields(rec, DECODE_TICK_FIELDS,
+                                  f"{path}: decode_tick[{i}]")
+        for rec in ticks:
+            if not isinstance(rec, dict) or \
+                    any(f not in rec for f in DECODE_TICK_FIELDS):
+                continue
+            if rec["inplace_bytes_proxy"] >= rec["gather_bytes_proxy"]:
+                errs.append(
+                    f"{path}: decode_tick nb_max={rec['nb_max']} in-place "
+                    f"bytes proxy ({rec['inplace_bytes_proxy']}) not below "
+                    f"gather ({rec['gather_bytes_proxy']})")
+            # wall-clock trend: not losing beyond measurement noise (the
+            # structural guarantee — no full-chain materialization — is
+            # pinned deterministically by the jaxpr test and the bytes
+            # gate above; this catches throughput rot on real runs)
+            if rec["nb_max"] >= 4 and \
+                    rec["inplace_tok_s"] < 0.85 * rec["gather_tok_s"]:
+                errs.append(
+                    f"{path}: decode_tick nb_max={rec['nb_max']} in-place "
+                    f"tick lost to the gather tick "
+                    f"({rec['inplace_tok_s']:.1f} < 0.85 * "
+                    f"{rec['gather_tok_s']:.1f} tok/s)")
     if bench == "prefix" and not errs:
         # trend gate: prefix-hit admission must actually get cheaper once a
         # meaningful prefix (>= 2 shared blocks) is resumed

@@ -10,6 +10,7 @@ benchmarks can still force either mode explicitly.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +28,15 @@ def default_interpret() -> bool:
     The single backend probe shared by every kernel wrapper (sng_pack,
     sc_dot, flash_attn, paged_attn): Mosaic lowering exists only for TPU, so
     anything else — the CPU CI container included — interprets.
+
+    ``REPRO_KERNELS_INTERPRET`` overrides the probe when set and non-empty
+    ("0"/"false"/"no" force Mosaic, anything else forces interpret) — the CI
+    ``kernels-interpret`` matrix leg sets it to "1" so the Pallas kernel
+    bodies are exercised deliberately rather than by backend accident.
     """
+    env = os.environ.get("REPRO_KERNELS_INTERPRET", "").strip().lower()
+    if env:
+        return env not in ("0", "false", "no")
     return jax.default_backend() != "tpu"
 
 

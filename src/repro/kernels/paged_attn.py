@@ -16,8 +16,17 @@ the online-softmax state (m, l, acc) lives in VMEM scratch across the sweep
 the indirection.  GQA is handled in-kernel: q (Hq, D) is viewed as
 (Hkv, n_rep, D) and batched against the block's (Hkv, bs, D) K tile.
 
+Sliding windows ride in as a third scalar-prefetch operand: positions
+outside ``[lens - window, lens)`` are masked to NEG_INF exactly like
+``attend_decode``'s trailing-window bound (a huge window disables it, which
+is also how ``lm.layer_window`` encodes per-layer global attention), so the
+serving tick can dispatch every attention family's layers — global and
+sliding alike — through one kernel.
+
 Validated in interpret mode against ``attend_decode_paged`` over
-shape/dtype/table permutations (tests/test_paged_attn.py).
+shape/dtype/table/window permutations (tests/test_paged_attn.py), and
+wired into the serving tick by ``engine.decode_step_paged`` (the
+``kernel=True`` path of the paged slot adapter).
 """
 from __future__ import annotations
 
@@ -30,10 +39,16 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# a window this large never masks (same encoding as lm._GLOBAL_WINDOW)
+NO_WINDOW = 1 << 30
 
-def _paged_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_scr, l_scr, acc_scr, *, bs: int, nb: int, n_rep: int,
-                  scale: float):
+
+def _paged_kernel(tables_ref, lens_ref, win_ref, q_ref, k_ref, v_ref, *rest,
+                  bs: int, nb: int, n_rep: int, scale: float, splice: bool):
+    if splice:
+        k1_ref, v1_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -45,15 +60,24 @@ def _paged_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
 
     q = q_ref[0].astype(jnp.float32)              # (Hq, D)
     k = k_ref[0].astype(jnp.float32)              # (bs, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)              # (bs, Hkv, D)
     Hq, D = q.shape
     Hkv = k.shape[1]
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    if splice:
+        # the current token's K/V row, overlaid at its position instead of
+        # pre-written into the arena: the sweep reads live blocks only and
+        # the arena write stays a single post-scan row per layer
+        here = (pos == lens_ref[b] - 1).reshape(bs, 1, 1)
+        k = jnp.where(here, k1_ref[0].astype(jnp.float32)[None], k)
+        v = jnp.where(here, v1_ref[0].astype(jnp.float32)[None], v)
     kt = jnp.swapaxes(k, 0, 1)                    # (Hkv, bs, D)
     qh = q.reshape(Hkv, n_rep, D)
     s = jax.lax.dot_general(qh, kt, (((2,), (2,)), ((0,), (0,))),
                             preferred_element_type=jnp.float32) * scale
     s = s.reshape(Hq, bs)
-    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
-    s = jnp.where(pos < lens_ref[b], s, NEG_INF)
+    valid = (pos < lens_ref[b]) & (pos >= lens_ref[b] - win_ref[0])
+    s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_scr[...]
     l_prev = l_scr[...]
@@ -62,7 +86,7 @@ def _paged_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
     corr = jnp.exp(m_prev - m_new)
     l_scr[...] = l_prev * corr + jnp.sum(p, axis=-1)
     m_scr[...] = m_new
-    vt = jnp.swapaxes(v_ref[0].astype(jnp.float32), 0, 1)   # (Hkv, bs, D)
+    vt = jnp.swapaxes(v, 0, 1)                    # (Hkv, bs, D)
     ph = p.reshape(Hkv, n_rep, bs)
     o = jax.lax.dot_general(ph, vt, (((2,), (1,)), ((0,), (0,))),
                             preferred_element_type=jnp.float32)
@@ -77,9 +101,18 @@ def _paged_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_decode_attention(q, k_arena, v_arena, tables, lens, *,
+                           window=None, new_kv=None,
                            interpret: bool | None = None):
     """q: (B, Hq, D); k_arena, v_arena: (num_blocks, bs, Hkv, D);
     tables: (B, nb) int32 arena block ids; lens: (B,) int32 valid lengths.
+    ``window``: optional scalar (may be traced — the per-layer
+    sliding/global selection is data-dependent inside a layer scan); only
+    the trailing ``window`` positions attend.  None or 0 disables masking.
+    ``new_kv``: optional (k1, v1), each (B, Hkv, D) — the current token's
+    K/V row, overlaid in-kernel at position ``lens - 1`` so the serving
+    tick never has to pre-write the row into the arena (a functional
+    arena-slice update per layer would copy every block, live or not —
+    exactly the traffic this kernel exists to avoid).
     Returns (B, Hq, D) in v_arena.dtype.
     ``interpret=None`` auto-detects the backend (Mosaic on TPU only).
     """
@@ -90,20 +123,30 @@ def paged_decode_attention(q, k_arena, v_arena, tables, lens, *,
     nb = tables.shape[1]
     n_rep = Hq // Hkv
     scale = D ** -0.5
+    if window is None:
+        window = NO_WINDOW
+    win = jnp.where(jnp.asarray(window, jnp.int32) == 0, NO_WINDOW,
+                    jnp.asarray(window, jnp.int32)).reshape(1)
+    row = pl.BlockSpec((1, Hq, D), lambda b, j, t, ln, w: (b, 0, 0))
+    blk = pl.BlockSpec((1, bs, Hkv, D),
+                       lambda b, j, t, ln, w: (t[b, j], 0, 0, 0))
+    kv_row = pl.BlockSpec((1, Hkv, D), lambda b, j, t, ln, w: (b, 0, 0))
+    splice = new_kv is not None
+    operands = (jnp.asarray(tables, jnp.int32), jnp.asarray(lens, jnp.int32),
+                win, q, k_arena, v_arena)
+    in_specs = [row, blk, blk]
+    if splice:
+        operands += tuple(new_kv)
+        in_specs += [kv_row, kv_row]
     return pl.pallas_call(
         functools.partial(_paged_kernel, bs=bs, nb=nb, n_rep=n_rep,
-                          scale=scale),
+                          scale=scale, splice=splice),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=(B, nb),
-            in_specs=[
-                pl.BlockSpec((1, Hq, D), lambda b, j, t, ln: (b, 0, 0)),
-                pl.BlockSpec((1, bs, Hkv, D),
-                             lambda b, j, t, ln: (t[b, j], 0, 0, 0)),
-                pl.BlockSpec((1, bs, Hkv, D),
-                             lambda b, j, t, ln: (t[b, j], 0, 0, 0)),
-            ],
-            out_specs=pl.BlockSpec((1, Hq, D), lambda b, j, t, ln: (b, 0, 0)),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, Hq, D),
+                                   lambda b, j, t, ln, w: (b, 0, 0)),
             scratch_shapes=[
                 pltpu.VMEM((Hq,), jnp.float32),      # running max
                 pltpu.VMEM((Hq,), jnp.float32),      # running sum
@@ -112,5 +155,4 @@ def paged_decode_attention(q, k_arena, v_arena, tables, lens, *,
         ),
         out_shape=jax.ShapeDtypeStruct((B, Hq, D), v_arena.dtype),
         interpret=interpret,
-    )(jnp.asarray(tables, jnp.int32), jnp.asarray(lens, jnp.int32),
-      q, k_arena, v_arena)
+    )(*operands)

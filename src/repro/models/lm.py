@@ -524,6 +524,54 @@ def _attn_apply(cfg: LMConfig, p, x, positions, *, causal=True, window=0,
     return out, (k, v)
 
 
+def attn_decode_paged(cfg: LMConfig, p, x1, k_blocks, v_blocks, tables, pos,
+                      *, window=0, kernel=False, interpret=None):
+    """One-token decode attention for a batch of slots, reading K/V in
+    place from one layer's slice of the paged block arena.
+
+    x1: (S, 1, d) normed activations (S = slot lanes); k_blocks, v_blocks:
+    (num_blocks, 1, bs, Hkv, Dh) — one layer of ``engine.init_paged_arena``;
+    tables: (S, nb) int32 arena block ids; pos: (S,) int32 per-lane lengths
+    (the new token's row index).  ``window`` may be traced (per-layer
+    sliding/global selection).  Returns (out (S, 1, d), k1, v1) with k1/v1
+    the (S, Hkv, Dh) post-RoPE rows the caller scatters into the arena —
+    the tick's only persistent sequence-axis write.
+
+    The new token's row has not reached the arena yet when attention runs,
+    so both paths overlay it at position ``pos`` functionally: the XLA
+    reference (:func:`nn.attention.attend_decode_paged`) splices it into
+    the gathered view — bitwise-identical to the dense
+    ``engine.decode_step`` attention, which the paged parity suite pins —
+    and ``kernel=True`` hands it to ``kernels.paged_attn`` as a row
+    operand overlaid in VMEM (an arena-slice update here would copy every
+    block of the layer, live or not — the very traffic the kernel's
+    per-block DMA exists to avoid).
+    """
+    B = x1.shape[0]
+    q = _proj(x1, p["wq"], p.get("bq")).reshape(B, 1, cfg.n_heads, cfg.d_head)
+    k1 = _proj(x1, p["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.d_head)
+    v1 = _proj(x1, p["wv"], p.get("bv")).reshape(B, 1, cfg.n_kv_heads,
+                                                 cfg.d_head)
+    if cfg.pos_embedding == "rope":
+        posb = pos[:, None]
+        q = rope.apply_rope(q, posb, cfg.rope_theta)
+        k1 = rope.apply_rope(k1, posb, cfg.rope_theta)
+    kb, vb = k_blocks[:, 0], v_blocks[:, 0]      # (num_blocks, bs, Hkv, Dh)
+    if kernel:
+        from repro.kernels.paged_attn import paged_decode_attention
+        o = paged_decode_attention(q[:, 0], kb, vb, tables, pos + 1,
+                                   window=window,
+                                   new_kv=(k1[:, 0], v1[:, 0]),
+                                   interpret=interpret)[:, None]
+    else:
+        o = attention.attend_decode_paged(q, kb, vb, tables, pos + 1,
+                                          window=window,
+                                          new_kv=(k1[:, 0], v1[:, 0]))
+    out = _proj(o.reshape(B, 1, cfg.n_heads * cfg.d_head), p["wo"],
+                p.get("bo"))
+    return out, k1[:, 0], v1[:, 0]
+
+
 def _mlp_apply(cfg: LMConfig, p, x, kind=None):
     kind = kind or cfg.mlp_type
     if "w_gate" in p:

@@ -375,12 +375,20 @@ def gather_paged_kv(arena, block_table) -> jax.Array:
 
 
 def attend_decode_paged(q, k_arena, v_arena, block_table, cache_len, *,
-                        window=0) -> jax.Array:
+                        window=0, new_kv=None) -> jax.Array:
     """One-token decode attention against a *paged* cache (single layer).
 
     q: (B, 1, Hq, D); k_arena, v_arena: (num_blocks, bs, Hkv, D);
     block_table: (B, nb) int32 block ids; cache_len: (B,) int32 per-row
     valid lengths (the new token's K/V already written at cache_len - 1).
+
+    ``new_kv``: optional (k1, v1), each (B, Hkv, D) — the current token's
+    K/V row, inserted into the gathered view at ``cache_len - 1`` instead
+    of requiring the caller to have scattered it into the arena first.
+    This is how the in-place decode tick reads the token it is mid-way
+    through writing: the arena write happens once, after the layer scan
+    (mode="drop" so a lane already at capacity never corrupts a live row;
+    such lanes are masked upstream and their output is discarded).
 
     Gathers each row's block chain into the dense layout and applies the
     same masked softmax as :func:`attend_decode`, with a per-row length
@@ -393,6 +401,11 @@ def attend_decode_paged(q, k_arena, v_arena, block_table, cache_len, *,
     scale = D ** -0.5
     k = gather_paged_kv(k_arena, block_table)       # (B, S, Hkv, D)
     v = gather_paged_kv(v_arena, block_table)
+    if new_kv is not None:
+        k1, v1 = new_kv
+        rows = jnp.arange(B)
+        k = k.at[rows, cache_len - 1].set(k1.astype(k.dtype), mode="drop")
+        v = v.at[rows, cache_len - 1].set(v1.astype(v.dtype), mode="drop")
     qh = q[:, 0].reshape(B, Hkv, n_rep, D)
     s = jnp.einsum("bhrd,bshd->bhrs", qh, k,
                    preferred_element_type=jnp.float32) * scale

@@ -86,16 +86,38 @@ def init_paged_arena(cfg: LMConfig, num_blocks: int, block_size: int,
                      abstract: bool = False) -> dict:
     """Block arenas for the paged KV cache (serve/kvcache/).
 
-    One ``(num_blocks,)``-leading array per sequence-axis cache key;
-    ``arena[key][bid]`` is exactly the B=1 cache of ``max_len=block_size``
-    for that key, so block granularity and cache layout can never drift
-    apart: both come from :func:`init_cache`.
+    Per sequence-axis cache key, the B=1 cache of ``max_len=block_size``
+    with a ``num_blocks`` axis spliced in just before the batch axis —
+    layer-leading, so ``arena[key][..., bid, :1, :bs]`` (via
+    :func:`arena_block_axis`) is exactly one block of that key and block
+    granularity / cache layout can never drift apart: both come from
+    :func:`init_cache`.  The layer axis stays leading (rather than the
+    block axis, as in PR 2) so the in-place decode tick can scan layers
+    over per-layer ``(num_blocks, 1, bs, ...)`` slices — and so the arena
+    shards over a mesh with the same leading-axes PartitionSpec shape as
+    ``cache_specs`` gives the dense layout (the next ROADMAP item).
     """
     blk = init_cache(cfg, 1, block_size, abstract=True)
     mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else \
          (lambda s, d: jnp.zeros(s, d))
-    return {key: mk((num_blocks,) + blk[key].shape, blk[key].dtype)
-            for key in PAGED_SEQ_KEYS if key in blk}
+    out = {}
+    for key in PAGED_SEQ_KEYS:
+        if key not in blk:
+            continue
+        s = blk[key].shape                       # (*layers, 1, bs, *post)
+        ax = len(s) - 4                          # just before the B axis
+        out[key] = mk(s[:ax] + (num_blocks,) + s[ax:], blk[key].dtype)
+    return out
+
+
+def arena_block_axis(a) -> int:
+    """Block-id axis of an :func:`init_paged_arena` array.
+
+    Every paged key's block shape ends ``(B=1, bs, heads-ish, feat)`` with
+    the block axis spliced in just before B, so it always sits 5 axes from
+    the end whatever the leading layer axes look like (one for decoder
+    k/v, two for the vlm grouped layout)."""
+    return a.ndim - 5
 
 
 def cache_specs(cfg: LMConfig, mesh_shape: dict[str, int], batch: int):
@@ -230,26 +252,20 @@ def prefill(cfg: LMConfig, params, batch):
         cache.update(states)
 
     elif fam == "encdec":
-        enc = batch["enc_embed"].astype(x.dtype)
-        enc = enc + _sinusoidal(enc.shape[1], cfg.d_model).astype(enc.dtype)
-        enc_pos = jnp.broadcast_to(jnp.arange(enc.shape[1]), (B, enc.shape[1]))
+        # one encoder pass + per-layer cross-K/V via encode_cross — the
+        # same function the chunked-prefill fold consumes, so the one-shot
+        # and folded admission paths cannot drift apart
+        xk, xv = encode_cross(cfg, params, batch["enc_embed"])
 
-        def enc_body(lp, h, _):
-            h, _, _ = lm.decoder_block(cfg, lp, h, enc_pos, causal=False)
-            return h, jnp.float32(0.0)
-        enc, _ = lm._stack_scan(cfg, params["enc_blocks"], enc_body, enc)
-        enc = _norm_apply(cfg, params["enc_norm"], enc)
-
-        def dec_body(lp, x, _):
-            kx = _proj(enc, lp["xattn"]["wk"]).reshape(
-                B, -1, cfg.n_kv_heads, cfg.d_head)
-            vx = _proj(enc, lp["xattn"]["wv"], lp["xattn"].get("bv")).reshape(
-                B, -1, cfg.n_kv_heads, cfg.d_head)
-            x, kv = lm.cross_block(cfg, lp, x, positions, (kx, vx))
-            return x, (kv, (kx, vx))
-        x, (kvs, xkvs) = lm._stack_scan(cfg, params["dec_blocks"], dec_body, x)
+        def dec_body(lp, x, inp):
+            kx, vx = inp
+            x, kv = lm.cross_block(cfg, lp, x, positions,
+                                   (kx.astype(x.dtype), vx.astype(x.dtype)))
+            return x, kv
+        x, kvs = lm._stack_scan(cfg, params["dec_blocks"], dec_body, x,
+                                (xk, xv))
         cache["k"], cache["v"] = kvs
-        cache["xk"], cache["xv"] = xkvs
+        cache["xk"], cache["xv"] = xk, xv
 
     elif fam == "vlm":
         vis = batch["vision_embed"].astype(x.dtype)
@@ -711,3 +727,185 @@ def decode_step(cfg: LMConfig, params, cache, tokens):
     logits = jnp.einsum("bsd,dv->bsv", x, head,
                         preferred_element_type=jnp.float32)
     return new_cache, logits[:, 0]
+
+
+# ==========================================================================
+# Decode (one token), in place against the paged block arena.
+# ==========================================================================
+
+def decode_step_paged(cfg: LMConfig, params, cache, tokens, *, tables, lens,
+                      arena, wbids=None, kernel=False, interpret=None):
+    """One batched decode tick reading K/V **in place** from the block arena.
+
+    The gather-free counterpart of ``vmap(decode_step)`` over slot lanes:
+    instead of materializing every lane's chain as a dense ``max_len``
+    cache, each attention layer reads its K/V through the lane's block
+    table (``lm.attn_decode_paged`` → ``attend_decode_paged`` in XLA, or
+    the ``kernels/paged_attn.py`` scalar-prefetch kernel with
+    ``kernel=True``), and the only persistent sequence-axis write is the
+    new token's single row per layer, scattered once after the layer scan.
+
+    cache   slot-stacked non-sequence state, exactly the paged adapter's
+            dense dict: "len" (S,) plus hybrid conv/ssm and encdec xk/xv
+            (leading axis = slot lanes).
+    tokens  (S, 1) int32.
+    tables  (S, nb) int32 arena block ids (trash-padded past each chain).
+    lens    (S,) int32 per-lane lengths (== cache["len"]; the new token
+            lands at position ``lens``).
+    arena   :func:`init_paged_arena` dict (layer-leading block axis).
+    wbids   (S,) int32 arena block each lane's new row lands in — the
+            caller routes lanes that must not write (inactive, at capacity,
+            pre-copy-on-write) to the trash block.  ``None`` derives the
+            block from the table, routing out-of-range lanes to block 0
+            (the pool's reserved trash block).
+
+    Returns (new_arena, new_cache, logits (S, vocab_padded)).  With
+    ``kernel=False`` the logits are bitwise-identical to the gather tick /
+    dense-adapter oracle (pinned per family in tests/test_paged_decode.py):
+    every position a lane can read holds the same bits in both layouts and
+    everything else is masked to NEG_INF before the softmax.
+
+    Maintenance note: the per-family layer bodies below deliberately
+    mirror :func:`decode_step` (only the cache plumbing differs — scan xs
+    are arena slices instead of per-layer dense caches, and the write is a
+    row instead of a buffer).  Any numeric change to a family's decode
+    body must land in BOTH functions; the bitwise parity suite exists to
+    catch exactly that drift, so a paged-parity failure after touching
+    :func:`decode_step` means this copy is stale, not that paging broke.
+    """
+    fam = cfg.family
+    assert fam in ("decoder", "moe", "hybrid", "encdec"), \
+        f"in-place paged decode: unsupported family {fam}"
+    assert not cfg.kv_quant, "in-place paged decode: int8 KV unsupported"
+    S = tokens.shape[0]
+    bs = arena["k"].shape[-3]
+    nb = tables.shape[1]
+    pos = jnp.asarray(lens, jnp.int32)
+    offs = pos % bs
+    if wbids is None:
+        blk = jnp.take_along_axis(tables, jnp.minimum(pos // bs, nb - 1)
+                                  [:, None], axis=1)[:, 0]
+        wbids = jnp.where(pos >= nb * bs, 0, blk)    # 0 = trash block
+    x = params["embed"][tokens]                       # (S, 1, d)
+    if cfg.pos_embedding == "sinusoidal":
+        i = jnp.arange(0, cfg.d_model, 2, dtype=jnp.float32)
+        ang = pos[:, None].astype(jnp.float32) / \
+            jnp.power(10000.0, i / cfg.d_model)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)[:, None, :]
+        x = x + pe.astype(x.dtype)
+    new_cache = dict(cache)
+    new_cache["len"] = pos + 1
+
+    def attn(lp, z, kb, vb, window=0):
+        return lm.attn_decode_paged(cfg, lp, z, kb, vb, tables, pos,
+                                    window=window, kernel=kernel,
+                                    interpret=interpret)
+
+    if fam in ("decoder", "moe"):
+        L = cfg.n_layers - (1 if fam == "moe" else 0)
+
+        def body(x, inp):
+            lp, kb, vb, idx = inp
+            h, k1, v1 = attn(lp["attn"], _norm_apply(cfg, lp["ln1"], x),
+                             kb, vb, window=layer_window(cfg, idx))
+            x = x + h
+            z = _norm_apply(cfg, lp["ln2"], x)
+            if fam == "moe":
+                # per-lane dispatch groups of one token, exactly the
+                # vmapped dense tick's routing (a lane's output must not
+                # depend on which other lanes share its decode batch)
+                y = jax.vmap(lambda zi: lm.moe_ffn_decode(
+                    cfg, lp["moe"], zi[None])[0][0])(z)
+            else:
+                y = _mlp_apply(cfg, lp["mlp"], z)
+            return x + y, (k1, v1)
+
+        if fam == "moe":
+            p0 = jax.tree.map(lambda a: a[0], params["dense0"])
+            h, k0, v0 = attn(p0["attn"], _norm_apply(cfg, p0["ln1"], x),
+                             arena["k"][0], arena["v"][0])
+            x = x + h
+            x = x + _mlp_apply(cfg, p0["mlp"], _norm_apply(cfg, p0["ln2"], x))
+        off = 1 if fam == "moe" else 0
+        x, (k_rows, v_rows) = jax.lax.scan(
+            body, x, (params["blocks"], arena["k"][off:], arena["v"][off:],
+                      jnp.arange(L, dtype=jnp.int32)))
+        if fam == "moe":
+            k_rows = jnp.concatenate([k0[None], k_rows], 0)
+            v_rows = jnp.concatenate([v0[None], v_rows], 0)
+
+    elif fam == "hybrid":
+        def body(x, inp):
+            lp, kb, vb, conv_st, ssm_st, idx = inp
+            z = _norm_apply(cfg, lp["ln1"], x)
+            att, k1, v1 = attn(lp["attn"], z, kb, vb,
+                               window=layer_window(cfg, idx))
+            xz = _proj(z, lp["in_proj"])
+            xm, gate = jnp.split(xz, 2, axis=-1)
+            xm, conv_st = _causal_conv(xm, lp["conv_w"], conv_st)
+            xm = jax.nn.silu(xm.astype(jnp.float32)).astype(x.dtype)
+            dtr = lp["dt_proj"].shape[0]
+            dbc = _proj(xm, lp["x_proj"])
+            dt = jax.nn.softplus(
+                _proj(dbc[..., :dtr], lp["dt_proj"]).astype(jnp.float32)
+                + lp["dt_bias"].astype(jnp.float32))
+            N = cfg.ssm_state
+            y1, ssm_st = ssm.selective_step(
+                xm[:, 0], dt[:, 0].astype(x.dtype), lp["A_log"],
+                dbc[:, 0, dtr:dtr + N], dbc[:, 0, dtr + N:], lp["D_skip"],
+                ssm_st)
+            y = (y1[:, None] * jax.nn.silu(gate.astype(jnp.float32)
+                                           ).astype(x.dtype))
+            y = _proj(y, lp["ssm_out"])
+            beta = lp["beta"].astype(jnp.float32)
+            mixed = (beta[0] * _norm_apply(cfg, lp["norm_attn"], att
+                                           ).astype(jnp.float32)
+                     + beta[1] * _norm_apply(cfg, lp["norm_ssm"], y
+                                             ).astype(jnp.float32)) * 0.5
+            x = x + mixed.astype(x.dtype)
+            x = x + _mlp_apply(cfg, lp["mlp"], _norm_apply(cfg, lp["ln2"], x))
+            return x, (k1, v1, conv_st, ssm_st)
+
+        x, (k_rows, v_rows, conv, ssm_s) = jax.lax.scan(
+            body, x, (params["blocks"], arena["k"], arena["v"],
+                      jnp.moveaxis(cache["conv"], 1, 0)[:, :, 0],
+                      jnp.moveaxis(cache["ssm"], 1, 0)[:, :, 0],
+                      jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+        new_cache["conv"] = jnp.moveaxis(conv, 1, 0)[:, :, None]
+        new_cache["ssm"] = jnp.moveaxis(ssm_s, 1, 0)[:, :, None]
+
+    elif fam == "encdec":
+        def body(x, inp):
+            lp, kb, vb, xk, xv = inp
+            h, k1, v1 = attn(lp["attn"], _norm_apply(cfg, lp["ln1"], x),
+                             kb, vb)
+            x = x + h
+            q = _proj(_norm_apply(cfg, lp["ln_x"], x), lp["xattn"]["wq"],
+                      lp["xattn"].get("bq")).reshape(
+                S, 1, cfg.n_heads, cfg.d_head)
+            o = attention.attend_decode(q, xk, xv, xk.shape[1])
+            hx = _proj(o.reshape(S, 1, -1), lp["xattn"]["wo"],
+                       lp["xattn"].get("bo"))
+            gate = jnp.tanh(lp["gate_attn"].astype(jnp.float32)
+                            ).astype(x.dtype)
+            x = x + gate * hx
+            x = x + _mlp_apply(cfg, lp["mlp"], _norm_apply(cfg, lp["ln2"], x))
+            return x, (k1, v1)
+
+        x, (k_rows, v_rows) = jax.lax.scan(
+            body, x, (params["dec_blocks"], arena["k"], arena["v"],
+                      jnp.moveaxis(cache["xk"], 1, 0)[:, :, 0],
+                      jnp.moveaxis(cache["xv"], 1, 0)[:, :, 0]))
+
+    # the tick's only sequence-axis write: one (S, Hkv, Dh) row per layer,
+    # landed at (block, offset) per lane — trash-routed lanes are absorbed
+    # by the reserved block 0
+    new_arena = dict(arena)
+    for key, rows in (("k", k_rows), ("v", v_rows)):
+        new_arena[key] = arena[key].at[:, wbids, 0, offs].set(rows)
+
+    x = _norm_apply(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head,
+                        preferred_element_type=jnp.float32)
+    return new_arena, new_cache, logits[:, 0]

@@ -189,7 +189,8 @@ class KVSlotAdapter:
 def make_adapter(cfg: LMConfig, params, n_slots: int, max_len: int = 128,
                  extras: Callable[[], dict] | None = None, *,
                  paged: bool = False, block_size: int = 16,
-                 num_blocks: int | None = None, chunked: bool = True):
+                 num_blocks: int | None = None, chunked: bool = True,
+                 inplace: bool = True, kernel: bool | None = None):
     """Family dispatch: state slots for rwkv, KV slots for everything else.
 
     ``paged=True`` swaps the dense per-slot KV buffers for the block-pool
@@ -197,8 +198,12 @@ def make_adapter(cfg: LMConfig, params, n_slots: int, max_len: int = 128,
     and admission priced in blocks instead of whole slots.  ``chunked``
     (paged only) prefills via the block-size chunk fold so prefix hits skip
     recomputing the shared prompt; ``chunked=False`` keeps the one-shot
-    prefill with storage-only sharing.  rwkv has O(1) state, so ``paged``
-    is a no-op for it.
+    prefill with storage-only sharing.  ``inplace`` (paged only) decodes
+    straight against the block arena through ``engine.decode_step_paged``
+    instead of the PR 2 gather->decode->scatter tick; ``kernel`` forces the
+    Pallas paged-attention kernel on/off inside that tick (None = Mosaic on
+    TPU, XLA reference elsewhere).  rwkv has O(1) state, so ``paged`` is a
+    no-op for it.
     """
     if cfg.family == "rwkv":
         return StateSlotAdapter(cfg, params, n_slots)
@@ -207,7 +212,8 @@ def make_adapter(cfg: LMConfig, params, n_slots: int, max_len: int = 128,
         return PagedKVSlotAdapter(cfg, params, n_slots, max_len,
                                   block_size=block_size,
                                   num_blocks=num_blocks, extras=extras,
-                                  chunked=chunked)
+                                  chunked=chunked, inplace=inplace,
+                                  kernel=kernel)
     return KVSlotAdapter(cfg, params, n_slots, max_len, extras)
 
 

@@ -10,14 +10,24 @@ Layout
     dense adapter.
 
 Decode tick (one jitted call, fixed shapes)
-    gather each slot's chain (``jnp.take`` over the tables) into the dense
-    per-slot layout -> the same vmapped :func:`engine.decode_step` the dense
-    adapter runs -> scatter back only the one block each slot wrote
-    (position ``len`` lives in exactly one block).  Inactive lanes scatter
-    into the reserved trash block 0, so the call never changes shape.
-    Because the gathered view agrees with the dense cache at every position
-    the model can read (< len; everything else is masked at NEG_INF before
-    the softmax), paged decode is *bitwise* identical to dense decode.
+    The default tick is **in place**: :func:`engine.decode_step_paged`
+    threads ``(tables, lens, arena)`` down into the attention layers, which
+    read K/V straight out of the block arena (``attend_decode_paged`` in
+    XLA, or the ``kernels/paged_attn.py`` scalar-prefetch kernel with
+    ``kernel=True``) and write back exactly one row per layer — the new
+    token's position.  No dense per-slot cache is ever materialized and no
+    block is rescattered.  Inactive lanes write into the reserved trash
+    block 0, so the call never changes shape.  Because every position a
+    lane can read (< len) holds the same bits in both layouts and
+    everything else is masked at NEG_INF before the softmax, in-place
+    paged decode is *bitwise* identical to dense decode — pinned per
+    family in tests/test_paged_decode.py.
+
+    The PR 2 gather tick (gather each chain into the dense layout ->
+    vmapped :func:`engine.decode_step` -> scatter one block back) is kept
+    as ``inplace=False``: it is the parity oracle the in-place path is
+    asserted bitwise against, and the fallback for the layouts the
+    in-place path does not cover (vlm's grouped cache, int8 ``kv_quant``).
 
 Sharing / copy-on-write
     Admission walks the pool's radix index: full prompt blocks that match an
@@ -88,7 +98,8 @@ class PagedKVSlotAdapter:
     def __init__(self, cfg: LMConfig, params, n_slots: int, max_len: int,
                  *, block_size: int = 16, num_blocks: int | None = None,
                  extras: Callable[[], dict] | None = None,
-                 chunked: bool = True):
+                 chunked: bool = True, inplace: bool = True,
+                 kernel: bool | None = None):
         assert cfg.family != "rwkv", "rwkv has O(1) state; nothing to page"
         self.cfg = cfg
         self.params = params
@@ -101,12 +112,26 @@ class PagedKVSlotAdapter:
         # longer holds, and a family prefill_chunked implements
         self.chunked = (chunked and not cfg.kv_quant and cfg.family in
                         ("decoder", "moe", "hybrid", "encdec"))
+        # in-place decode covers the single-layer-axis attention families;
+        # vlm's grouped cache and the int8 kv_quant path keep the PR 2
+        # gather tick (which also stays available as the parity oracle)
+        self.inplace = (inplace and not cfg.kv_quant and cfg.family in
+                        ("decoder", "moe", "hybrid", "encdec"))
+        # kernel=None: Mosaic on TPU, XLA reference elsewhere (running the
+        # Pallas interpreter inside the serving hot loop is for tests only)
+        if kernel is None:
+            from repro.kernels.ops import default_interpret
+            kernel = jax.default_backend() == "tpu" and not \
+                default_interpret()
+        self.kernel = bool(kernel)
         if num_blocks is None:
             # dense-equivalent capacity + the reserved trash block
             num_blocks = n_slots * self.nb_max + 1
         self.pool = BlockPool(num_blocks, block_size)
         self.arena = engine.init_paged_arena(cfg, num_blocks, block_size)
         self.seq_keys = tuple(self.arena)
+        self._bax = {key: engine.arena_block_axis(a)
+                     for key, a in self.arena.items()}
         # hybrid: recurrent (conv/ssm) state at each indexed block boundary,
         # keyed by the boundary's chain key — what lets an SSM stream resume
         # mid-prompt; invalidated with the index entry itself.  Entries are
@@ -138,8 +163,8 @@ class PagedKVSlotAdapter:
         self._stats: list[dict] = [{} for _ in range(n_slots)]
         # per-token arena bytes (for the bytes-saved-vs-dense telemetry)
         self._token_bytes = sum(
-            a.dtype.itemsize * int(np.prod(a.shape[1:])) // block_size
-            for a in self.arena.values())
+            a.dtype.itemsize * (int(np.prod(a.shape)) // num_blocks)
+            // block_size for a in self.arena.values())
         # peak occupancy: a drained pool always reads 0 blocks in use, so
         # the memory-savings evidence is tracked at its high-water mark
         self.peak_blocks_in_use = 0
@@ -164,12 +189,10 @@ class PagedKVSlotAdapter:
         dn = jax.default_backend() != "cpu"
         self._scatter = jax.jit(self._scatter_impl,
                                 donate_argnums=(0,) if dn else ())
-        self._copy = jax.jit(
-            lambda arena, dst, src: {
-                key: a.at[dst].set(a[src]) for key, a in arena.items()},
-            donate_argnums=(0,) if dn else ())
-        self._decode = jax.jit(self._tick_impl,
-                               donate_argnums=(1, 2) if dn else ())
+        self._copy = jax.jit(self._copy_impl,
+                             donate_argnums=(0,) if dn else ())
+        tick = self._tick_inplace_impl if self.inplace else self._tick_impl
+        self._decode = jax.jit(tick, donate_argnums=(1, 2) if dn else ())
 
     # -- jitted bodies ------------------------------------------------------
 
@@ -180,21 +203,31 @@ class PagedKVSlotAdapter:
         out = {}
         for key in self.seq_keys:
             a = padded[key]
-            ax = a.ndim - 3
+            ax = a.ndim - 3                     # the sequence axis
             b = a.reshape(a.shape[:ax] + (self.nb_max, self.bs)
                           + a.shape[ax + 1:])
-            b = jnp.moveaxis(b, ax, 0)          # (nb_max, *pre, bs, *post)
-            out[key] = arena[key].at[wbids].set(b)
+            b = jnp.moveaxis(b, ax, ax - 1)     # block axis just before B
+            idx = (slice(None),) * (ax - 1) + (wbids,)
+            out[key] = arena[key].at[idx].set(b)
+        return out
+
+    def _copy_impl(self, arena, dst, src):
+        """Copy block ``src`` onto block ``dst`` for every key (CoW)."""
+        out = {}
+        for key, a in arena.items():
+            ax = self._bax[key]
+            idx = (slice(None),) * ax + (dst,)
+            out[key] = a.at[idx].set(jnp.take(a, src, axis=ax))
         return out
 
     def _gather_prefix_impl(self, arena, bids):
         """Gather an H-block chain into the dense prefix layout that
         :func:`engine.prefill_chunked` consumes: per sequence key,
-        ``(nb,) + block shape -> (..., nb*bs, *post)`` (B=1 row)."""
+        block axis ``bids`` -> ``(..., B, nb*bs, *post)`` (B=1 row)."""
         out = {}
         for key in self.seq_keys:
-            g = jnp.take(arena[key], bids, axis=0)
-            g = jnp.moveaxis(g, 0, g.ndim - 4)  # (*pre, nb, bs, *post)
+            g = jnp.take(arena[key], bids, axis=self._bax[key])
+            g = jnp.moveaxis(g, self._bax[key], g.ndim - 4)  # behind B
             out[key] = g.reshape(g.shape[:g.ndim - 4]
                                  + (bids.shape[0] * self.bs,) + g.shape[-2:])
         return out
@@ -252,34 +285,62 @@ class PagedKVSlotAdapter:
         return cache, logits, snapshots
 
     def _tick_impl(self, p, arena, dense, tables, tokens, mask, wbids):
-        """gather -> vmapped decode_step -> scatter the written blocks."""
+        """Legacy gather tick (PR 2; ``inplace=False``): gather -> vmapped
+        decode_step -> scatter the written blocks.  Kept as the parity
+        oracle for the in-place tick and as the fallback for the layouts it
+        does not cover (vlm, kv_quant)."""
         cache = dict(dense)
         for key in self.seq_keys:
-            g = jnp.take(arena[key], tables, axis=0)
-            g = jnp.moveaxis(g, 1, g.ndim - 4)  # (slots, *pre, nb, bs, *post)
+            ax = self._bax[key]
+            g = jnp.take(arena[key], tables, axis=ax)
+            g = jnp.moveaxis(g, ax, 0)          # slot lanes leading
+            g = jnp.moveaxis(g, ax + 1, ax + 2)  # block axis behind B
             cache[key] = g.reshape(
                 g.shape[:g.ndim - 4] + (self.nb_max * self.bs,)
                 + g.shape[-2:])
         new_cache, logits = jax.vmap(
             lambda c, t: engine.decode_step(self.cfg, p, c, t),
-            in_axes=(0, 0))(cache, tokens)
+            in_axes=(0, 0))(cache, tokens[:, None])
         sel = lambda new, old: jnp.where(
             mask.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
         new_dense = {key: sel(new_cache[key], dense[key]) for key in dense}
         # each slot wrote exactly one position (pre-increment len), hence
-        # exactly one block; inactive lanes target the trash block.  The
-        # clamp only keeps the dynamic_slice of *inactive* lanes in range —
-        # at-capacity lanes (len == max_len) are masked to the trash block
-        # host-side in decode(), never clamped onto a real (possibly
-        # shared) final block.
-        start = jnp.minimum((dense["len"] // self.bs) * self.bs,
-                            self.max_len - self.bs)
+        # exactly one block; inactive lanes target the trash block.  A lane
+        # whose len is out of range (at capacity, or any host-side
+        # accounting drift) is routed to the trash block HERE as well as in
+        # decode(): the pre-fix clamp (min(start, max_len - bs)) silently
+        # aliased such lanes onto the final — possibly *shared* — block.
+        oor = dense["len"] >= self.max_len
+        start = jnp.where(oor, 0, (dense["len"] // self.bs) * self.bs)
+        wbids = jnp.where(oor, TRASH_BLOCK, wbids)
         new_arena = {}
         for key in self.seq_keys:
+            ax = self._bax[key]
             blk = jax.vmap(
                 lambda a, s: jax.lax.dynamic_slice_in_dim(
                     a, s, self.bs, axis=a.ndim - 3))(new_cache[key], start)
-            new_arena[key] = arena[key].at[wbids].set(blk)
+            blk = jnp.moveaxis(blk, 0, ax)
+            idx = (slice(None),) * ax + (wbids,)
+            new_arena[key] = arena[key].at[idx].set(blk)
+        return new_arena, new_dense, logits[:, 0]
+
+    def _tick_inplace_impl(self, p, arena, dense, tables, tokens, mask,
+                           wbids):
+        """The gather-free tick: :func:`engine.decode_step_paged` reads K/V
+        through the block tables inside every attention layer and writes
+        back one row per layer — no dense per-slot cache, no block
+        rescatter.  Non-sequence state is masked exactly like the gather
+        tick, so inactive lanes keep the state ``clear`` left them."""
+        # same out-of-range defense as the gather tick: a lane whose len
+        # escaped the table (at capacity / accounting drift) must write the
+        # trash block, never a real — possibly shared — one
+        wbids = jnp.where(dense["len"] >= self.max_len, TRASH_BLOCK, wbids)
+        new_arena, new_cache, logits = engine.decode_step_paged(
+            self.cfg, p, dense, tokens, tables=tables, lens=dense["len"],
+            arena=arena, wbids=wbids, kernel=self.kernel)
+        sel = lambda new, old: jnp.where(
+            mask.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
+        new_dense = {key: sel(new_cache[key], dense[key]) for key in dense}
         return new_arena, new_dense, logits
 
     # -- admission ----------------------------------------------------------
@@ -621,13 +682,37 @@ class PagedKVSlotAdapter:
             wbids[slot] = bid
         self.arena, self.cache, logits = self._decode(
             self.params, self.arena, self.cache, jnp.asarray(self.tables),
-            jnp.asarray(tokens, jnp.int32)[:, None, None],
+            jnp.asarray(tokens, jnp.int32)[:, None],
             jnp.asarray(active, bool), jnp.asarray(wbids))
         self.lens[active] += 1
-        self.last_logits = logits[:, 0]     # (n_slots, vocab) — parity tests
-        return np.asarray(jnp.argmax(logits[:, 0], -1))
+        self.last_logits = logits           # (n_slots, vocab) — parity tests
+        return np.asarray(jnp.argmax(logits, -1))
 
     # -- telemetry -----------------------------------------------------------
+
+    def arena_block(self, key: str, bid: int):
+        """One arena block's contents for ``key``: the B=1 cache slice of
+        ``block_size`` positions (layout-agnostic accessor for tests)."""
+        return jnp.take(self.arena[key], bid, axis=self._bax[key])
+
+    def tick_bytes_proxy(self) -> dict:
+        """Analytic arena bytes one decode tick moves under each dataflow.
+
+        A model of the traffic each tick's *dataflow* implies (what the
+        TPU kernel's per-block DMA would actually stream), not a measured
+        counter — benchmarks/kvcache_bench.py reports it alongside wall
+        time.  The gather tick reads every lane's full ``nb_max`` chain,
+        materializes + rewrites the dense per-slot cache, and scatters one
+        block back; the in-place tick reads only the blocks live chains
+        own and writes a single row per lane.
+        """
+        token = self._token_bytes
+        n, ml, bs = self.n_slots, self.max_len, self.bs
+        gather = n * ml * token * 2 + n * bs * token
+        live_rows = sum(-(-(int(ln) + 1) // bs) * bs
+                        for ln, b in zip(self.lens, self.slot_bids) if b)
+        inplace = live_rows * token + n * token
+        return {"gather": gather, "inplace": inplace}
 
     def slot_stats(self, slot: int) -> dict:
         return dict(self._stats[slot])

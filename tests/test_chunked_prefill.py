@@ -146,7 +146,7 @@ def _slot_blocks(ad, slot):
     out = {}
     for j, bid in enumerate(ad.slot_bids[slot]):
         for key in ad.seq_keys:
-            out[key, j] = np.asarray(ad.arena[key][bid])
+            out[key, j] = np.asarray(ad.arena_block(key, bid))
     return out
 
 
@@ -365,13 +365,13 @@ def test_at_capacity_slot_writes_trash_and_finishes():
     ad.cache["len"] = ad.cache["len"].at[0].set(ad.max_len)
     assert ad.at_capacity(0)
     final_bid = int(ad.tables[0, ad.nb_max - 1])
-    before = {key: np.asarray(ad.arena[key][final_bid])
+    before = {key: np.asarray(ad.arena_block(key, final_bid))
               for key in ad.seq_keys}
     ad.decode(np.asarray([3], np.int32), np.asarray([True]))
     assert ad.lens[0] == ad.max_len              # state frozen, no advance
     for key in ad.seq_keys:                      # final block untouched
-        np.testing.assert_array_equal(before[key],
-                                      np.asarray(ad.arena[key][final_bid]))
+        np.testing.assert_array_equal(
+            before[key], np.asarray(ad.arena_block(key, final_bid)))
 
     # batcher integration: the request is surfaced as finished
     ad2 = make_adapter(cfg, params, n_slots=1, max_len=8,

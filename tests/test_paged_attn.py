@@ -1,9 +1,11 @@
 """Pallas paged decode-attention kernel vs the XLA gather reference
-(interpret mode), plus the gather path's own masking semantics."""
+(interpret mode), plus the gather path's own masking semantics, the
+sliding-window operand, and the REPRO_KERNELS_INTERPRET override."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels import ops
 from repro.kernels.paged_attn import paged_decode_attention
 from repro.nn import attention
 
@@ -66,6 +68,79 @@ def test_gather_reference_matches_dense_attend_decode():
             q, k_arena, v_arena, tables, jnp.full((B,), ln, jnp.int32))
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("window", [3, 8, 17])
+def test_paged_kernel_windowed_matches_reference(window):
+    """The kernel's trailing-window mask (scalar-prefetch operand) must
+    agree with attend_decode_paged's — only positions in
+    [lens - window, lens) attend, whatever blocks the table routes."""
+    rng = np.random.default_rng(window)
+    B, nb, bs, Hq, Hkv, D = 3, 4, 8, 4, 2, 32
+    num_blocks = B * nb + 1
+    q, ka, va, tables, lens = _make_case(rng, B, nb, bs, Hq, Hkv, D,
+                                         num_blocks, jnp.float32)
+    got = paged_decode_attention(q, ka, va, tables, lens, window=window,
+                                 interpret=True)
+    want = attention.attend_decode_paged(q[:, None], ka, va, tables, lens,
+                                         window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want[:, 0]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_kernel_new_kv_splice_matches_insert():
+    """attend_decode_paged(new_kv=...) — the in-place tick's read of the
+    row it is mid-way through writing — must equal attending after the row
+    was physically scattered into the arena."""
+    rng = np.random.default_rng(11)
+    B, nb, bs, Hq, Hkv, D = 2, 3, 4, 4, 2, 16
+    num_blocks = B * nb + 1
+    q, ka, va, _, _ = _make_case(rng, B, nb, bs, Hq, Hkv, D,
+                                 num_blocks, jnp.float32)
+    # fully-populated disjoint tables so every lane's new row (position
+    # ``lens``, possibly the first row of a fresh block) has a real,
+    # lane-private block to land in
+    tables = jnp.asarray(
+        rng.permutation(np.arange(1, num_blocks))[:B * nb].reshape(B, nb))
+    lens = jnp.asarray([bs * 2, bs * 2 - 1], jnp.int32)  # boundary + mid
+    k1 = jnp.asarray(rng.normal(0, 1, (B, Hkv, D)), jnp.float32)
+    v1 = jnp.asarray(rng.normal(0, 1, (B, Hkv, D)), jnp.float32)
+    # physically write the new row at position lens per lane
+    ka2, va2 = ka, va
+    for b in range(B):
+        blk = int(tables[b, int(lens[b]) // bs])
+        off = int(lens[b]) % bs
+        ka2 = ka2.at[blk, off].set(k1[b])
+        va2 = va2.at[blk, off].set(v1[b])
+    want = attention.attend_decode_paged(q[:, None], ka2, va2, tables,
+                                         lens + 1)
+    got = attention.attend_decode_paged(q[:, None], ka, va, tables,
+                                        lens + 1, new_kv=(k1, v1))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # the kernel's in-VMEM overlay must agree with the physical write too
+    # (this is how the serving tick reads the row it is mid-way through
+    # writing without copying the arena slice)
+    kern = paged_decode_attention(q, ka, va, tables, lens + 1,
+                                  new_kv=(k1, v1), interpret=True)
+    kern_want = paged_decode_attention(q, ka2, va2, tables, lens + 1,
+                                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(kern), np.asarray(kern_want))
+
+
+def test_default_interpret_env_override(monkeypatch):
+    """REPRO_KERNELS_INTERPRET forces the mode either way; unset falls
+    back to the backend probe — what the CI kernels-interpret leg relies
+    on to exercise the Pallas bodies deliberately."""
+    monkeypatch.setenv("REPRO_KERNELS_INTERPRET", "1")
+    assert ops.default_interpret() is True
+    monkeypatch.setenv("REPRO_KERNELS_INTERPRET", "0")
+    assert ops.default_interpret() is False
+    monkeypatch.setenv("REPRO_KERNELS_INTERPRET", "false")
+    assert ops.default_interpret() is False
+    monkeypatch.delenv("REPRO_KERNELS_INTERPRET")
+    import jax
+    assert ops.default_interpret() is (jax.default_backend() != "tpu")
+    assert ops.resolve_interpret(True) is True      # explicit always wins
 
 
 def test_paged_kernel_ignores_trash_block_contents():

@@ -1,0 +1,268 @@
+"""In-place (gather-free) paged decode: bitwise parity against the gather
+tick and the dense adapter for all four attention families, decode at block
+boundaries, out-of-range lane routing, the full-chain-gather-is-gone jaxpr
+pin, and the Pallas-kernel tick."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm
+from repro.serve.gateway.slots import make_adapter
+
+FAMILY_ARCH = {                      # one arch per attention family
+    "decoder": "stablelm_3b",        # causal MHA
+    "moe": "deepseek_moe_16b",       # causal + routed FFN
+    "hybrid": "hymba_1_5b",          # sliding windows + GQA + SSM state
+    "encdec": "whisper_medium",      # causal self + cross attention
+}
+BS = 4
+
+
+def _setup(arch):
+    cfg = dataclasses.replace(configs.smoke_config(arch),
+                              param_dtype="float32")
+    params, _ = lm.init(jax.random.key(0), cfg, {})
+    extras = None
+    if cfg.family == "encdec":
+        rng = np.random.default_rng(99)
+        enc = jnp.asarray(rng.normal(0, 1, (1, cfg.enc_len, cfg.d_model)),
+                          jnp.float32)
+        extras = lambda: {"enc_embed": enc}
+    return cfg, params, extras
+
+
+def _chain_blocks(ad, slot):
+    return {(key, j): np.asarray(ad.arena_block(key, bid))
+            for j, bid in enumerate(ad.slot_bids[slot])
+            for key in ad.seq_keys}
+
+
+# ==========================================================================
+# Tentpole acceptance: the in-place tick is bitwise-identical to both
+# oracles — the PR 2 gather tick and the dense adapter — per family.
+# ==========================================================================
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCH))
+def test_inplace_matches_gather_tick_bitwise(family):
+    """Same inserts, same forced tokens: the gather-free tick must produce
+    the gather tick's logits, arena blocks, and non-sequence state bit for
+    bit, every step."""
+    cfg, params, extras = _setup(FAMILY_ARCH[family])
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, size=s).astype(np.int32)
+               for s in (5, 9)]
+    adapters = [make_adapter(cfg, params, n_slots=2, max_len=24,
+                             extras=extras, paged=True, block_size=BS,
+                             inplace=ip) for ip in (True, False)]
+    assert adapters[0].inplace and not adapters[1].inplace
+    for slot, p in enumerate(prompts):
+        toks = [ad.insert(slot, p, max_new=8) for ad in adapters]
+        assert toks[0] == toks[1]
+    active = np.asarray([True, True])
+    for step in range(6):
+        forced = rng.integers(0, cfg.vocab, size=2).astype(np.int32)
+        outs = [ad.decode(forced, active) for ad in adapters]
+        np.testing.assert_array_equal(outs[0], outs[1])
+        np.testing.assert_array_equal(np.asarray(adapters[0].last_logits),
+                                      np.asarray(adapters[1].last_logits))
+    inp, gat = adapters
+    assert inp.slot_bids == gat.slot_bids
+    for slot in range(2):
+        a, b = _chain_blocks(inp, slot), _chain_blocks(gat, slot)
+        for key in a:
+            np.testing.assert_array_equal(a[key], b[key], err_msg=str(key))
+    for key in inp.cache:
+        np.testing.assert_array_equal(np.asarray(inp.cache[key]),
+                                      np.asarray(gat.cache[key]))
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCH))
+def test_inplace_matches_dense_adapter_bitwise(family):
+    """The in-place tick against the *dense* oracle: one-shot admission
+    (``chunked=False`` shares the dense adapter's prefill executable), then
+    every decode step's logits must match bit for bit — causal, windowed
+    (hybrid respects the trailing-``window`` bound), GQA, and encdec cross
+    attention all ride through the block tables."""
+    cfg, params, extras = _setup(FAMILY_ARCH[family])
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab, size=s).astype(np.int32)
+               for s in (6, 9)]
+    paged = make_adapter(cfg, params, n_slots=2, max_len=24, extras=extras,
+                         paged=True, block_size=BS, chunked=False)
+    dense = make_adapter(cfg, params, n_slots=2, max_len=24, extras=extras)
+    assert paged.inplace
+    for slot, p in enumerate(prompts):
+        assert paged.insert(slot, p, max_new=8) == dense.insert(slot, p)
+    active = np.asarray([True, True])
+    for step in range(6):
+        forced = rng.integers(0, cfg.vocab, size=2).astype(np.int32)
+        tp = paged.decode(forced, active)
+        td = dense.decode(forced, active)
+        np.testing.assert_array_equal(tp, td)
+        np.testing.assert_array_equal(np.asarray(paged.last_logits),
+                                      np.asarray(dense.last_logits))
+
+
+# ==========================================================================
+# Block-boundary cases (satellite): aligned crossing, last writable
+# position, trash-padded short chains.
+# ==========================================================================
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCH))
+def test_decode_block_boundary_cases(family):
+    """Three lanes decoding together against the dense oracle, bitwise:
+    a block-aligned prompt (len % bs == 0, first decode crosses into a
+    freshly inserted block), a prompt at max_len - 1 (the last writable
+    position), and a short trash-padded chain."""
+    cfg, params, extras = _setup(FAMILY_ARCH[family])
+    rng = np.random.default_rng(3)
+    max_len = 16
+    lens = (8, 15, 3)       # aligned | last writable | trash-padded short
+    prompts = [rng.integers(0, cfg.vocab, size=s).astype(np.int32)
+               for s in lens]
+    paged = make_adapter(cfg, params, n_slots=3, max_len=max_len,
+                         extras=extras, paged=True, block_size=BS,
+                         chunked=False)
+    dense = make_adapter(cfg, params, n_slots=3, max_len=max_len,
+                         extras=extras)
+    for slot, p in enumerate(prompts):
+        # reserve enough generation blocks to actually decode (slot 1 can
+        # only ever take one more token: 15 + 1 == max_len)
+        max_new = min(8, max_len - len(p))
+        assert paged.insert(slot, p, max_new=max_new) == dense.insert(slot, p)
+    # step 1: slot 1 writes position 15 — the last position its final
+    # block holds; slot 0 writes position 8, the first row of the fresh
+    # generation block its table got at admission
+    active = np.asarray([True, True, True])
+    forced = rng.integers(0, cfg.vocab, size=3).astype(np.int32)
+    np.testing.assert_array_equal(paged.decode(forced, active),
+                                  dense.decode(forced, active))
+    np.testing.assert_array_equal(np.asarray(paged.last_logits),
+                                  np.asarray(dense.last_logits))
+    assert paged.at_capacity(1)
+    # steps 2-3: slot 1 is retired (at capacity) — the oracle must mask it
+    # too, since its dense cache would clamp the out-of-range write; slots
+    # 0 and 2 keep decoding across their block boundaries
+    active = np.asarray([True, False, True])
+    for step in range(3):
+        forced = rng.integers(0, cfg.vocab, size=3).astype(np.int32)
+        tp = paged.decode(forced, active)
+        td = dense.decode(forced, active)
+        np.testing.assert_array_equal(tp[active], td[active])
+        np.testing.assert_array_equal(
+            np.asarray(paged.last_logits)[active],
+            np.asarray(dense.last_logits)[active])
+    assert int(paged.lens[0]) == 12 and int(paged.lens[2]) == 7
+
+
+# ==========================================================================
+# Out-of-range lanes route to the trash block *inside* the jitted tick
+# (satellite bugfix: the old clamp aliased them onto the final block).
+# ==========================================================================
+
+@pytest.mark.parametrize("inplace", [True, False])
+def test_oor_lane_routes_to_trash_in_jit(inplace):
+    """Bypass the host-side at_capacity masking and hand the jitted tick an
+    out-of-range length with a *real* write-block id: the write must land
+    in the trash block, leaving the final (possibly shared) block intact.
+    The pre-fix gather tick clamped the extraction slice instead, silently
+    overwriting the final block."""
+    cfg, params, _ = _setup("stablelm_3b")
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab, size=7).astype(np.int32)
+    ad = make_adapter(cfg, params, n_slots=1, max_len=8, paged=True,
+                      block_size=BS, inplace=inplace)
+    ad.insert(0, prompt, max_new=1)
+    final_bid = int(ad.tables[0, ad.nb_max - 1])
+    assert final_bid != 0
+    dense = dict(ad.cache)
+    dense["len"] = dense["len"].at[0].set(ad.max_len)      # out of range
+    before = {key: np.asarray(ad.arena_block(key, final_bid))
+              for key in ad.seq_keys}
+    arena2, _, _ = ad._decode(
+        ad.params, ad.arena, dense, jnp.asarray(ad.tables),
+        jnp.asarray([[5]], jnp.int32), jnp.asarray([True]),
+        jnp.asarray([final_bid], jnp.int32))               # a REAL target
+    for key in ad.seq_keys:
+        np.testing.assert_array_equal(
+            before[key],
+            np.asarray(jnp.take(arena2[key], final_bid,
+                                axis=ad._bax[key])))
+
+
+# ==========================================================================
+# The full-chain gather is gone from the steady-state tick (jaxpr pin).
+# ==========================================================================
+
+def _gather_out_sizes(jaxpr, out):
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "gather":
+            out.extend(int(np.prod(v.aval.shape)) for v in eqn.outvars)
+        for p in eqn.params.values():
+            vals = p if isinstance(p, (list, tuple)) else (p,)
+            for v in vals:
+                if isinstance(v, jax.core.ClosedJaxpr):
+                    _gather_out_sizes(v.jaxpr, out)
+                elif isinstance(v, jax.core.Jaxpr):
+                    _gather_out_sizes(v, out)
+    return out
+
+
+def test_full_chain_gather_gone_from_inplace_tick():
+    """The old tick materialized each key's whole (slots, L, nb_max*bs)
+    dense cache through one giant gather; the in-place tick must never
+    produce a gather that large — its reads are per-layer (XLA reference)
+    or per-block (kernel DMA)."""
+    cfg, params, _ = _setup("stablelm_3b")
+    ad = make_adapter(cfg, params, n_slots=2, max_len=32, paged=True,
+                      block_size=BS)
+    args = (ad.params, ad.arena, ad.cache, jnp.asarray(ad.tables),
+            jnp.zeros((2, 1), jnp.int32), jnp.ones((2,), bool),
+            jnp.zeros((2,), jnp.int32))
+    full_chain = (2 * cfg.n_layers * ad.nb_max * ad.bs
+                  * cfg.n_kv_heads * cfg.d_head)
+    new = _gather_out_sizes(jax.make_jaxpr(ad._tick_inplace_impl)(*args)
+                            .jaxpr, [])
+    assert new and max(new) < full_chain
+    # guard the pin itself: the legacy tick DOES contain that gather
+    old = _gather_out_sizes(jax.make_jaxpr(ad._tick_impl)(*args).jaxpr, [])
+    assert max(old) >= full_chain
+
+
+# ==========================================================================
+# The Pallas kernel tick (forced interpret off-TPU; the CI
+# kernels-interpret leg runs this deliberately).
+# ==========================================================================
+
+@pytest.mark.parametrize("arch", ["stablelm_3b", "hymba_1_5b"])
+def test_kernel_tick_matches_reference(arch):
+    """kernel=True routes every self-attention layer through
+    kernels/paged_attn.py inside the serving tick.  The kernel's online
+    softmax is not bitwise against the single-shot reference, but tokens
+    must agree and logits must be close — including hymba's traced
+    per-layer sliding/global window selection."""
+    cfg, params, extras = _setup(arch)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, size=s).astype(np.int32)
+               for s in (5, 9)]
+    ref = make_adapter(cfg, params, n_slots=2, max_len=16, extras=extras,
+                       paged=True, block_size=BS, kernel=False)
+    ker = make_adapter(cfg, params, n_slots=2, max_len=16, extras=extras,
+                       paged=True, block_size=BS, kernel=True)
+    assert ker.kernel and ker.inplace
+    for slot, p in enumerate(prompts):
+        assert ref.insert(slot, p, max_new=4) == ker.insert(slot, p,
+                                                            max_new=4)
+    active = np.asarray([True, True])
+    for step in range(3):
+        forced = rng.integers(0, cfg.vocab, size=2).astype(np.int32)
+        tr = ref.decode(forced, active)
+        tk = ker.decode(forced, active)
+        np.testing.assert_array_equal(tr, tk)
+        np.testing.assert_allclose(np.asarray(ker.last_logits),
+                                   np.asarray(ref.last_logits),
+                                   rtol=2e-4, atol=2e-4)
