@@ -47,6 +47,22 @@ DECODE_TICK_FIELDS = {
     "inplace_bytes_proxy": numbers.Integral, "speedup": numbers.Real,
 }
 
+# schema of the optional kvcache "sharded_tick" record (1 device vs N
+# gateway slices at a fixed per-device budget + a mid-decode migration
+# replay; see kvcache_bench.sharded_tick_series — present when the bench
+# ran with --sharded, which the sharded CI job does under
+# XLA_FLAGS=--xla_force_host_platform_device_count=8)
+SHARDED_TICK_FIELDS = {
+    "n_devices": numbers.Integral, "n_slices": numbers.Integral,
+    "budget_blocks_per_device": numbers.Integral,
+    "block_size": numbers.Integral,
+    "single_slots": numbers.Integral, "sharded_slots": numbers.Integral,
+    "single_tok_s": numbers.Real, "sharded_tok_s": numbers.Real,
+    "sharded_gt_single": bool, "routing": dict,
+    "migration_bytes": numbers.Integral,
+    "migration_blocks": numbers.Integral, "migration_bitwise": bool,
+}
+
 SCHEMAS |= {
     "prefix": (
         {"bench": str, "block_size": numbers.Integral, "results": list,
@@ -135,6 +151,31 @@ def check(path: str) -> list[str]:
                     f"tick lost to the gather tick "
                     f"({rec['inplace_tok_s']:.1f} < 0.85 * "
                     f"{rec['gather_tok_s']:.1f} tok/s)")
+        # sharded trend gate (when the series ran): at a fixed per-device
+        # budget, N slices must sustain more aggregate concurrent slots
+        # than one device, and the mid-decode migration replay must have
+        # preserved the migrated lane's logits bitwise
+        sh = payload.get("sharded_tick")
+        if sh is not None:
+            errs += _check_fields(sh, SHARDED_TICK_FIELDS,
+                                  f"{path}: sharded_tick")
+            if not errs:
+                # the migration replay runs whatever the device count —
+                # these must never be skipped (a mesh that silently
+                # collapses to one device must not green-wash the gate)
+                if not sh["migration_bitwise"]:
+                    errs.append(f"{path}: sharded_tick migration drifted "
+                                f"from the stay-put oracle")
+                if sh["migration_bytes"] <= 0:
+                    errs.append(f"{path}: sharded_tick migration moved "
+                                f"zero bytes")
+                if sh["n_slices"] > 1 and (
+                        not sh["sharded_gt_single"] or
+                        sh["sharded_slots"] <= sh["single_slots"]):
+                    errs.append(
+                        f"{path}: sharded_tick {sh['n_slices']} slices "
+                        f"did not beat one device's concurrency "
+                        f"({sh['sharded_slots']} <= {sh['single_slots']})")
     if bench == "prefix" and not errs:
         # trend gate: prefix-hit admission must actually get cheaper once a
         # meaningful prefix (>= 2 shared blocks) is resumed

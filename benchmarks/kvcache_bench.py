@@ -18,8 +18,20 @@ proxy.  The CI trend gate requires the in-place tick not to lose at
 ``nb_max >= 4`` and its bytes proxy to stay strictly below the gather
 tick's.
 
+A third series, ``sharded_tick`` (``--sharded``), scales the paged stack
+over gateway slices (serve/shard/): at a fixed per-device block budget it
+compares one device against ``min(8, jax.device_count())`` slices —
+aggregate concurrent slots, aggregate tokens/s, routing counters — and
+replays a mid-decode cross-slice block migration, reporting its byte cost
+and whether the migrated lane's logits stayed bitwise.  Run it under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the ``sharded`` CI
+job does) for a real multi-device comparison; the CI gate requires the
+8-slice aggregate to beat the single device's concurrency and the
+migration to be bitwise.
+
 Run:  PYTHONPATH=src python benchmarks/kvcache_bench.py
       [--arch stablelm_3b] [--budget-slots 4] [--requests 32] [--smoke]
+      [--sharded]
 """
 import argparse
 import dataclasses
@@ -157,6 +169,95 @@ def decode_tick_series(cfg, params, *, block_size: int, n_slots: int,
     return out
 
 
+def sharded_tick_series(cfg, params, *, block_size: int) -> dict:
+    """One device vs N single-device slices at a fixed per-device budget.
+
+    The acceptance quantity is *aggregate concurrent slots*: each slice
+    brings its own block pool, so the fleet's admissible working set
+    scales with the slice count while no device holds more than
+    ``budget`` blocks.  Wall-clock aggregate tokens/s is reported but not
+    gated (on CPU the virtual devices share the same cores).  The series
+    also replays a mid-decode migration between two slices and pins the
+    migrated lane's logits bitwise against a stay-put oracle.
+    """
+    from repro.serve.gateway.slots import Request
+    from repro.serve.shard import (ShardedPromptGateway, build_slices,
+                                   migrate_slot)
+    from repro.dist.sharding import slice_meshes
+    from repro.launch import mesh as mesh_lib
+
+    n_slices = min(8, jax.device_count())
+    budget = 9                                  # 8 usable blocks per device
+    max_len, max_new, n_req = 16, 4, 4 * n_slices
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab, size=6, dtype=np.int32)
+               for _ in range(n_req)]
+    arrivals = [Arrival(uid=i, t=0.0, endpoint=0, kind="prompt", payload=p)
+                for i, p in enumerate(prompts)]
+    rec = {"n_devices": jax.device_count(), "n_slices": n_slices,
+           "budget_blocks_per_device": budget, "block_size": block_size}
+
+    # single device, same per-device budget
+    single = make_adapter(cfg, params, n_slots=8, max_len=max_len,
+                          paged=True, block_size=block_size,
+                          num_blocks=budget)
+    sb = ContinuousBatcher(single)
+    for i, p in enumerate(prompts):
+        sb.submit(Request(uid=i, prompt=p, max_new_tokens=max_new))
+    t0 = time.perf_counter()
+    done = sb.run()
+    dt = time.perf_counter() - t0
+    rec["single_slots"] = sb.peak_active
+    rec["single_tok_s"] = sum(len(r.generated) for r in done) / max(dt, 1e-9)
+
+    # N slices, each with the same per-device budget
+    mesh = mesh_lib.make_serving_mesh(n_slices, model=1)
+    slices = build_slices(cfg, params, mesh, n_slots=8, max_len=max_len,
+                          block_size=block_size, num_blocks=budget)
+    gw = ShardedPromptGateway(slices, max_new_tokens=max_new,
+                              max_queue=4 * n_req)
+    t0 = time.perf_counter()
+    tel = gw.run(arrivals)
+    dt = time.perf_counter() - t0
+    rep = tel.report(max(dt, 1e-9), kind="prompt")
+    rec["sharded_slots"] = gw.peak_active_total()
+    rec["sharded_tok_s"] = rep["completed"] * max_new / max(dt, 1e-9)
+    rec["sharded_gt_single"] = rec["sharded_slots"] > rec["single_slots"]
+    rec["routing"] = dict(gw.routing)
+
+    # mid-decode migration: bytes moved + bitwise continuation
+    subs = slice_meshes(mesh)
+    mk = lambda m=None: make_adapter(cfg, params, n_slots=2, max_len=max_len,
+                                     paged=True, block_size=block_size,
+                                     mesh=m)
+    oracle, A, B = mk(), mk(subs[0]), mk(subs[min(1, len(subs) - 1)])
+    ps = [rng.integers(0, cfg.vocab, size=s, dtype=np.int32) for s in (5, 9)]
+    active = np.asarray([True, True])
+    for slot, p in enumerate(ps):
+        oracle.insert(slot, p, max_new=7)
+        A.insert(slot, p, max_new=7)
+    for _ in range(3):
+        forced = rng.integers(0, cfg.vocab, size=2).astype(np.int32)
+        oracle.decode(forced, active)
+        A.decode(forced, active)
+    receipt = migrate_slot(A, 1, B, 1, ps[1])
+    bitwise = True
+    lane1 = np.asarray([False, True])
+    for _ in range(3):
+        forced = rng.integers(0, cfg.vocab, size=2).astype(np.int32)
+        oracle.decode(forced, active)
+        B.decode(forced, lane1)
+        bitwise &= bool(np.array_equal(np.asarray(oracle.last_logits)[1],
+                                       np.asarray(B.last_logits)[1]))
+    rec["migration_bytes"] = int(receipt.bytes_moved)
+    rec["migration_blocks"] = int(receipt.blocks_moved)
+    rec["migration_bitwise"] = bitwise
+    common.emit("sharded_tick", 1e6 / max(rec["sharded_tok_s"], 1e-9),
+                f"{rec['sharded_slots']}v{rec['single_slots']}slots,"
+                f"{n_slices}slices,mig{'OK' if bitwise else 'DRIFT'}")
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm_3b")
@@ -168,11 +269,25 @@ def main():
     ap.add_argument("--max-new", type=int, default=4)
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: minimal sizes, same schema")
+    ap.add_argument("--sharded", action="store_true",
+                    help="add the sharded_tick series (1 vs N virtual "
+                         "devices; run under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--expect-devices", type=int, default=0,
+                    help="fail fast unless jax sees at least this many "
+                         "devices (the sharded CI job passes 8 so a "
+                         "silently ineffective XLA_FLAGS cannot degrade "
+                         "the series to a vacuous 1-slice run)")
     ap.add_argument("--out", default=str(pathlib.Path(__file__).parent
                                          / "BENCH_kvcache.json"))
     args = ap.parse_args()
     if args.smoke:
         args.requests, args.max_len, args.budget_slots = 8, 32, 2
+    if args.expect_devices and jax.device_count() < args.expect_devices:
+        raise SystemExit(
+            f"expected >= {args.expect_devices} devices, jax sees "
+            f"{jax.device_count()} — is XLA_FLAGS="
+            f"--xla_force_host_platform_device_count set?")
 
     cfg = dataclasses.replace(configs.smoke_config(args.arch),
                               param_dtype="float32")
@@ -211,6 +326,9 @@ def main():
                            > dense["max_concurrent_slots"]),
         "decode_tick": ticks,
     }
+    if args.sharded:
+        payload["sharded_tick"] = sharded_tick_series(
+            cfg, params, block_size=args.block_size)
     common.emit_json(args.out, payload)
     if not payload["paged_gt_dense"]:
         print("WARNING: paged did not beat dense concurrency at this budget")

@@ -72,6 +72,29 @@ def named(mesh, tree):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def slice_meshes(mesh) -> list:
+    """Factor a serving mesh into one sub-mesh per data-parallel coordinate.
+
+    The innermost ``"model"`` axis is kept (tensor parallelism *within* a
+    slice); every other axis is flattened into the slice index, so a
+    ``(4, 2)`` ``("data", "model")`` mesh yields 4 two-device
+    ``("model",)`` sub-meshes.  A mesh with no ``"model"`` axis yields one
+    single-device slice per device.  These are the units the sharded
+    gateway (serve/shard/) schedules over: each slice owns its own block
+    pool + arena, placed on the sub-mesh's devices.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = np.asarray(mesh.devices)
+    names = tuple(mesh.axis_names)
+    if MODEL_AXIS in names:
+        devs = np.moveaxis(devs, names.index(MODEL_AXIS), -1)
+        flat = devs.reshape(-1, devs.shape[-1])
+    else:
+        flat = devs.reshape(-1, 1)
+    return [Mesh(flat[i], (MODEL_AXIS,)) for i in range(flat.shape[0])]
+
+
 # ==========================================================================
 # ZeRO-1: optimizer state sharded over the DP group.
 # ==========================================================================

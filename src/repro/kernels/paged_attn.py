@@ -99,6 +99,69 @@ def _paged_kernel(tables_ref, lens_ref, win_ref, q_ref, k_ref, v_ref, *rest,
                     ).astype(o_ref.dtype)
 
 
+def _scatter_kernel(wbids_ref, offs_ref, kr_ref, vr_ref, ka_ref, va_ref,
+                    ko_ref, vo_ref):
+    # grid (L, S): layer l writes lane b's K and V rows at row offs[b] of
+    # arena block wbids[b].  The arena refs alias the outputs, so every
+    # block not addressed by some (l, b) keeps its bytes untouched — no
+    # functional rebuild of the layer slice.  A *visited* block's output
+    # window, however, is written back whole at the window switch, so the
+    # other bs-1 rows must be seeded from the fetched input block first —
+    # without this, Mosaic would write back an uninitialized VMEM window
+    # and clobber the live rows the lane already wrote this block
+    # (interpret mode masks that, because there the aliased output
+    # literally *is* the input buffer).
+    b = pl.program_id(1)
+    ko_ref[...] = ka_ref[...]
+    vo_ref[...] = va_ref[...]
+    ko_ref[0, 0, 0, offs_ref[b]] = kr_ref[0, 0]
+    vo_ref[0, 0, 0, offs_ref[b]] = vr_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scatter_kv_rows(k_arena, v_arena, k_rows, v_rows, wbids, offs, *,
+                    interpret: bool | None = None):
+    """Land the decode tick's per-layer K/V rows in the arena **in place**.
+
+    k_arena, v_arena: (L, num_blocks, 1, bs, Hkv, D) — the layer-leading
+    ``engine.init_paged_arena`` layout; k_rows, v_rows: (L, S, Hkv, D) the
+    new token's post-RoPE rows per layer and lane; wbids: (S,) int32 arena
+    block per lane (the caller routes masked lanes to the trash block);
+    offs: (S,) int32 row within the block (``len % bs``).
+
+    ``input_output_aliases`` donates both arenas into their outputs: the
+    kernel touches exactly the (layer, block) tiles the block table names
+    and every other block's bytes stay where they are — the Pallas leg's
+    counterpart of the XLA buffer donation that already makes the
+    ``.at[].set`` reference leg update in place.  Semantically identical
+    to ``arena.at[:, wbids, 0, offs].set(rows)`` wherever the (block,
+    row) targets are unique — they are for every live lane; only
+    trash-routed lanes may collide, and the trash block's contents are
+    garbage under both orders (asserted in tests/test_paged_attn.py).
+    """
+    from repro.kernels.ops import resolve_interpret
+    interpret = resolve_interpret(interpret)
+    L, nb, _, bs, Hkv, D = k_arena.shape
+    S = wbids.shape[0]
+    row = pl.BlockSpec((1, 1, Hkv, D), lambda l, b, w, o: (l, b, 0, 0))
+    blk = pl.BlockSpec((1, 1, 1, bs, Hkv, D),
+                       lambda l, b, w, o: (l, w[b], 0, 0, 0, 0))
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(L, S),
+            in_specs=[row, row, blk, blk],
+            out_specs=[blk, blk],
+        ),
+        out_shape=[jax.ShapeDtypeStruct(k_arena.shape, k_arena.dtype),
+                   jax.ShapeDtypeStruct(v_arena.shape, v_arena.dtype)],
+        input_output_aliases={4: 0, 5: 1},
+        interpret=interpret,
+    )(jnp.asarray(wbids, jnp.int32), jnp.asarray(offs, jnp.int32),
+      k_rows, v_rows, k_arena, v_arena)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_decode_attention(q, k_arena, v_arena, tables, lens, *,
                            window=None, new_kv=None,

@@ -32,3 +32,22 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Arbitrary mesh (elastic scaling / tests): same axis-name contract."""
     return _make(shape, axes)
+
+
+def make_serving_mesh(n_slices: int | None = None, model: int = 1):
+    """("data", "model") mesh for the sharded serving gateway.
+
+    ``n_slices`` data-parallel gateway slices (default: as many as the
+    device count affords at ``model`` tensor-parallel devices per slice).
+    On CPU the device count comes from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — how the
+    sharded CI job and tests/test_sharded.py run an 8-way mesh on one
+    host.  Factor the result with ``dist.sharding.slice_meshes`` to get
+    the per-slice sub-meshes the gateway router schedules over.
+    """
+    n_dev = jax.device_count()
+    if n_slices is None:
+        n_slices = max(1, n_dev // model)
+    assert n_slices * model <= n_dev, \
+        f"serving mesh {n_slices}x{model} exceeds {n_dev} devices"
+    return _make((n_slices, model), ("data", "model"))

@@ -525,7 +525,8 @@ def _attn_apply(cfg: LMConfig, p, x, positions, *, causal=True, window=0,
 
 
 def attn_decode_paged(cfg: LMConfig, p, x1, k_blocks, v_blocks, tables, pos,
-                      *, window=0, kernel=False, interpret=None):
+                      *, window=0, kernel=False, interpret=None,
+                      scales=None):
     """One-token decode attention for a batch of slots, reading K/V in
     place from one layer's slice of the paged block arena.
 
@@ -546,6 +547,15 @@ def attn_decode_paged(cfg: LMConfig, p, x1, k_blocks, v_blocks, tables, pos,
     operand overlaid in VMEM (an arena-slice update here would copy every
     block of the layer, live or not — the very traffic the kernel's
     per-block DMA exists to avoid).
+
+    ``scales``: optional (k_scale_blocks, v_scale_blocks) — one layer's
+    slice of the int8 ``kv_quant`` scale arenas.  The new row is quantized
+    post-RoPE (exactly :func:`engine._decode_attn`'s write) and attention
+    reads the dequantized gathered view with the *dequantized-quantized*
+    row spliced in — what the dense quant tick sees after its write — so
+    in-place quant decode stays bitwise against the gather-tick oracle.
+    Returns (out, k1q, v1q, k1_scale, v1_scale) in that case; the Pallas
+    kernel path does not cover the quant layout (assert).
     """
     B = x1.shape[0]
     q = _proj(x1, p["wq"], p.get("bq")).reshape(B, 1, cfg.n_heads, cfg.d_head)
@@ -557,6 +567,19 @@ def attn_decode_paged(cfg: LMConfig, p, x1, k_blocks, v_blocks, tables, pos,
         q = rope.apply_rope(q, posb, cfg.rope_theta)
         k1 = rope.apply_rope(k1, posb, cfg.rope_theta)
     kb, vb = k_blocks[:, 0], v_blocks[:, 0]      # (num_blocks, bs, Hkv, Dh)
+    if scales is not None:
+        assert not kernel, "paged_attn kernel: int8 kv_quant unsupported"
+        from repro.serve import kvquant
+        k1q, k1s = kvquant.quantize(k1)
+        v1q, v1s = kvquant.quantize(v1)
+        o = attention.attend_decode_paged(
+            q, kb, vb, tables, pos + 1, window=window,
+            new_kv=(kvquant.dequantize(k1q, k1s, cfg.dtype)[:, 0],
+                    kvquant.dequantize(v1q, v1s, cfg.dtype)[:, 0]),
+            scales=(scales[0][:, 0], scales[1][:, 0]), out_dtype=cfg.dtype)
+        out = _proj(o.reshape(B, 1, cfg.n_heads * cfg.d_head), p["wo"],
+                    p.get("bo"))
+        return out, k1q[:, 0], v1q[:, 0], k1s[:, 0], v1s[:, 0]
     if kernel:
         from repro.kernels.paged_attn import paged_decode_attention
         o = paged_decode_attention(q[:, 0], kb, vb, tables, pos + 1,

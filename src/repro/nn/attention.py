@@ -375,7 +375,8 @@ def gather_paged_kv(arena, block_table) -> jax.Array:
 
 
 def attend_decode_paged(q, k_arena, v_arena, block_table, cache_len, *,
-                        window=0, new_kv=None) -> jax.Array:
+                        window=0, new_kv=None, scales=None,
+                        out_dtype=None) -> jax.Array:
     """One-token decode attention against a *paged* cache (single layer).
 
     q: (B, 1, Hq, D); k_arena, v_arena: (num_blocks, bs, Hkv, D);
@@ -390,6 +391,14 @@ def attend_decode_paged(q, k_arena, v_arena, block_table, cache_len, *,
     (mode="drop" so a lane already at capacity never corrupts a live row;
     such lanes are masked upstream and their output is discarded).
 
+    ``scales``: optional (k_scale_arena, v_scale_arena), each
+    (num_blocks, bs, Hkv, 1) f32 — the int8 ``kv_quant`` layout.  The
+    gathered view is dequantized to ``out_dtype`` *after* the per-table
+    gather (elementwise, so it is bit-identical to dequantizing the dense
+    cache and gathering), and ``new_kv`` must then carry the already
+    dequantized current row — exactly what the dense quant tick attends
+    over after writing the quantized row.
+
     Gathers each row's block chain into the dense layout and applies the
     same masked softmax as :func:`attend_decode`, with a per-row length
     vector instead of a shared scalar.  This is the XLA reference semantics
@@ -401,6 +410,12 @@ def attend_decode_paged(q, k_arena, v_arena, block_table, cache_len, *,
     scale = D ** -0.5
     k = gather_paged_kv(k_arena, block_table)       # (B, S, Hkv, D)
     v = gather_paged_kv(v_arena, block_table)
+    if scales is not None:
+        from repro.serve import kvquant
+        ks = gather_paged_kv(scales[0], block_table)
+        vs = gather_paged_kv(scales[1], block_table)
+        k = kvquant.dequantize(k, ks, out_dtype)
+        v = kvquant.dequantize(v, vs, out_dtype)
     if new_kv is not None:
         k1, v1 = new_kv
         rows = jnp.arange(B)

@@ -120,6 +120,28 @@ def arena_block_axis(a) -> int:
     return a.ndim - 5
 
 
+def arena_specs(cfg: LMConfig, mesh_shape: dict[str, int]):
+    """PartitionSpec tree matching :func:`init_paged_arena`.
+
+    Derived from :func:`cache_specs` the same way the arena layout is
+    derived from the cache layout: the dense B=1 spec with a replicated
+    block axis spliced in just before the batch axis.  KV heads shard over
+    "model" when divisible (the split-KV fallback then shards the
+    *block-size* axis instead, mirroring the dense sequence-axis
+    fallback); the block axis itself is never sharded — slices of the
+    serving mesh partition the arena by *pool*, not by splitting one
+    pool's blocks (see serve/shard/)."""
+    dense = cache_specs(cfg, mesh_shape, batch=1)
+    out = {}
+    for key in PAGED_SEQ_KEYS:
+        if key not in dense:
+            continue
+        sp = tuple(dense[key])
+        ax = len(sp) - 4                         # just before the B axis
+        out[key] = P(*sp[:ax], None, *sp[ax:])
+    return out
+
+
 def cache_specs(cfg: LMConfig, mesh_shape: dict[str, int], batch: int):
     """PartitionSpec tree matching init_cache."""
     b = batch_spec_axis(mesh_shape, batch)
@@ -776,7 +798,9 @@ def decode_step_paged(cfg: LMConfig, params, cache, tokens, *, tables, lens,
     fam = cfg.family
     assert fam in ("decoder", "moe", "hybrid", "encdec"), \
         f"in-place paged decode: unsupported family {fam}"
-    assert not cfg.kv_quant, "in-place paged decode: int8 KV unsupported"
+    quant = cfg.kv_quant and fam != "encdec"     # encdec caches full-dtype
+    assert not (quant and kernel), \
+        "in-place paged decode: the Pallas kernel does not cover kv_quant"
     S = tokens.shape[0]
     bs = arena["k"].shape[-3]
     nb = tables.shape[1]
@@ -796,18 +820,32 @@ def decode_step_paged(cfg: LMConfig, params, cache, tokens, *, tables, lens,
     new_cache = dict(cache)
     new_cache["len"] = pos + 1
 
-    def attn(lp, z, kb, vb, window=0):
-        return lm.attn_decode_paged(cfg, lp, z, kb, vb, tables, pos,
-                                    window=window, kernel=kernel,
-                                    interpret=interpret)
+    def attn(lp, z, kb, vb, window=0, scales=None):
+        """Returns (out, *rows): rows are the sequence-axis writes this
+        layer owes the arena — (k1, v1) plain, + (k1_scale, v1_scale)
+        under the int8 kv_quant layout."""
+        out = lm.attn_decode_paged(cfg, lp, z, kb, vb, tables, pos,
+                                   window=window, kernel=kernel,
+                                   interpret=interpret, scales=scales)
+        return out[0], out[1:]
+
+    def layer_arenas(sl):
+        out = (arena["k"][sl], arena["v"][sl])
+        if quant:
+            out += (arena["k_scale"][sl], arena["v_scale"][sl])
+        return out
+
+    def split_sc(arenas):
+        return (arenas[:2], arenas[2:] if quant else None)
 
     if fam in ("decoder", "moe"):
         L = cfg.n_layers - (1 if fam == "moe" else 0)
 
         def body(x, inp):
-            lp, kb, vb, idx = inp
-            h, k1, v1 = attn(lp["attn"], _norm_apply(cfg, lp["ln1"], x),
-                             kb, vb, window=layer_window(cfg, idx))
+            lp, idx = inp[0], inp[-1]
+            (kb, vb), sc = split_sc(inp[1:-1])
+            h, rows = attn(lp["attn"], _norm_apply(cfg, lp["ln1"], x),
+                           kb, vb, window=layer_window(cfg, idx), scales=sc)
             x = x + h
             z = _norm_apply(cfg, lp["ln2"], x)
             if fam == "moe":
@@ -818,28 +856,30 @@ def decode_step_paged(cfg: LMConfig, params, cache, tokens, *, tables, lens,
                     cfg, lp["moe"], zi[None])[0][0])(z)
             else:
                 y = _mlp_apply(cfg, lp["mlp"], z)
-            return x + y, (k1, v1)
+            return x + y, rows
 
         if fam == "moe":
             p0 = jax.tree.map(lambda a: a[0], params["dense0"])
-            h, k0, v0 = attn(p0["attn"], _norm_apply(cfg, p0["ln1"], x),
-                             arena["k"][0], arena["v"][0])
+            (kb0, vb0), sc0 = split_sc(layer_arenas(0))
+            h, rows0 = attn(p0["attn"], _norm_apply(cfg, p0["ln1"], x),
+                            kb0, vb0, scales=sc0)
             x = x + h
             x = x + _mlp_apply(cfg, p0["mlp"], _norm_apply(cfg, p0["ln2"], x))
-        off = 1 if fam == "moe" else 0
-        x, (k_rows, v_rows) = jax.lax.scan(
-            body, x, (params["blocks"], arena["k"][off:], arena["v"][off:],
-                      jnp.arange(L, dtype=jnp.int32)))
+        off = slice(1, None) if fam == "moe" else slice(None)
+        x, rows = jax.lax.scan(
+            body, x, (params["blocks"],) + layer_arenas(off)
+            + (jnp.arange(L, dtype=jnp.int32),))
         if fam == "moe":
-            k_rows = jnp.concatenate([k0[None], k_rows], 0)
-            v_rows = jnp.concatenate([v0[None], v_rows], 0)
+            rows = tuple(jnp.concatenate([r0[None], r], 0)
+                         for r0, r in zip(rows0, rows))
 
     elif fam == "hybrid":
         def body(x, inp):
-            lp, kb, vb, conv_st, ssm_st, idx = inp
+            lp, conv_st, ssm_st, idx = inp[0], inp[-3], inp[-2], inp[-1]
+            (kb, vb), sc = split_sc(inp[1:-3])
             z = _norm_apply(cfg, lp["ln1"], x)
-            att, k1, v1 = attn(lp["attn"], z, kb, vb,
-                               window=layer_window(cfg, idx))
+            att, kv_rows = attn(lp["attn"], z, kb, vb,
+                                window=layer_window(cfg, idx), scales=sc)
             xz = _proj(z, lp["in_proj"])
             xm, gate = jnp.split(xz, 2, axis=-1)
             xm, conv_st = _causal_conv(xm, lp["conv_w"], conv_st)
@@ -864,21 +904,22 @@ def decode_step_paged(cfg: LMConfig, params, cache, tokens, *, tables, lens,
                                              ).astype(jnp.float32)) * 0.5
             x = x + mixed.astype(x.dtype)
             x = x + _mlp_apply(cfg, lp["mlp"], _norm_apply(cfg, lp["ln2"], x))
-            return x, (k1, v1, conv_st, ssm_st)
+            return x, kv_rows + (conv_st, ssm_st)
 
-        x, (k_rows, v_rows, conv, ssm_s) = jax.lax.scan(
-            body, x, (params["blocks"], arena["k"], arena["v"],
-                      jnp.moveaxis(cache["conv"], 1, 0)[:, :, 0],
-                      jnp.moveaxis(cache["ssm"], 1, 0)[:, :, 0],
-                      jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+        x, outs = jax.lax.scan(
+            body, x, (params["blocks"],) + layer_arenas(slice(None))
+            + (jnp.moveaxis(cache["conv"], 1, 0)[:, :, 0],
+               jnp.moveaxis(cache["ssm"], 1, 0)[:, :, 0],
+               jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+        rows, (conv, ssm_s) = outs[:-2], outs[-2:]
         new_cache["conv"] = jnp.moveaxis(conv, 1, 0)[:, :, None]
         new_cache["ssm"] = jnp.moveaxis(ssm_s, 1, 0)[:, :, None]
 
     elif fam == "encdec":
         def body(x, inp):
             lp, kb, vb, xk, xv = inp
-            h, k1, v1 = attn(lp["attn"], _norm_apply(cfg, lp["ln1"], x),
-                             kb, vb)
+            h, rows = attn(lp["attn"], _norm_apply(cfg, lp["ln1"], x),
+                           kb, vb)
             x = x + h
             q = _proj(_norm_apply(cfg, lp["ln_x"], x), lp["xattn"]["wq"],
                       lp["xattn"].get("bq")).reshape(
@@ -890,19 +931,30 @@ def decode_step_paged(cfg: LMConfig, params, cache, tokens, *, tables, lens,
                             ).astype(x.dtype)
             x = x + gate * hx
             x = x + _mlp_apply(cfg, lp["mlp"], _norm_apply(cfg, lp["ln2"], x))
-            return x, (k1, v1)
+            return x, rows
 
-        x, (k_rows, v_rows) = jax.lax.scan(
+        x, rows = jax.lax.scan(
             body, x, (params["dec_blocks"], arena["k"], arena["v"],
                       jnp.moveaxis(cache["xk"], 1, 0)[:, :, 0],
                       jnp.moveaxis(cache["xv"], 1, 0)[:, :, 0]))
 
-    # the tick's only sequence-axis write: one (S, Hkv, Dh) row per layer,
-    # landed at (block, offset) per lane — trash-routed lanes are absorbed
-    # by the reserved block 0
+    # the tick's only sequence-axis write: one (S, Hkv, Dh) row per layer
+    # (+ the f32 scale rows under kv_quant), landed at (block, offset) per
+    # lane — trash-routed lanes are absorbed by the reserved block 0.  The
+    # kernel leg scatters through kernels.paged_attn.scatter_kv_rows,
+    # whose input_output_aliases update the arena buffers in place instead
+    # of functionally rebuilding every layer slice (XLA donation already
+    # covers the .at[].set reference leg).
     new_arena = dict(arena)
-    for key, rows in (("k", k_rows), ("v", v_rows)):
-        new_arena[key] = arena[key].at[:, wbids, 0, offs].set(rows)
+    row_keys = ("k", "v", "k_scale", "v_scale") if quant else ("k", "v")
+    if kernel:
+        from repro.kernels.paged_attn import scatter_kv_rows
+        new_arena["k"], new_arena["v"] = scatter_kv_rows(
+            arena["k"], arena["v"], rows[0], rows[1], wbids, offs,
+            interpret=interpret)
+    else:
+        for key, r in zip(row_keys, rows):
+            new_arena[key] = arena[key].at[:, wbids, 0, offs].set(r)
 
     x = _norm_apply(cfg, params["final_norm"], x)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]

@@ -163,6 +163,69 @@ class MicroBatchGateway:
         return tel
 
 
+def drive_prompt_loop(arrivals, tel: Telemetry, *, busy, queue_depth,
+                      max_queue: int, submit, step, record) -> None:
+    """The virtual-time event loop shared by the one-slice
+    :class:`PromptGateway` and the sharded router (serve/shard/): drain
+    arrivals into ``submit`` as virtual time reaches them (dropping, with
+    accounting, beyond ``max_queue``), charge each ``step``'s measured
+    wall time to the virtual clock, and ``record(req, now)`` every
+    completion.  One driver means drop policy and clock accounting cannot
+    drift between the two front doors.
+    """
+    now, i, n = 0.0, 0, len(arrivals)
+    while i < n or busy():
+        if not busy():
+            now = max(now, arrivals[i].t)
+        while i < n and arrivals[i].t <= now:
+            a = arrivals[i]
+            i += 1
+            if queue_depth() >= max_queue:
+                tel.drop(a.uid, "prompt")
+                continue
+            submit(a)
+        t0 = time.perf_counter()
+        finished = step()
+        now += time.perf_counter() - t0
+        for req in finished:
+            record(req, now)
+
+
+def record_prompt_completion(tel: Telemetry, req, now: float,
+                             t_arrival: float, endpoint: int,
+                             token_energy_nj: float, bytes_per_token: int,
+                             energy_spec: "fe.FrontendSpec | None" = None
+                             ) -> None:
+    """Charge one finished LM request into the ledger — the single pricing
+    path shared by :class:`PromptGateway` and the sharded router
+    (serve/shard/router.py), so the energy model cannot drift between the
+    one-slice and multi-slice front doors.
+
+    Prefix-cache resumes skip the frontend compute for the shared prompt
+    tokens (the link still carries every token); cross-slice migration
+    bytes, when present on the request, are priced through
+    :func:`frontend.migration_energy_nj`.
+    """
+    n_tokens = len(req.prompt) + len(req.generated)
+    processed = n_tokens - req.prefill_tokens_skipped
+    link = bytes_per_token * n_tokens
+    energy_nj = token_energy_nj * processed \
+        + link * E_LINK_PJ_PER_BYTE * 1e-3
+    migration_bytes = getattr(req, "migration_bytes", 0)
+    if migration_bytes and energy_spec is not None:
+        energy_nj += fe.migration_energy_nj(energy_spec, migration_bytes)
+    tel.record(RequestRecord(
+        uid=req.uid, endpoint=endpoint, kind="prompt",
+        t_arrival=t_arrival, t_done=now, energy_nj=energy_nj,
+        link_bytes=link, output=req.generated[-1],
+        kv_blocks=req.kv_blocks,
+        prefix_hit_blocks=req.prefix_hit_blocks,
+        prefill_tokens_skipped=req.prefill_tokens_skipped,
+        energy_saved_nj=token_energy_nj * req.prefill_tokens_skipped,
+        migration_bytes=migration_bytes,
+        migrations=getattr(req, "migrations", 0)))
+
+
 class PromptGateway:
     """The LM path: arrivals -> family-generic slot batcher, virtual time.
 
@@ -210,39 +273,19 @@ class PromptGateway:
         arrivals = [a for a in arrivals if a.kind == "prompt"]
         arr_t = {a.uid: a.t for a in arrivals}
         arr_ep = {a.uid: a.endpoint for a in arrivals}
-        now, i, n = 0.0, 0, len(arrivals)
-        while i < n or self.batcher.busy:
-            if not self.batcher.busy:
-                now = max(now, arrivals[i].t)
-            while i < n and arrivals[i].t <= now:
-                a = arrivals[i]
-                i += 1
-                if len(self.batcher.pending) >= self.max_queue:
-                    tel.drop(a.uid, "prompt")
-                    continue
-                self.batcher.submit(Request(
-                    uid=a.uid, prompt=np.asarray(a.payload, np.int32),
-                    max_new_tokens=self.max_new_tokens))
-            t0 = time.perf_counter()
-            finished = self.batcher.step()
-            now += time.perf_counter() - t0
-            for req in finished:
-                n_tokens = len(req.prompt) + len(req.generated)
-                # prefix-cache resumes skip the frontend compute for the
-                # shared prompt tokens; the link still carries every token
-                processed = n_tokens - req.prefill_tokens_skipped
-                link = self.bytes_per_token * n_tokens
-                energy_nj = self._token_energy_nj * processed \
-                    + link * E_LINK_PJ_PER_BYTE * 1e-3
-                tel.record(RequestRecord(
-                    uid=req.uid, endpoint=arr_ep[req.uid], kind="prompt",
-                    t_arrival=arr_t[req.uid], t_done=now,
-                    energy_nj=energy_nj, link_bytes=link,
-                    output=req.generated[-1], kv_blocks=req.kv_blocks,
-                    prefix_hit_blocks=req.prefix_hit_blocks,
-                    prefill_tokens_skipped=req.prefill_tokens_skipped,
-                    energy_saved_nj=self._token_energy_nj
-                    * req.prefill_tokens_skipped))
+        drive_prompt_loop(
+            arrivals, tel,
+            busy=lambda: self.batcher.busy,
+            queue_depth=lambda: len(self.batcher.pending),
+            max_queue=self.max_queue,
+            submit=lambda a: self.batcher.submit(Request(
+                uid=a.uid, prompt=np.asarray(a.payload, np.int32),
+                max_new_tokens=self.max_new_tokens)),
+            step=self.batcher.step,
+            record=lambda req, now: record_prompt_completion(
+                tel, req, now, arr_t[req.uid], arr_ep[req.uid],
+                self._token_energy_nj, self.bytes_per_token,
+                self.energy_spec))
         pool_stats = getattr(self.batcher.adapter, "pool_stats", None)
         if pool_stats is not None:
             tel.record_pool(pool_stats())

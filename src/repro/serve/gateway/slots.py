@@ -62,6 +62,9 @@ class Request:
     prefix_hit_blocks: int = 0
     # prompt tokens whose prefill was skipped via a prefix-cache resume
     prefill_tokens_skipped: int = 0
+    # cross-slice migration accounting (sharded gateway, serve/shard/)
+    migrations: int = 0
+    migration_bytes: int = 0
 
     @property
     def done(self) -> bool:
@@ -190,7 +193,8 @@ def make_adapter(cfg: LMConfig, params, n_slots: int, max_len: int = 128,
                  extras: Callable[[], dict] | None = None, *,
                  paged: bool = False, block_size: int = 16,
                  num_blocks: int | None = None, chunked: bool = True,
-                 inplace: bool = True, kernel: bool | None = None):
+                 inplace: bool = True, kernel: bool | None = None,
+                 mesh=None):
     """Family dispatch: state slots for rwkv, KV slots for everything else.
 
     ``paged=True`` swaps the dense per-slot KV buffers for the block-pool
@@ -202,9 +206,20 @@ def make_adapter(cfg: LMConfig, params, n_slots: int, max_len: int = 128,
     straight against the block arena through ``engine.decode_step_paged``
     instead of the PR 2 gather->decode->scatter tick; ``kernel`` forces the
     Pallas paged-attention kernel on/off inside that tick (None = Mosaic on
-    TPU, XLA reference elsewhere).  rwkv has O(1) state, so ``paged`` is a
-    no-op for it.
+    TPU, XLA reference elsewhere).  ``mesh`` (paged only) commits the
+    adapter's arena/params to a serving-mesh slice with
+    ``engine.arena_specs`` placement — the sharded-serving entry point
+    (serve/shard/; a single-device slice stays bitwise-identical to the
+    unsharded adapter).  rwkv has O(1) state, so ``paged`` is a no-op for
+    it.
     """
+    if mesh is not None and (not paged or cfg.family == "rwkv"):
+        # silently returning an unplaced adapter would defeat the sharding
+        # without any signal — only the paged attention families commit
+        # their state to a mesh slice
+        raise ValueError("mesh placement requires paged=True and a "
+                         f"non-rwkv family (got paged={paged}, "
+                         f"family={cfg.family})")
     if cfg.family == "rwkv":
         return StateSlotAdapter(cfg, params, n_slots)
     if paged:
@@ -213,7 +228,7 @@ def make_adapter(cfg: LMConfig, params, n_slots: int, max_len: int = 128,
                                   block_size=block_size,
                                   num_blocks=num_blocks, extras=extras,
                                   chunked=chunked, inplace=inplace,
-                                  kernel=kernel)
+                                  kernel=kernel, mesh=mesh)
     return KVSlotAdapter(cfg, params, n_slots, max_len, extras)
 
 
@@ -241,6 +256,7 @@ class ContinuousBatcher:
         self.active: list[Request | None] = [None] * self.n_slots
         self.last_token = np.zeros((self.n_slots,), np.int32)
         self.peak_active = 0            # max concurrent slots ever decoded
+        self.last_active = 0            # slots decoding in the latest step
 
     def submit(self, req: Request):
         if self.adapter.max_len is not None and \
@@ -313,7 +329,8 @@ class ContinuousBatcher:
                     self.adapter.clear(slot)
                     self.last_token[slot] = 0
         active = np.asarray([r is not None for r in self.active])
-        self.peak_active = max(self.peak_active, int(active.sum()))
+        self.last_active = int(active.sum())
+        self.peak_active = max(self.peak_active, self.last_active)
         if not active.any():
             return finished
         toks = self.adapter.decode(self.last_token, active)

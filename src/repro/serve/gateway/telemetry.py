@@ -39,6 +39,11 @@ class RequestRecord:
     # energy those skipped tokens would have cost (scaled_report pricing)
     prefill_tokens_skipped: int = 0
     energy_saved_nj: float = 0.0
+    # cross-slice KV-block migration (sharded gateway): bytes this request's
+    # context moved between slices; the move's energy is already inside
+    # energy_nj (frontend.migration_energy_nj), keeping the ledger conserved
+    migration_bytes: int = 0
+    migrations: int = 0
 
     @property
     def latency_s(self) -> float:
@@ -54,6 +59,8 @@ class Telemetry:
         self._fleet_energy_nj = 0.0
         self._fleet_link_bytes = 0
         self.pool: dict = {}          # paged KV pool snapshot (LM path)
+        self.pools: dict = {}         # per-slice snapshots (sharded gateway)
+        self.routing: dict = {}       # cross-slice routing/migration counts
 
     # -- charging ----------------------------------------------------------
     def record(self, rec: RequestRecord) -> None:
@@ -64,10 +71,45 @@ class Telemetry:
     def drop(self, uid: int, kind: str) -> None:
         self.dropped.append((uid, kind))
 
-    def record_pool(self, stats: dict) -> None:
+    def record_pool(self, stats: dict, slice_idx: int | None = None) -> None:
         """Snapshot the paged KV pool's counters (blocks in use, prefix-hit
-        rate, bytes saved vs dense, evictions) into the ledger."""
-        self.pool = dict(stats)
+        rate, bytes saved vs dense, evictions) into the ledger.  The
+        sharded gateway passes ``slice_idx`` to keep one snapshot per mesh
+        slice (``pools``); ``pool`` then aggregates the additive counters
+        across slices."""
+        if slice_idx is None:
+            self.pool = dict(stats)
+            return
+        self.pools[slice_idx] = dict(stats)
+        agg: dict = {}
+        for st in self.pools.values():
+            for k, v in st.items():
+                if k == "block_size" or isinstance(v, bool) or \
+                        not isinstance(v, (int, float)):
+                    agg[k] = v                   # per-slice constant
+                elif k == "prefix_hit_rate":
+                    agg[k] = agg.get(k, 0.0)     # re-derived below
+                elif k.startswith("peak_"):
+                    # per-slice high-water marks are asynchronous: their
+                    # sum overstates any fleet-simultaneous peak.  Max is
+                    # the defensible aggregate (a lower bound on the true
+                    # fleet peak); the per-slice marks stay in ``pools``
+                    agg[k] = max(agg.get(k, 0), v)
+                else:
+                    agg[k] = agg.get(k, 0) + v   # additive counter
+        # the fleet hit rate comes from the summed raw counters, not a
+        # mean of per-slice rates (a busy cold slice would otherwise be
+        # averaged 1:1 against an idle warm one)
+        q = agg.get("prefix_queries", 0)
+        agg["prefix_hit_rate"] = (agg.get("prefix_hits", 0) / q) if q \
+            else 0.0
+        agg["n_slices"] = len(self.pools)
+        self.pool = agg
+
+    def record_routing(self, counts: dict) -> None:
+        """Cross-slice routing decisions + migration totals (sharded
+        gateway): affinity vs load routes, spills, migrations, bytes."""
+        self.routing = dict(counts)
 
     # -- aggregation -------------------------------------------------------
     @property
@@ -117,6 +159,15 @@ class Telemetry:
                     sum(r.prefill_tokens_skipped for r in recs) / len(recs)
                 out["prefill_energy_saved_nj"] = \
                     float(sum(r.energy_saved_nj for r in recs))
+            mig = sum(r.migrations for r in recs)
+            if mig:
+                out["migrations"] = mig
+                out["migration_bytes_total"] = \
+                    int(sum(r.migration_bytes for r in recs))
         if self.pool and kind in (None, "prompt"):
             out["pool"] = dict(self.pool)
+        if self.pools and kind in (None, "prompt"):
+            out["pools"] = {i: dict(st) for i, st in self.pools.items()}
+        if self.routing and kind in (None, "prompt"):
+            out["routing"] = dict(self.routing)
         return out

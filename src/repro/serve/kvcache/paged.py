@@ -26,8 +26,12 @@ Decode tick (one jitted call, fixed shapes)
     The PR 2 gather tick (gather each chain into the dense layout ->
     vmapped :func:`engine.decode_step` -> scatter one block back) is kept
     as ``inplace=False``: it is the parity oracle the in-place path is
-    asserted bitwise against, and the fallback for the layouts the
-    in-place path does not cover (vlm's grouped cache, int8 ``kv_quant``).
+    asserted bitwise against, and the fallback for the one layout the
+    in-place path does not cover (vlm's grouped cache).  The int8
+    ``kv_quant`` layout rides the in-place tick: the new row is quantized
+    post-RoPE and written as one int8 row + one f32 scale row per layer,
+    and the attention read dequantizes the gathered view — bitwise
+    against the gather-tick oracle.
 
 Sharing / copy-on-write
     Admission walks the pool's radix index: full prompt blocks that match an
@@ -86,6 +90,28 @@ def _pad_seq(a: jax.Array, target: int) -> jax.Array:
     return jnp.pad(a, pad)
 
 
+# Process-wide chunked-prefill fold executables, one per LMConfig (frozen,
+# hashable).  jit buckets specialize per (q_offset, chunk/prefix shape) —
+# the *same* fixed bucket set for every adapter of a config, so spinning up
+# a second adapter (a second gateway slice, a test fixture, an A/B config)
+# reuses the first one's compilations instead of re-tracing them all.
+# tests/test_chunked_prefill.py asserts no steady-state recompiles across
+# two adapters of one config.
+_CHUNK_FOLDS: dict[LMConfig, Callable] = {}
+
+
+def chunk_fold_fn(cfg: LMConfig) -> Callable:
+    """The shared jitted ``engine.prefill_chunked`` step for ``cfg``."""
+    fn = _CHUNK_FOLDS.get(cfg)
+    if fn is None:
+        fn = jax.jit(
+            lambda p, batch, cache, q: engine.prefill_chunked(
+                cfg, p, batch, cache, q),
+            static_argnums=(3,))
+        _CHUNK_FOLDS[cfg] = fn
+    return fn
+
+
 class PagedKVSlotAdapter:
     """Paged KV slots for the attention families (decoder/moe/hybrid/encdec).
 
@@ -99,7 +125,7 @@ class PagedKVSlotAdapter:
                  *, block_size: int = 16, num_blocks: int | None = None,
                  extras: Callable[[], dict] | None = None,
                  chunked: bool = True, inplace: bool = True,
-                 kernel: bool | None = None):
+                 kernel: bool | None = None, mesh=None):
         assert cfg.family != "rwkv", "rwkv has O(1) state; nothing to page"
         self.cfg = cfg
         self.params = params
@@ -112,18 +138,26 @@ class PagedKVSlotAdapter:
         # longer holds, and a family prefill_chunked implements
         self.chunked = (chunked and not cfg.kv_quant and cfg.family in
                         ("decoder", "moe", "hybrid", "encdec"))
-        # in-place decode covers the single-layer-axis attention families;
-        # vlm's grouped cache and the int8 kv_quant path keep the PR 2
-        # gather tick (which also stays available as the parity oracle)
-        self.inplace = (inplace and not cfg.kv_quant and cfg.family in
+        # in-place decode covers the single-layer-axis attention families,
+        # incl. the int8 kv_quant layout (quantized one-row write +
+        # dequantize-in-tick); vlm's grouped cache keeps the PR 2 gather
+        # tick (which also stays available as the parity oracle)
+        self.inplace = (inplace and cfg.family in
                         ("decoder", "moe", "hybrid", "encdec"))
         # kernel=None: Mosaic on TPU, XLA reference elsewhere (running the
-        # Pallas interpreter inside the serving hot loop is for tests only)
+        # Pallas interpreter inside the serving hot loop is for tests
+        # only).  The kernel does not cover the int8 quant layout: the
+        # auto-selection quietly falls back to XLA there, but an
+        # *explicit* kernel=True is a contract ("forces the kernel") and
+        # must fail loudly rather than measure the wrong path.
+        if kernel and cfg.kv_quant:
+            raise ValueError("paged_attn kernel does not support the int8 "
+                             "kv_quant layout; use kernel=None/False")
         if kernel is None:
             from repro.kernels.ops import default_interpret
             kernel = jax.default_backend() == "tpu" and not \
                 default_interpret()
-        self.kernel = bool(kernel)
+        self.kernel = bool(kernel) and not cfg.kv_quant
         if num_blocks is None:
             # dense-equivalent capacity + the reserved trash block
             num_blocks = n_slots * self.nb_max + 1
@@ -170,15 +204,35 @@ class PagedKVSlotAdapter:
         self.peak_blocks_in_use = 0
         self.peak_bytes_saved = 0
 
+        # mesh-partitioned placement (serve/shard/): commit the arena to
+        # the slice mesh with engine.arena_specs (KV heads over "model"
+        # when divisible — the same rule cache_specs applies to the dense
+        # layout) and replicate params + the slot-stacked state across the
+        # slice's devices.  Every jit below then compiles *sharded* —
+        # GSPMD partitions the tick/fold over the slice — while a
+        # single-device slice runs the exact unsharded executable (the
+        # bitwise-parity contract tests/test_sharded.py pins).
+        self.mesh = mesh
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.dist.sharding import mesh_shape_dict
+            specs = engine.arena_specs(cfg, mesh_shape_dict(mesh))
+            self.arena = {
+                key: jax.device_put(a, NamedSharding(mesh, specs[key]))
+                for key, a in self.arena.items()}
+            rep = NamedSharding(mesh, P())
+            self.cache = {key: jax.device_put(a, rep)
+                          for key, a in self.cache.items()}
+            self.params = jax.device_put(params, rep)
+
         self._prefill = jax.jit(lambda p, b: engine.prefill(cfg, p, b))
         # the chunked-prefill fold: one step per prompt block.  jit
         # specializes per (q_offset, chunk/prefix shape) — a fixed bucket
         # set in the steady state, shared by cold and resumed folds (that
-        # sharing is what makes a resume bitwise: same executable)
-        self._chunk_fn = jax.jit(
-            lambda p, batch, cache, q: engine.prefill_chunked(
-                cfg, p, batch, cache, q),
-            static_argnums=(3,))
+        # sharing is what makes a resume bitwise: same executable) and
+        # shared *process-wide* across every adapter of this config
+        # (chunk_fold_fn), so a second gateway slice pays zero retraces
+        self._chunk_fn = chunk_fold_fn(cfg)
         self._gather_prefix = jax.jit(self._gather_prefix_impl)
         if cfg.family == "encdec":
             self._encode = jax.jit(lambda p, e: engine.encode_cross(cfg, p, e))
@@ -191,6 +245,8 @@ class PagedKVSlotAdapter:
                                 donate_argnums=(0,) if dn else ())
         self._copy = jax.jit(self._copy_impl,
                              donate_argnums=(0,) if dn else ())
+        self._write_block = jax.jit(self._write_block_impl,
+                                    donate_argnums=(0,) if dn else ())
         tick = self._tick_inplace_impl if self.inplace else self._tick_impl
         self._decode = jax.jit(tick, donate_argnums=(1, 2) if dn else ())
 
@@ -218,6 +274,17 @@ class PagedKVSlotAdapter:
             ax = self._bax[key]
             idx = (slice(None),) * ax + (dst,)
             out[key] = a.at[idx].set(jnp.take(a, src, axis=ax))
+        return out
+
+    def _write_block_impl(self, arena, dst, contents):
+        """Land externally-sourced block contents (cross-slice migration)
+        at block id ``dst``: ``contents[key]`` is one block in the
+        :meth:`arena_block` layout (the block axis squeezed out)."""
+        out = dict(arena)
+        for key, blk in contents.items():
+            ax = self._bax[key]
+            idx = (slice(None),) * ax + (dst,)
+            out[key] = arena[key].at[idx].set(blk)
         return out
 
     def _gather_prefix_impl(self, arena, bids):

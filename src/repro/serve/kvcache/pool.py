@@ -174,6 +174,26 @@ class BlockPool:
         self.partial_blocks.discard(bid)
 
     # -- prefix matching ---------------------------------------------------
+    def probe_chain(self, keys: list[bytes], pkey: bytes | None = None,
+                    count: bool = True) -> tuple[list[int], int | None]:
+        """Walk precomputed chain keys (see :func:`chain_keys`).
+
+        Returns (full-block hits in prefix order, partial hit or None).
+        Pure probe, no references taken.  The sharded gateway router hashes
+        a prompt once and probes every slice's pool with the same keys —
+        radix-prefix affinity routing without re-hashing per slice.
+        """
+        hits: list[int] = []
+        for key in keys:
+            bid = self.lookup(key, count=count)
+            if bid is None:
+                break
+            hits.append(bid)
+        partial_hit = None
+        if pkey is not None and len(hits) == len(keys):
+            partial_hit = self.lookup(pkey, count=count)
+        return hits, partial_hit
+
     def match_prefix(self, tokens: np.ndarray, count: bool = True
                      ) -> tuple[list[int], int | None, list[bytes],
                                 bytes | None]:
@@ -184,15 +204,7 @@ class BlockPool:
         no references — the caller acquires on admission.
         """
         keys, pkey = chain_keys(tokens, self.block_size)
-        hits: list[int] = []
-        for key in keys:
-            bid = self.lookup(key, count=count)
-            if bid is None:
-                break
-            hits.append(bid)
-        partial_hit = None
-        if pkey is not None and len(hits) == len(keys):
-            partial_hit = self.lookup(pkey, count=count)
+        hits, partial_hit = self.probe_chain(keys, pkey, count=count)
         return hits, partial_hit, keys, pkey
 
     # -- telemetry ---------------------------------------------------------
@@ -204,6 +216,8 @@ class BlockPool:
             "blocks_in_use": int(self.blocks_in_use()),
             "blocks_cached": len(self.lru),
             "blocks_free": len(self.free),
+            "prefix_queries": q,
+            "prefix_hits": self.prefix_hits,
             "prefix_hit_rate": (self.prefix_hits / q) if q else 0.0,
             "evictions": self.evictions,
             "cow_copies": self.cow_copies,

@@ -1,0 +1,22 @@
+"""Sharded paged serving: mesh-partitioned KV arenas + cross-shard routing.
+
+The layer that takes every prior serving subsystem — the micro-batching
+gateway (PR 1), the paged block pool (PR 2), prefix-hit chunked prefill
+(PR 3), and the gather-free in-place decode tick (PR 4) — beyond one
+device.  A serving mesh is factored into slices
+(``dist.sharding.slice_meshes``); each slice owns a full paged serving
+stack committed to its devices (``engine.arena_specs`` placement), and the
+:class:`ShardedPromptGateway` routes admissions across slices by
+radix-prefix affinity, spills by load, and migrates live requests between
+slices with refcounts and prefix sharing preserved
+(:func:`migrate.migrate_slot`).
+
+Verified on CPU via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(tests/test_sharded.py; the ``sharded`` CI job).  See docs/sharding.md.
+"""
+from repro.serve.shard.migrate import MigrationReceipt, migrate_slot
+from repro.serve.shard.router import (GatewaySlice, ShardedPromptGateway,
+                                      build_slices)
+
+__all__ = ["GatewaySlice", "MigrationReceipt", "ShardedPromptGateway",
+           "build_slices", "migrate_slot"]

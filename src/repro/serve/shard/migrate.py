@@ -1,0 +1,155 @@
+"""Cross-slice block migration: move a live request between gateway slices.
+
+A migration rebuilds a request's paged context on the destination slice's
+pool/arena and releases it from the source — the mechanism behind the
+sharded gateway's rebalancing (serve/shard/router.py).  The contract is the
+one the parity suite pins (tests/test_sharded.py):
+
+  exactness     the destination lane decodes the *same bits* the request
+                would have produced had it stayed: every block's contents,
+                the slot-stacked state row (len, conv/ssm, cross-K/V), and
+                the generated-token tail all carry over unchanged, and the
+                destination tick runs the same fixed-shape executable
+                (slices are built with identical ``n_slots``).
+
+  sharing       full prompt blocks re-enter the destination pool's radix
+                index: a chain block the destination already indexes is
+                *referenced* (refcount++, zero bytes moved) instead of
+                copied — prefix sharing survives the move, and the moved
+                request's prompt becomes hit-able for later admissions on
+                the destination.
+
+  copy-on-write a source slot still holding a shared partial block with a
+                pending CoW spare gets the copy *materialized* by the
+                migration (its contents land in a private destination
+                block); the source sibling keeps the original bit-for-bit
+                and the spare is released with the source slot.
+
+Bytes are moved through the host (numpy round-trip) deliberately: that is
+the real cross-host path a multi-machine gateway would pay, and the byte
+count the receipt reports is charged to the request's energy ledger through
+``frontend.migration_energy_nj`` (scaled_report pricing).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.kvcache.pool import (TRASH_BLOCK, PoolExhausted, chain_keys)
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationReceipt:
+    blocks_total: int            # blocks in the request's table
+    blocks_moved: int            # copied through the host
+    blocks_shared: int           # satisfied by the destination radix index
+    bytes_moved: int             # arena block bytes + slot-state row bytes
+
+
+def migrate_slot(src, slot: int, dst, dst_slot: int,
+                 prompt: np.ndarray) -> MigrationReceipt:
+    """Move ``src``'s ``slot`` onto ``dst``'s free ``dst_slot``.
+
+    ``src``/``dst`` are :class:`PagedKVSlotAdapter`-compatible adapters of
+    the same config and block geometry; ``prompt`` is the request's
+    original prompt (the radix chain keys are recomputed from it, so the
+    destination can reference blocks it already indexes).  On
+    ``PoolExhausted`` the destination is rolled back and the source is
+    left untouched.
+    """
+    assert src.cfg == dst.cfg, "migration across configs"
+    assert src.bs == dst.bs and src.nb_max == dst.nb_max, \
+        "migration across block geometries"
+    assert not dst.slot_bids[dst_slot], f"dst slot {dst_slot} not free"
+    prompt = np.asarray(prompt, np.int32)
+    bids = src.slot_bids[slot]
+    assert bids, f"src slot {slot} holds no blocks"
+    n_full = len(prompt) // src.bs
+    keys, _ = chain_keys(prompt, src.bs)
+
+    # destination allocation first (it can fail; the source must survive):
+    # full prompt blocks the destination already indexes are referenced,
+    # everything else — unindexed prompt blocks, the partial prompt block,
+    # decode-written generation blocks — gets a fresh private block
+    dst_bids: list[int] = []
+    fresh: list[tuple[int, bytes | None, int]] = []   # (chain idx, key, bid)
+    shared = 0
+    try:
+        for j in range(len(bids)):
+            key = keys[j] if j < n_full else None
+            hit = dst.pool.lookup(key, count=False) if key is not None \
+                else None
+            if hit is not None:
+                dst_bids.append(dst.pool.acquire(hit))
+                shared += 1
+            else:
+                b = dst.pool.alloc()
+                fresh.append((j, key, b))
+                dst_bids.append(b)
+    except PoolExhausted:
+        for b in dst_bids:
+            dst.pool.release(b)
+        raise
+
+    # block contents cross through the host — the honest multi-machine
+    # path, and what the receipt's byte count means.  Only blocks holding
+    # written rows move: the chain's pre-allocated generation tail
+    # (admission reserves the worst-case chain up front) has no data yet,
+    # and its fresh destination blocks are exactly as garbage-and-masked
+    # as the source ones — copying them would inflate the byte count (and
+    # the energy charged for it) by up to the whole unused budget
+    block_bytes = src._token_bytes * src.bs
+    live = -(-int(src.lens[slot]) // src.bs)
+    moved = 0
+    n_copied = 0
+    for j, key, b in fresh:
+        if j >= live:
+            continue
+        contents = {k: jnp.asarray(np.asarray(src.arena_block(k, bids[j])))
+                    for k in src.seq_keys}
+        dst.arena = dst._write_block(dst.arena, jnp.asarray(b, jnp.int32),
+                                     contents)
+        moved += block_bytes
+        n_copied += 1
+        if key is not None:
+            # full prompt blocks are immutable from here on (the write
+            # position is past them) — index them so later destination
+            # admissions hit this chain
+            dst.pool.register(key, b)
+
+    # the slot-stacked state row: len, hybrid conv/ssm, encdec cross-K/V
+    for k in dst.cache:
+        row = np.asarray(src.cache[k][slot])
+        dst.cache[k] = dst.cache[k].at[dst_slot].set(jnp.asarray(row))
+        moved += row.nbytes
+
+    # hybrid: boundary recurrent-state snapshots ride along for the chain
+    # keys now indexed on the destination (a resume there would need them)
+    src_states = getattr(src, "_boundary_states", None)
+    if src_states:
+        for key in keys[:n_full]:
+            st = src_states.get(key)
+            if st is not None and key in dst.pool.index and \
+                    key not in dst._boundary_states:
+                dst._boundary_states[key] = {
+                    k: jnp.asarray(np.asarray(a)) for k, a in st.items()}
+                dst._boundary_states.move_to_end(key)
+        # same LRU bound the chunked-fold save path enforces — migration
+        # must not grow the side cache past the arena-proportional cap
+        while len(dst._boundary_states) > dst._max_boundary_states:
+            dst._boundary_states.popitem(last=False)
+
+    dst.tables[dst_slot, :] = TRASH_BLOCK
+    dst.tables[dst_slot, :len(dst_bids)] = dst_bids
+    dst.lens[dst_slot] = src.lens[slot]
+    dst.slot_bids[dst_slot] = dst_bids
+    dst._stats[dst_slot] = dict(src._stats[slot])
+    dst._update_peaks()
+
+    # release the source slot (drops its refs; a pending CoW spare — the
+    # copy the migration just materialized — is released with it)
+    src.clear(slot)
+    return MigrationReceipt(blocks_total=len(bids), blocks_moved=n_copied,
+                            blocks_shared=shared, bytes_moved=moved)

@@ -1,0 +1,309 @@
+"""Cross-shard gateway router: one bucket ladder + block pool per mesh slice.
+
+The sharded counterpart of :class:`gateway.PromptGateway`: a serving mesh
+(``launch.mesh.make_serving_mesh``) is factored into per-slice sub-meshes
+(``dist.sharding.slice_meshes``), each slice owning its own
+``PagedKVSlotAdapter`` (arena committed to the slice's devices via
+``engine.arena_specs``) and ``ContinuousBatcher``.  The router owns the
+policy layer above them:
+
+  admission     a prompt is hashed once (``chain_keys``) and every slice's
+                radix index is probed with the same keys.  The request
+                routes to the deepest-prefix slice when that slice can take
+                it now (**affinity**); a saturated affinity slice spills to
+                the least-loaded slice (**affinity_spill** — the prompt is
+                recomputed there, correctness never depends on the hit);
+                no hit anywhere routes least-loaded (**load**).
+
+  rebalance     when a slice has queued work while another sits idle, the
+                router migrates the loaded slice's youngest active request
+                onto the idle slice (serve/shard/migrate.py) — refcounts
+                and radix entries re-established on the destination, bytes
+                moved charged to the request through
+                ``frontend.migration_energy_nj``.
+
+  telemetry     per-request records identical to the single-slice gateway,
+                plus per-slice pool snapshots (``Telemetry.pools``), the
+                routing counters, and migration byte totals.
+
+Parity contract: slices are built with identical ``n_slots``, so every
+slice's decode tick is the same fixed-shape executable — a single-device
+slice produces bit-identical logits to the unsharded adapter, and a
+migrated request's post-move logits are bit-identical to the ones it would
+have produced in place (tests/test_sharded.py pins both).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.dist.sharding import slice_meshes
+from repro.serve.gateway import frontend as fe
+from repro.serve.gateway.gateway import (drive_prompt_loop,
+                                         record_prompt_completion)
+from repro.serve.gateway.slots import (ContinuousBatcher, Request,
+                                       make_adapter)
+from repro.serve.gateway.telemetry import Telemetry
+from repro.serve.kvcache.pool import chain_keys
+from repro.serve.shard.migrate import migrate_slot
+
+
+@dataclasses.dataclass
+class GatewaySlice:
+    """One mesh slice: sub-mesh + paged adapter + its bucket ladder."""
+    idx: int
+    mesh: object
+    adapter: object
+    batcher: ContinuousBatcher
+
+
+def build_slices(cfg, params, mesh, *, n_slots: int, max_len: int,
+                 block_size: int = 16, num_blocks: int | None = None,
+                 extras=None, chunked: bool = True, inplace: bool = True,
+                 kernel: bool | None = None) -> list[GatewaySlice]:
+    """One :class:`GatewaySlice` per sub-mesh of ``mesh``.
+
+    ``mesh`` is a serving mesh (factored via ``slice_meshes``) or an
+    explicit list of per-slice sub-meshes — slices may share devices, so a
+    multi-slice gateway's *policy* layer runs anywhere (tests exercise
+    routing/migration on a single CPU device; the ``sharded`` CI job gives
+    every slice its own forced host device).  ``num_blocks`` is the
+    **per-slice** (per-device-group) block budget — the fixed per-device
+    HBM the acceptance bar holds constant while the aggregate slot count
+    scales with the slice count."""
+    assert cfg.family != "rwkv", \
+        "sharded gateway: rwkv has O(1) state and no block pool to shard"
+    subs = list(mesh) if isinstance(mesh, (list, tuple)) else \
+        slice_meshes(mesh)
+    slices = []
+    for i, sm in enumerate(subs):
+        ad = make_adapter(cfg, params, n_slots=n_slots, max_len=max_len,
+                          extras=extras, paged=True, block_size=block_size,
+                          num_blocks=num_blocks, chunked=chunked,
+                          inplace=inplace, kernel=kernel, mesh=sm)
+        slices.append(GatewaySlice(i, sm, ad, ContinuousBatcher(ad)))
+    return slices
+
+
+class ShardedPromptGateway:
+    """LM front door over N gateway slices (virtual-time event loop)."""
+
+    def __init__(self, slices: list[GatewaySlice], *,
+                 max_new_tokens: int = 16, bytes_per_token: int = 4,
+                 max_queue: int = 64,
+                 energy_spec: fe.FrontendSpec | None = None,
+                 auto_rebalance: bool = True):
+        assert slices, "need at least one slice"
+        assert len({sl.adapter.n_slots for sl in slices}) == 1, \
+            "slices must share n_slots (the bitwise-parity contract)"
+        assert len({(sl.adapter.bs, sl.adapter.nb_max)
+                    for sl in slices}) == 1, \
+            "slices must share block geometry (routing hashes prompts at " \
+            "one block size and migration asserts bs/nb_max equality)"
+        self.slices = slices
+        self.max_new_tokens = max_new_tokens
+        self.bytes_per_token = bytes_per_token
+        self.max_queue = max_queue
+        self.auto_rebalance = auto_rebalance
+        if energy_spec is None:
+            energy_spec = fe.FrontendSpec()
+        self.energy_spec = energy_spec
+        self._token_energy_nj = fe.lm_token_energy_nj(
+            energy_spec, slices[0].adapter.cfg.d_model)
+        self.routing = {"affinity": 0, "affinity_spill": 0, "load": 0}
+        self.migrations = 0
+        self.migration_bytes = 0
+        self.peak_concurrent = 0    # max simultaneous active, fleet-wide
+
+    # -- routing ------------------------------------------------------------
+
+    def _load(self, sl: GatewaySlice) -> tuple[int, int]:
+        """Load key: blocks a slice has committed (in use + queued
+        worst-case demand), then queue depth as the tie-break."""
+        queued = sum(sl.adapter._block_demand(len(r.prompt),
+                                              r.max_new_tokens)
+                     for r in sl.batcher.pending)
+        return (sl.adapter.pool.blocks_in_use() + queued,
+                len(sl.batcher.pending))
+
+    def route(self, prompt: np.ndarray, max_new: int) -> tuple[int, str]:
+        """(slice index, reason): radix-prefix affinity first, then
+        least-loaded.  Pure policy — no references taken, no state
+        mutated except the routing counters."""
+        prompt = np.asarray(prompt, np.int32)
+        keys, pkey = chain_keys(prompt, self.slices[0].adapter.bs)
+        hits = [len(sl.adapter.pool.probe_chain(keys, pkey, count=False)[0])
+                for sl in self.slices]
+        best = int(np.argmax(hits))
+        cand = range(len(self.slices))
+        if hits[best] > 0:
+            sl = self.slices[best]
+            if len(self.slices) == 1 or (
+                    not sl.batcher.pending and
+                    sl.adapter.can_admit(prompt, max_new)):
+                self.routing["affinity"] += 1
+                return best, "affinity"
+            # owning slice saturated: the hit is storage, not correctness —
+            # spill to the least-loaded *other* slice and recompute there
+            # (queueing on the owner would be an affinity route, not a
+            # spill, and would sit behind the very congestion we saw)
+            reason = "affinity_spill"
+            cand = [i for i in cand if i != best]
+        else:
+            reason = "load"
+        order = sorted(cand, key=lambda i: self._load(self.slices[i]))
+        self.routing[reason] += 1
+        return order[0], reason
+
+    def submit(self, req: Request) -> int:
+        """Route + enqueue; returns the slice index chosen."""
+        idx, _ = self.route(req.prompt, req.max_new_tokens)
+        self.slices[idx].batcher.submit(req)
+        return idx
+
+    # -- rebalancing --------------------------------------------------------
+
+    def _free_slot(self, sl: GatewaySlice) -> int | None:
+        for j, r in enumerate(sl.batcher.active):
+            if r is None and not sl.adapter.slot_bids[j]:
+                return j
+        return None
+
+    def migrate(self, src_idx: int, slot: int, dst_idx: int) -> int:
+        """Move the active request in ``(src_idx, slot)`` to ``dst_idx``.
+        Returns bytes moved (also accumulated on the request and the
+        router's totals)."""
+        src, dst = self.slices[src_idx], self.slices[dst_idx]
+        req = src.batcher.active[slot]
+        assert req is not None, f"slice {src_idx} slot {slot} not active"
+        dst_slot = self._free_slot(dst)
+        assert dst_slot is not None, f"slice {dst_idx} has no free slot"
+        receipt = migrate_slot(src.adapter, slot, dst.adapter, dst_slot,
+                               req.prompt)
+        dst.batcher.active[dst_slot] = req
+        dst.batcher.last_token[dst_slot] = src.batcher.last_token[slot]
+        src.batcher.active[slot] = None
+        src.batcher.last_token[slot] = 0
+        req.migrations += 1
+        req.migration_bytes += receipt.bytes_moved
+        self.migrations += 1
+        self.migration_bytes += receipt.bytes_moved
+        return receipt.bytes_moved
+
+    def maybe_rebalance(self) -> int:
+        """One rebalance pass: every slice with queued work sheds its
+        *cheapest* active request — the one holding the fewest blocks, so
+        the move costs the fewest bytes — to an idle slice (free slot +
+        no queue), unblocking the queued admission.  Returns migrations
+        performed."""
+        n = 0
+        for src in self.slices:
+            if not src.batcher.pending:
+                continue
+            # only a genuinely *blocked* queue justifies paying for a
+            # migration: a pending head that will admit into a free slot
+            # this very tick must be left alone
+            head = src.batcher.pending[0]
+            if self._free_slot(src) is not None and \
+                    src.adapter.can_admit(head.prompt,
+                                          head.max_new_tokens):
+                continue
+            victims = [j for j, r in enumerate(src.batcher.active)
+                       if r is not None]
+            if not victims:
+                continue
+            slot = min(victims, key=lambda j: len(src.adapter.slot_bids[j]))
+            for dst in sorted(self.slices, key=self._load):
+                if dst is src or dst.batcher.pending:
+                    continue
+                dst_slot = self._free_slot(dst)
+                req = src.batcher.active[slot]
+                demand = dst.adapter._block_demand(
+                    len(req.prompt), req.max_new_tokens)
+                if dst_slot is None or \
+                        demand > dst.adapter.pool.available():
+                    continue
+                self.migrate(src.idx, slot, dst.idx)
+                n += 1
+                break
+        return n
+
+    # -- the event loop -----------------------------------------------------
+
+    @property
+    def busy(self) -> bool:
+        return any(sl.batcher.busy for sl in self.slices)
+
+    @property
+    def queued(self) -> int:
+        return sum(len(sl.batcher.pending) for sl in self.slices)
+
+    def warmup(self, prompt_lens: tuple[int, ...]) -> None:
+        """Compile every slice's prefill buckets + decode tick up front
+        (the chunk-fold executables are shared process-wide, so slices
+        after the first mostly re-trace nothing)."""
+        for sl in self.slices:
+            for j, n in enumerate(prompt_lens):
+                sl.batcher.submit(Request(
+                    uid=-1 - j, prompt=np.zeros((n,), np.int32),
+                    max_new_tokens=2))
+            sl.batcher.run()
+            sl.batcher.peak_active = 0
+
+    def step(self) -> list[Request]:
+        """Rebalance, then one decode tick on every busy slice."""
+        if self.auto_rebalance:
+            self.maybe_rebalance()
+        finished: list[Request] = []
+        concurrent = 0
+        for sl in self.slices:
+            if sl.batcher.busy:
+                finished.extend(sl.batcher.step())
+                # lanes that actually decoded this round's tick
+                # (batcher.last_active — the same quantity the
+                # single-device peak_active maximizes, so the sharded
+                # acceptance metric is symmetric with its baseline).
+                # Every slice is stepped in the same virtual-time round,
+                # so the sum is true simultaneous fleet concurrency —
+                # per-slice peaks can occur at different times and must
+                # not be added
+                concurrent += sl.batcher.last_active
+        self.peak_concurrent = max(self.peak_concurrent, concurrent)
+        return finished
+
+    def run(self, arrivals, telemetry: Telemetry | None = None) -> Telemetry:
+        tel = telemetry if telemetry is not None else Telemetry()
+        arrivals = [a for a in arrivals if a.kind == "prompt"]
+        arr_t = {a.uid: a.t for a in arrivals}
+        arr_ep = {a.uid: a.endpoint for a in arrivals}
+        drive_prompt_loop(
+            arrivals, tel,
+            busy=lambda: self.busy,
+            queue_depth=lambda: self.queued,
+            max_queue=self.max_queue,
+            submit=lambda a: self.submit(Request(
+                uid=a.uid, prompt=np.asarray(a.payload, np.int32),
+                max_new_tokens=self.max_new_tokens)),
+            step=self.step,
+            # .get defaults: requests submitted directly (not via an
+            # Arrival) can still drain through run([])
+            record=lambda req, now: record_prompt_completion(
+                tel, req, now, arr_t.get(req.uid, 0.0),
+                arr_ep.get(req.uid, -1), self._token_energy_nj,
+                self.bytes_per_token, self.energy_spec))
+        for sl in self.slices:
+            tel.record_pool(sl.adapter.pool_stats(), slice_idx=sl.idx)
+        tel.record_routing({**self.routing, "migrations": self.migrations,
+                            "migration_bytes": self.migration_bytes})
+        return tel
+
+    # -- telemetry ----------------------------------------------------------
+
+    def peak_active_total(self) -> int:
+        """Aggregate concurrency: the fleet-wide maximum of *simultaneous*
+        active slots, tracked per step round.  Deliberately not the sum of
+        per-slice peaks — those can occur at different times and would
+        overstate what the fleet ever ran at once."""
+        return self.peak_concurrent

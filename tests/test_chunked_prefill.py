@@ -258,6 +258,36 @@ def test_fold_steady_state_never_recompiles():
     assert ad._gather_prefix._cache_size() == n_gather
 
 
+def test_fold_buckets_shared_process_wide():
+    """The chunk fold's jit buckets are keyed by config, not by adapter
+    instance: a second adapter of the same config shares the first one's
+    executables and its steady-state admissions compile nothing new."""
+    cfg, params, _ = _setup("stablelm_3b")
+    rng = np.random.default_rng(14)
+    prefix = rng.integers(0, cfg.vocab, size=2 * BS, dtype=np.int32)
+    mk = lambda: np.concatenate(
+        [prefix, rng.integers(0, cfg.vocab, size=3, dtype=np.int32)])
+    ad1 = make_adapter(cfg, params, n_slots=2, max_len=32,
+                       paged=True, block_size=BS)
+    ad2 = make_adapter(cfg, params, n_slots=2, max_len=32,
+                       paged=True, block_size=BS)
+    assert ad1._chunk_fn is ad2._chunk_fn        # one cache per config
+    ad1.insert(0, mk(), max_new=4)               # cold fold buckets
+    ad1.insert(1, mk(), max_new=4)               # resume bucket
+    n_chunk = ad1._chunk_fn._cache_size()
+    # the second adapter admits the same shapes (its own pool starts cold,
+    # so this is a cold fold + a resumed fold there) — zero new buckets
+    ad2.insert(0, mk(), max_new=4)
+    ad2.insert(1, mk(), max_new=4)
+    assert ad2._chunk_fn._cache_size() == n_chunk
+    # a *different* config gets its own fold cache, not a collision
+    cfg2 = dataclasses.replace(cfg, q_chunk=max(cfg.q_chunk // 2, 1))
+    params2, _ = lm.init(jax.random.key(1), cfg2, {})
+    ad3 = make_adapter(cfg2, params2, n_slots=1, max_len=32,
+                       paged=True, block_size=BS)
+    assert ad3._chunk_fn is not ad1._chunk_fn
+
+
 # ==========================================================================
 # Admission pricing is exact (satellite: hit-aware demand).
 # ==========================================================================

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops
-from repro.kernels.paged_attn import paged_decode_attention
+from repro.kernels.paged_attn import paged_decode_attention, scatter_kv_rows
 from repro.nn import attention
 
 
@@ -158,3 +158,56 @@ def test_paged_kernel_ignores_trash_block_contents():
     got = paged_decode_attention(q, ka2, va2, tables2, lens, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(base),
                                rtol=1e-6, atol=1e-6)
+
+
+# ==========================================================================
+# The in-place arena-write kernel (input_output_aliasing): the Pallas leg
+# of the decode tick's row scatter.
+# ==========================================================================
+
+def test_scatter_kv_rows_matches_at_set():
+    """scatter_kv_rows == arena.at[:, wbids, 0, offs].set(rows) on unique
+    (block, row) targets, leaving every unaddressed block bit-untouched —
+    the aliased outputs start as the input buffers, so nothing is
+    functionally rebuilt."""
+    rng = np.random.default_rng(7)
+    L, nb, bs, H, D, S = 3, 6, 4, 2, 8, 4
+    ka = jnp.asarray(rng.normal(size=(L, nb, 1, bs, H, D)), jnp.float32)
+    va = jnp.asarray(rng.normal(size=(L, nb, 1, bs, H, D)), jnp.float32)
+    kr = jnp.asarray(rng.normal(size=(L, S, H, D)), jnp.float32)
+    vr = jnp.asarray(rng.normal(size=(L, S, H, D)), jnp.float32)
+    wbids = np.array([2, 5, 1, 3], np.int32)
+    offs = np.array([1, 3, 0, 2], np.int32)
+    nk, nv = scatter_kv_rows(ka, va, kr, vr, jnp.asarray(wbids),
+                             jnp.asarray(offs), interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(nk), np.asarray(ka.at[:, wbids, 0, offs].set(kr)))
+    np.testing.assert_array_equal(
+        np.asarray(nv), np.asarray(va.at[:, wbids, 0, offs].set(vr)))
+    # untouched blocks (0 and 4) keep their exact bytes
+    for b in (0, 4):
+        np.testing.assert_array_equal(np.asarray(nk[:, b]),
+                                      np.asarray(ka[:, b]))
+
+
+def test_scatter_kv_rows_trash_collisions_stay_in_trash():
+    """Several masked lanes colliding on the trash block must not touch
+    any real block — collisions are absorbed by block 0 in some order,
+    which is garbage under every order."""
+    rng = np.random.default_rng(8)
+    L, nb, bs, H, D, S = 2, 4, 4, 1, 8, 3
+    ka = jnp.asarray(rng.normal(size=(L, nb, 1, bs, H, D)), jnp.float32)
+    va = jnp.asarray(rng.normal(size=(L, nb, 1, bs, H, D)), jnp.float32)
+    kr = jnp.asarray(rng.normal(size=(L, S, H, D)), jnp.float32)
+    vr = jnp.asarray(rng.normal(size=(L, S, H, D)), jnp.float32)
+    wbids = np.array([0, 0, 2], np.int32)       # two lanes trash-routed
+    offs = np.array([1, 1, 3], np.int32)        # ... colliding on one row
+    nk, nv = scatter_kv_rows(ka, va, kr, vr, jnp.asarray(wbids),
+                             jnp.asarray(offs), interpret=True)
+    for b in (1, 3):                            # untouched real blocks
+        np.testing.assert_array_equal(np.asarray(nk[:, b]),
+                                      np.asarray(ka[:, b]))
+    np.testing.assert_array_equal(               # lane 2's real write lands
+        np.asarray(nk[:, 2, 0, 3]), np.asarray(kr[:, 2]))
+    np.testing.assert_array_equal(
+        np.asarray(nv[:, 2, 0, 3]), np.asarray(vr[:, 2]))

@@ -108,6 +108,47 @@ def test_inplace_matches_dense_adapter_bitwise(family):
 
 
 # ==========================================================================
+# int8 kv_quant rides the in-place tick (quantized one-row write +
+# dequantize inside the attention read) — bitwise against the gather tick,
+# which vmaps the dense quant decode_step.
+# ==========================================================================
+
+@pytest.mark.parametrize("family", ["decoder", "hybrid"])
+def test_kvquant_inplace_matches_gather_tick_bitwise(family):
+    """cfg.kv_quant=True: the in-place tick quantizes the new K/V row
+    post-RoPE, writes int8 rows + f32 scale rows, and dequantizes the
+    gathered view in the read — the gather tick's bits, every step, for
+    the quantized arenas too."""
+    cfg, params, extras = _setup(FAMILY_ARCH[family])
+    cfg = dataclasses.replace(cfg, kv_quant=True)
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab, size=s).astype(np.int32)
+               for s in (5, 9)]
+    adapters = [make_adapter(cfg, params, n_slots=2, max_len=24,
+                             extras=extras, paged=True, block_size=BS,
+                             inplace=ip) for ip in (True, False)]
+    assert adapters[0].inplace and not adapters[1].inplace
+    assert not adapters[0].kernel            # quant: XLA reference only
+    assert {"k_scale", "v_scale"} <= set(adapters[0].seq_keys)
+    for slot, p in enumerate(prompts):
+        toks = [ad.insert(slot, p, max_new=8) for ad in adapters]
+        assert toks[0] == toks[1]
+    active = np.asarray([True, True])
+    for step in range(5):
+        forced = rng.integers(0, cfg.vocab, size=2).astype(np.int32)
+        outs = [ad.decode(forced, active) for ad in adapters]
+        np.testing.assert_array_equal(outs[0], outs[1])
+        np.testing.assert_array_equal(np.asarray(adapters[0].last_logits),
+                                      np.asarray(adapters[1].last_logits))
+    inp, gat = adapters
+    assert inp.slot_bids == gat.slot_bids
+    for slot in range(2):
+        a, b = _chain_blocks(inp, slot), _chain_blocks(gat, slot)
+        for key in a:
+            np.testing.assert_array_equal(a[key], b[key], err_msg=str(key))
+
+
+# ==========================================================================
 # Block-boundary cases (satellite): aligned crossing, last writable
 # position, trash-padded short chains.
 # ==========================================================================
