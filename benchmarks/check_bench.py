@@ -64,6 +64,19 @@ SHARDED_TICK_FIELDS = {
 }
 
 SCHEMAS |= {
+    "obs": (
+        {"bench": str, "results": list, "overhead_budget": numbers.Real,
+         "overhead_frac": numbers.Real,
+         "disabled_callbacks": numbers.Integral,
+         "span_energy_conserved": bool,
+         "steady_state_recompiles": numbers.Integral,
+         "recompile_report": dict, "trace_events": numbers.Integral,
+         "trace_valid": bool, "series_points": numbers.Integral,
+         "ttft_p99_ms": numbers.Real, "tpot_p99_ms": numbers.Real},
+        {"path": str, "untraced_wall_s": numbers.Real,
+         "traced_wall_s": numbers.Real, "overhead_frac": numbers.Real,
+         "completed": numbers.Integral, "n_samples": numbers.Integral},
+    ),
     "prefix": (
         {"bench": str, "block_size": numbers.Integral, "results": list,
          "warm_beats_cold": bool},
@@ -176,6 +189,37 @@ def check(path: str) -> list[str]:
                         f"{path}: sharded_tick {sh['n_slices']} slices "
                         f"did not beat one device's concurrency "
                         f"({sh['sharded_slots']} <= {sh['single_slots']})")
+    if bench == "obs" and not errs:
+        # observability must be free when off and near-free when on: zero
+        # obs callbacks with tracing disabled, per-path wall-clock overhead
+        # within the declared budget, and no steady-state recompiles (a
+        # traced run must not perturb the fixed-shape executables)
+        budget = payload["overhead_budget"]
+        if payload["disabled_callbacks"] != 0:
+            errs.append(f"{path}: tracing-disabled run made "
+                        f"{payload['disabled_callbacks']} obs callbacks "
+                        f"(contract is zero)")
+        for r in results:
+            if r["completed"] == 0:
+                errs.append(f"{path}: {r['path']} path completed zero "
+                            f"requests")
+            if r["overhead_frac"] > budget:
+                errs.append(
+                    f"{path}: {r['path']} path tracing overhead "
+                    f"{r['overhead_frac']:.1%} exceeds the "
+                    f"{budget:.0%} budget")
+        if {r["path"] for r in results} != {"frame", "prompt"}:
+            errs.append(f"{path}: need one frame and one prompt result")
+        if not payload["span_energy_conserved"]:
+            errs.append(f"{path}: span energies did not reproduce the "
+                        f"telemetry ledger bitwise")
+        if payload["steady_state_recompiles"] != 0:
+            errs.append(f"{path}: {payload['steady_state_recompiles']} "
+                        f"steady-state recompiles during the traced run")
+        if not payload["trace_valid"] or payload["trace_events"] <= 0:
+            errs.append(f"{path}: exported trace invalid or empty")
+        if payload["series_points"] <= 0:
+            errs.append(f"{path}: no interval metric snapshots sampled")
     if bench == "prefix" and not errs:
         # trend gate: prefix-hit admission must actually get cheaper once a
         # meaningful prefix (>= 2 shared blocks) is resumed

@@ -26,12 +26,15 @@ from repro.serve.gateway.sensors import FleetConfig, SensorFleet  # noqa: E402
 from repro.serve.gateway.slots import ContinuousBatcher, make_adapter  # noqa: E402
 
 
-def run_frames(events, frontend: str, bits: int, duration: float) -> dict:
+def run_frames(events, frontend: str, bits: int, duration: float,
+               tracer=None, metrics=None) -> dict:
     spec = fe.FrontendSpec(mode=frontend, bits=bits)
     gw = MicroBatchGateway(GatewayConfig(), spec)
     gw.warmup()
-    tel = gw.run(events)
+    tel = gw.run(events, tracer=tracer, metrics=metrics)
     tel.assert_conserved()
+    if tracer is not None:
+        tracer.assert_energy_conserved(tel)
     rep = tel.report(duration, kind="frame")
     rep["link_bytes_per_frame"] = fe.link_bytes_per_frame(spec)
     rep["compile_counts"] = gw.compile_counts()
@@ -56,7 +59,21 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="paged KV slots (block pool + prefix sharing); "
                          "no-op for rwkv, which has O(1) state")
+    ap.add_argument("--trace", action="store_true",
+                    help="record per-request lifecycle spans + interval "
+                         "metrics and export a Chrome trace-event JSON "
+                         "(open in chrome://tracing or ui.perfetto.dev)")
+    ap.add_argument("--trace-out", default="trace.json",
+                    help="trace output path (with --trace); interval "
+                         "metrics land next to it as <stem>_metrics.jsonl")
     args = ap.parse_args()
+
+    tracer = metrics = None
+    if args.trace:
+        from repro.serve import obs
+        tracer = obs.Tracer()
+        metrics = obs.MetricsRegistry(interval_s=max(args.duration / 50,
+                                                     1e-3))
 
     prompt_frac = 0.0 if args.no_lm else 0.125
     fleet = SensorFleet(FleetConfig(
@@ -73,9 +90,17 @@ def main():
     # -- frame path: micro-batched hybrid LeNet, sc vs binary offload -------
     frontends = ("sc", "binary") if args.frontend == "both" \
         else (args.frontend,)
+    # one tracer, one serving path: the LM prompt path when it runs (the
+    # full lifecycle — queue/prefill/decode — is the richer trace), else
+    # the first frame frontend
+    trace_lm = bool(args.trace and not args.no_lm and n_prompts)
     reports = {}
-    for f in frontends:
-        reports[f] = run_frames(events, f, args.bits, args.duration)
+    for i, f in enumerate(frontends):
+        traced = tracer if (args.trace and not trace_lm and i == 0) \
+            else None
+        reports[f] = run_frames(events, f, args.bits, args.duration,
+                                tracer=traced,
+                                metrics=metrics if traced else None)
         r = reports[f]
         if not r["completed"]:
             print(f"[{f:6s}] no frames completed "
@@ -112,9 +137,13 @@ def main():
         batcher = ContinuousBatcher(
             make_adapter(cfg, params, n_slots=args.slots, max_len=64,
                          extras=extras, paged=paged, block_size=8))
-        pgw = PromptGateway(batcher, max_new_tokens=8)
+        pgw = PromptGateway(batcher, max_new_tokens=8,
+                            tracer=tracer if trace_lm else None,
+                            metrics=metrics if trace_lm else None)
         pgw.warmup(fleet.cfg.prompt_lens, cfg.vocab)
         tel = pgw.run(events)
+        if trace_lm:
+            tracer.assert_energy_conserved(tel)
         r = tel.report(args.duration, kind="prompt")
         print(f"[lm:{cfg.family}] {r['completed']} prompts  "
               f"{r['throughput_hz']:6.1f} req/s  "
@@ -141,6 +170,24 @@ def main():
                       f"skipped via prefix-hit chunked prefill "
                       f"({r.get('prefill_energy_saved_nj', 0.0):.1f} nJ "
                       f"frontend energy saved)")
+        if "ttft_p50_ms" in r:
+            print(f"[lm:slo] ttft p50 {r['ttft_p50_ms']:.1f} / "
+                  f"p99 {r['ttft_p99_ms']:.1f} ms  "
+                  f"tpot p50 {r['tpot_p50_ms']:.2f} / "
+                  f"p99 {r['tpot_p99_ms']:.2f} ms  "
+                  f"queue-wait p99 "
+                  f"{r.get('queue_wait_p99_ms', 0.0):.1f} ms  "
+                  f"(n={r['slo_n_samples']})")
+
+    # -- trace export: Perfetto-loadable, schema-validated ------------------
+    if args.trace:
+        out = pathlib.Path(args.trace_out)
+        obj = obs.write_chrome_trace(str(out), tracer, metrics)
+        mpath = out.with_name(out.stem + "_metrics.jsonl")
+        n = obs.write_metrics_jsonl(str(mpath), metrics)
+        print(f"[trace] {len(obj['traceEvents'])} events -> {out} "
+              f"(Chrome trace-event JSON, schema-validated; open in "
+              f"ui.perfetto.dev); {n} metric snapshots -> {mpath}")
 
 
 if __name__ == "__main__":

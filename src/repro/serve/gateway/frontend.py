@@ -58,6 +58,15 @@ def link_bytes_per_frame(spec: FrontendSpec) -> int:
     raise ValueError(spec.mode)
 
 
+def link_energy_nj(n_bytes: int) -> float:
+    """Energy to move ``n_bytes`` over the sensor->host link — the exact
+    expression the telemetry ledger charges, factored out so the tracer's
+    per-stage energy attribution (serve/obs/) prices link bytes with the
+    same floats the ledger folds (bitwise conservation, not tolerance)."""
+    from repro.serve.gateway.telemetry import E_LINK_PJ_PER_BYTE
+    return n_bytes * E_LINK_PJ_PER_BYTE * 1e-3
+
+
 def frame_energy_nj(spec: FrontendSpec) -> float:
     """First-layer compute energy/frame from the calibrated Table-3 model,
     projected onto this spec's layer geometry."""

@@ -36,8 +36,7 @@ from repro.models import lenet
 from repro.serve.gateway import frontend as fe
 from repro.serve.gateway.sensors import Arrival
 from repro.serve.gateway.slots import ContinuousBatcher, Request
-from repro.serve.gateway.telemetry import (E_LINK_PJ_PER_BYTE, RequestRecord,
-                                           Telemetry)
+from repro.serve.gateway.telemetry import RequestRecord, Telemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +89,14 @@ class MicroBatchGateway:
                 + self._gateway_fns[bs]._cache_size()
                 for bs in self.cfg.bucket_sizes}
 
+    def jit_fns(self) -> dict[str, object]:
+        """Named jitted entry points, for obs.RecompileDetector.track."""
+        fns: dict[str, object] = {}
+        for bs in self.cfg.bucket_sizes:
+            fns[f"sensor_b{bs}"] = self._sensor_fns[bs]
+            fns[f"gateway_b{bs}"] = self._gateway_fns[bs]
+        return fns
+
     # -- one batch ----------------------------------------------------------
     def _bucket_for(self, n: int) -> int:
         for bs in self.cfg.bucket_sizes:
@@ -112,7 +119,8 @@ class MicroBatchGateway:
 
     # -- the event loop -----------------------------------------------------
     def run(self, arrivals: list[Arrival],
-            telemetry: Telemetry | None = None) -> Telemetry:
+            telemetry: Telemetry | None = None, *,
+            tracer=None, metrics=None) -> Telemetry:
         tel = telemetry if telemetry is not None else Telemetry()
         arrivals = [a for a in arrivals if a.kind == "frame"]
         # payload hits the gateway queue after at-sensor compute + link time
@@ -120,6 +128,16 @@ class MicroBatchGateway:
         queue: deque[Arrival] = deque()
         max_bs = self.cfg.bucket_sizes[-1]
         now, i, n = 0.0, 0, len(arrivals)
+        if metrics is not None:
+            metrics.register("queue_depth", lambda: len(queue))
+        # per-request energy attribution: the same addends, folded in the
+        # same order, that land in each record's energy_nj — request spans
+        # carry this dict so obs can check conservation bitwise
+        parts = {"frontend_nj": self._frame_energy_nj,
+                 "link_nj": fe.link_energy_nj(self._link_bytes)}
+        energy_nj = 0.0
+        for v in parts.values():
+            energy_nj += v
 
         def admit_until(t: float):
             nonlocal i
@@ -127,7 +145,11 @@ class MicroBatchGateway:
                 a = arrivals[i]
                 i += 1
                 if len(queue) >= self.cfg.max_queue:
-                    tel.drop(a.uid, "frame")      # backpressure: reject
+                    tel.drop(a.uid, "frame", "queue_full",
+                             a.t + offset)    # backpressure: reject
+                    if tracer is not None:
+                        tracer.instant("drop", tid=a.uid, t=a.t + offset,
+                                       args={"reason": "queue_full"})
                 else:
                     queue.append(a)
 
@@ -151,20 +173,44 @@ class MicroBatchGateway:
             frames = np.zeros((bs,) + batch[0].payload.shape, np.uint8)
             for j, a in enumerate(batch):
                 frames[j] = a.payload
+            t_serve = now
             preds, svc = self._serve_batch(frames, bs)
             now += svc
-            energy_nj = self._frame_energy_nj \
-                + self._link_bytes * E_LINK_PJ_PER_BYTE * 1e-3
+            if tracer is not None:
+                tracer.clock.advance(now)
+                tracer.begin("batch", pid=1, tid=0, t=t_serve,
+                             args={"bucket": bs, "n": len(batch)})
+                tracer.end("batch", pid=1, tid=0, t=now)
             for j, a in enumerate(batch):
+                if tracer is not None:
+                    # the loop is virtual time, so the lifecycle is traced
+                    # retroactively at completion with exact stamps
+                    tracer.begin("request", tid=a.uid, t=a.t,
+                                 args={"endpoint": a.endpoint})
+                    tracer.begin("sensor_link", tid=a.uid, t=a.t)
+                    tracer.end("sensor_link", tid=a.uid, t=a.t + offset)
+                    tracer.begin("queue_wait", tid=a.uid, t=a.t + offset)
+                    tracer.end("queue_wait", tid=a.uid, t=t_serve)
+                    tracer.begin("serve", tid=a.uid, t=t_serve)
+                    tracer.end("serve", tid=a.uid, t=now)
+                    tracer.end("request", tid=a.uid, t=now,
+                               args={"energy_parts": parts,
+                                     "energy_nj": energy_nj})
                 tel.record(RequestRecord(
                     uid=a.uid, endpoint=a.endpoint, kind="frame",
                     t_arrival=a.t, t_done=now, energy_nj=energy_nj,
                     link_bytes=self._link_bytes, output=int(preds[j])))
+            if metrics is not None:
+                metrics.inc("frames_completed", len(batch))
+                metrics.maybe_sample(now)
+        if metrics is not None and metrics.samples:
+            tel.record_series(metrics.samples)
         return tel
 
 
 def drive_prompt_loop(arrivals, tel: Telemetry, *, busy, queue_depth,
-                      max_queue: int, submit, step, record) -> None:
+                      max_queue: int, submit, step, record,
+                      clock=None, tracer=None, metrics=None) -> None:
     """The virtual-time event loop shared by the one-slice
     :class:`PromptGateway` and the sharded router (serve/shard/): drain
     arrivals into ``submit`` as virtual time reaches them (dropping, with
@@ -172,30 +218,59 @@ def drive_prompt_loop(arrivals, tel: Telemetry, *, busy, queue_depth,
     wall time to the virtual clock, and ``record(req, now)`` every
     completion.  One driver means drop policy and clock accounting cannot
     drift between the two front doors.
+
+    Observability (serve/obs/) rides on three optional hooks: ``clock``
+    (a SimClock the loop advances, so the batcher can stamp dequeue/admit
+    times), ``tracer`` (request/queue_wait spans open at submit; each
+    ``step`` runs inside an ``anchor``/``release`` window so sub-tick
+    spans interpolate between the tick's virtual endpoints), and
+    ``metrics`` (interval snapshots after every tick).  All default to
+    None, and the loop makes zero observability calls then.
     """
+    if tracer is not None and clock is None:
+        clock = tracer.clock
     now, i, n = 0.0, 0, len(arrivals)
     while i < n or busy():
         if not busy():
             now = max(now, arrivals[i].t)
+            if clock is not None:
+                clock.advance(now)
         while i < n and arrivals[i].t <= now:
             a = arrivals[i]
             i += 1
             if queue_depth() >= max_queue:
-                tel.drop(a.uid, "prompt")
+                tel.drop(a.uid, "prompt", "queue_full", now)
+                if tracer is not None:
+                    tracer.instant("drop", tid=a.uid, t=now,
+                                   args={"reason": "queue_full"})
                 continue
+            if tracer is not None:
+                # lifecycle span opens at *arrival* (the request waited
+                # from a.t even if the loop reached it later)
+                tracer.begin("request", tid=a.uid, t=a.t,
+                             args={"endpoint": a.endpoint})
+                tracer.begin("queue_wait", tid=a.uid, t=a.t)
             submit(a)
+        if tracer is not None:
+            tracer.anchor()
         t0 = time.perf_counter()
         finished = step()
         now += time.perf_counter() - t0
+        if clock is not None:
+            clock.advance(now)
+        if tracer is not None:
+            tracer.release()
         for req in finished:
             record(req, now)
+        if metrics is not None:
+            metrics.maybe_sample(now)
 
 
 def record_prompt_completion(tel: Telemetry, req, now: float,
                              t_arrival: float, endpoint: int,
                              token_energy_nj: float, bytes_per_token: int,
-                             energy_spec: "fe.FrontendSpec | None" = None
-                             ) -> None:
+                             energy_spec: "fe.FrontendSpec | None" = None,
+                             tracer=None) -> None:
     """Charge one finished LM request into the ledger — the single pricing
     path shared by :class:`PromptGateway` and the sharded router
     (serve/shard/router.py), so the energy model cannot drift between the
@@ -205,15 +280,25 @@ def record_prompt_completion(tel: Telemetry, req, now: float,
     tokens (the link still carries every token); cross-slice migration
     bytes, when present on the request, are priced through
     :func:`frontend.migration_energy_nj`.
+
+    The stage-attributed parts (frontend / link / migration) are folded
+    left-to-right into ``energy_nj`` and — when a ``tracer`` is attached —
+    stamped onto the closing request span, so the span stream's energy sum
+    reproduces the ledger total bitwise
+    (``obs.Tracer.assert_energy_conserved``).
     """
     n_tokens = len(req.prompt) + len(req.generated)
     processed = n_tokens - req.prefill_tokens_skipped
     link = bytes_per_token * n_tokens
-    energy_nj = token_energy_nj * processed \
-        + link * E_LINK_PJ_PER_BYTE * 1e-3
+    parts = {"frontend_nj": token_energy_nj * processed,
+             "link_nj": fe.link_energy_nj(link)}
     migration_bytes = getattr(req, "migration_bytes", 0)
     if migration_bytes and energy_spec is not None:
-        energy_nj += fe.migration_energy_nj(energy_spec, migration_bytes)
+        parts["migration_nj"] = fe.migration_energy_nj(energy_spec,
+                                                       migration_bytes)
+    energy_nj = 0.0
+    for v in parts.values():
+        energy_nj += v
     tel.record(RequestRecord(
         uid=req.uid, endpoint=endpoint, kind="prompt",
         t_arrival=t_arrival, t_done=now, energy_nj=energy_nj,
@@ -223,7 +308,21 @@ def record_prompt_completion(tel: Telemetry, req, now: float,
         prefill_tokens_skipped=req.prefill_tokens_skipped,
         energy_saved_nj=token_energy_nj * req.prefill_tokens_skipped,
         migration_bytes=migration_bytes,
-        migrations=getattr(req, "migrations", 0)))
+        migrations=getattr(req, "migrations", 0),
+        t_dequeue=getattr(req, "t_dequeue", -1.0),
+        t_admit=getattr(req, "t_admit", -1.0),
+        tokens_out=len(req.generated)))
+    if tracer is not None:
+        if tracer.innermost(tid=req.uid) != "request":
+            # the request's whole active life predates the tracer wiring
+            # (direct submit + step before run): open its span late, at
+            # arrival, so every completed uid still carries a request span
+            # with conserved energy parts
+            tracer.begin("request", tid=req.uid, t=t_arrival,
+                         args={"late_open": True})
+        tracer.end("request", tid=req.uid, t=now,
+                   args={"energy_parts": parts, "energy_nj": energy_nj,
+                         "tokens_out": len(req.generated)})
 
 
 class PromptGateway:
@@ -244,7 +343,8 @@ class PromptGateway:
 
     def __init__(self, batcher: ContinuousBatcher, max_new_tokens: int = 16,
                  bytes_per_token: int = 4, max_queue: int = 64,
-                 energy_spec: fe.FrontendSpec | None = None):
+                 energy_spec: fe.FrontendSpec | None = None,
+                 tracer=None, metrics=None):
         self.batcher = batcher
         self.max_new_tokens = max_new_tokens
         self.bytes_per_token = bytes_per_token
@@ -254,6 +354,16 @@ class PromptGateway:
         self.energy_spec = energy_spec
         self._token_energy_nj = fe.lm_token_energy_nj(
             energy_spec, batcher.adapter.cfg.d_model)
+        # observability (serve/obs/): both default None and are wired into
+        # the batcher only for the duration of run() — warmup stays
+        # untraced and a gateway without a tracer makes zero obs calls
+        self.tracer = tracer
+        self.metrics = metrics
+
+    def jit_fns(self) -> dict[str, object]:
+        """Named jitted entry points, for obs.RecompileDetector.track."""
+        fns = getattr(self.batcher.adapter, "jit_fns", None)
+        return fns() if fns is not None else {}
 
     def warmup(self, prompt_lens: tuple[int, ...], vocab: int = 2) -> None:
         """Drain one dummy request per prompt length through the batcher
@@ -273,20 +383,43 @@ class PromptGateway:
         arrivals = [a for a in arrivals if a.kind == "prompt"]
         arr_t = {a.uid: a.t for a in arrivals}
         arr_ep = {a.uid: a.endpoint for a in arrivals}
-        drive_prompt_loop(
-            arrivals, tel,
-            busy=lambda: self.batcher.busy,
-            queue_depth=lambda: len(self.batcher.pending),
-            max_queue=self.max_queue,
-            submit=lambda a: self.batcher.submit(Request(
-                uid=a.uid, prompt=np.asarray(a.payload, np.int32),
-                max_new_tokens=self.max_new_tokens)),
-            step=self.batcher.step,
-            record=lambda req, now: record_prompt_completion(
-                tel, req, now, arr_t[req.uid], arr_ep[req.uid],
-                self._token_energy_nj, self.bytes_per_token,
-                self.energy_spec))
         pool_stats = getattr(self.batcher.adapter, "pool_stats", None)
+        # SLO timestamps (t_dequeue/t_admit) need a shared virtual clock
+        # even when no tracer is attached
+        from repro.serve.obs import SimClock
+        clock = self.tracer.clock if self.tracer is not None else SimClock()
+        if self.metrics is not None:
+            m = self.metrics
+            m.register("queue_depth", lambda: len(self.batcher.pending))
+            m.register("active_slots", lambda: self.batcher.last_active)
+            pool = getattr(self.batcher.adapter, "pool", None)
+            if pool is not None:
+                for name in pool.gauges():
+                    m.register(name, lambda n=name: pool.gauges()[n])
+        self.batcher.clock = clock
+        self.batcher.tracer = self.tracer
+        self.batcher.adapter.tracer = self.tracer
+        try:
+            drive_prompt_loop(
+                arrivals, tel,
+                busy=lambda: self.batcher.busy,
+                queue_depth=lambda: len(self.batcher.pending),
+                max_queue=self.max_queue,
+                submit=lambda a: self.batcher.submit(Request(
+                    uid=a.uid, prompt=np.asarray(a.payload, np.int32),
+                    max_new_tokens=self.max_new_tokens)),
+                step=self.batcher.step,
+                record=lambda req, now: record_prompt_completion(
+                    tel, req, now, arr_t[req.uid], arr_ep[req.uid],
+                    self._token_energy_nj, self.bytes_per_token,
+                    self.energy_spec, tracer=self.tracer),
+                clock=clock, tracer=self.tracer, metrics=self.metrics)
+        finally:
+            self.batcher.clock = None
+            self.batcher.tracer = None
+            self.batcher.adapter.tracer = None
         if pool_stats is not None:
             tel.record_pool(pool_stats())
+        if self.metrics is not None and self.metrics.samples:
+            tel.record_series(self.metrics.samples)
         return tel

@@ -65,6 +65,12 @@ class Request:
     # cross-slice migration accounting (sharded gateway, serve/shard/)
     migrations: int = 0
     migration_bytes: int = 0
+    # serving SLO timestamps (virtual clock; -1 = untracked): when the
+    # request left the pending queue for a slot, and when its prefill
+    # produced the first token — stamped by the batcher when it has a
+    # clock, copied onto the RequestRecord at completion
+    t_dequeue: float = -1.0
+    t_admit: float = -1.0
 
     @property
     def done(self) -> bool:
@@ -119,6 +125,10 @@ class StateSlotAdapter:
             self.params, self.state, jnp.asarray(tokens, jnp.int32)[:, None],
             jnp.asarray(active, bool))
         return np.asarray(jnp.argmax(logits, -1))
+
+    def jit_fns(self) -> dict[str, object]:
+        """Named jitted entry points, for obs.RecompileDetector.track."""
+        return {"prefill": self._prefill, "decode": self._decode}
 
 
 class KVSlotAdapter:
@@ -187,6 +197,10 @@ class KVSlotAdapter:
                                           jnp.asarray(active, bool))
         self.last_logits = logits[:, 0]     # (n_slots, vocab) — parity tests
         return np.asarray(jnp.argmax(logits[:, 0], -1))
+
+    def jit_fns(self) -> dict[str, object]:
+        """Named jitted entry points, for obs.RecompileDetector.track."""
+        return {"prefill": self._prefill, "decode": self._decode}
 
 
 def make_adapter(cfg: LMConfig, params, n_slots: int, max_len: int = 128,
@@ -257,6 +271,12 @@ class ContinuousBatcher:
         self.last_token = np.zeros((self.n_slots,), np.int32)
         self.peak_active = 0            # max concurrent slots ever decoded
         self.last_active = 0            # slots decoding in the latest step
+        # observability hooks (serve/obs/), wired by the prompt gateways
+        # for the duration of a run; all None by default and every use is
+        # guarded, so a bare batcher makes zero obs calls
+        self.clock = None               # SimClock for t_dequeue/t_admit
+        self.tracer = None              # span recorder
+        self.trace_pid = 1              # engine track (1 + slice_idx)
 
     def submit(self, req: Request):
         if self.adapter.max_len is not None and \
@@ -286,8 +306,30 @@ class ContinuousBatcher:
     def busy(self) -> bool:
         return bool(self.pending) or any(r is not None for r in self.active)
 
+    def _now(self) -> float:
+        """Virtual time for SLO stamps: the tracer's (possibly
+        wall-interpolated) clock when tracing, the bare clock when only SLO
+        stamping is on, -1 (untracked) for a bare batcher."""
+        if self.tracer is not None:
+            return self.tracer.now()
+        if self.clock is not None:
+            return self.clock.t
+        return -1.0
+
+    def _retire_trace(self, req: Request, reason: str) -> None:
+        # the guard heals requests that went active before the tracer was
+        # wired (no decode span to close)
+        if self.tracer is not None and \
+                self.tracer.innermost(tid=req.uid) == "decode":
+            self.tracer.end("decode", tid=req.uid,
+                            args={"tokens": len(req.generated),
+                                  "retire": reason})
+
     def step(self) -> list[Request]:
         """Admit + one decode tick.  Returns requests completed this tick."""
+        tr = self.tracer
+        if tr is not None:
+            tr.begin("tick", pid=self.trace_pid, tid=0)
         finished: list[Request] = []
         stalled = False                 # FIFO: head can't admit -> stop
         for slot in range(self.n_slots):
@@ -296,6 +338,21 @@ class ContinuousBatcher:
                     stalled = True      # blocks free up as requests retire
                     break
                 req = self.pending.popleft()
+                req.t_dequeue = self._now()
+                if tr is not None:
+                    if tr.innermost(tid=req.uid) != "queue_wait":
+                        # submitted before the tracer was wired (direct
+                        # batcher submit, pre-run queueing): open the
+                        # lifecycle late so the rest of it is traced
+                        tr.begin("request", tid=req.uid,
+                                 args={"late_open": True})
+                        tr.begin("queue_wait", tid=req.uid)
+                    tr.end("queue_wait", tid=req.uid)
+                    tr.begin("prefill", tid=req.uid,
+                             args={"prompt_len": len(req.prompt)})
+                    # chunk spans from the paged adapter's fold land on
+                    # this request's track without threading uids through
+                    tr.set_ctx(req.uid)
                 try:
                     tok = self.adapter.insert(
                         slot, np.asarray(req.prompt, np.int32),
@@ -307,13 +364,23 @@ class ContinuousBatcher:
                     # queueing, never to a crashed serving loop)
                     self.pending.appendleft(req)
                     stalled = True
+                    if tr is not None:
+                        tr.end("prefill", tid=req.uid,
+                               args={"admitted": False})
+                        tr.begin("queue_wait", tid=req.uid)
                     break
+                req.t_admit = self._now()
+                if tr is not None:
+                    tr.end("prefill", tid=req.uid,
+                           args={"slot": slot})
                 req.generated.append(tok)
                 if req.done:            # EOS fired on the prefill token
                     self._stamp_stats(slot, req)
                     self.adapter.clear(slot)
                     finished.append(req)
                     continue
+                if tr is not None:
+                    tr.begin("decode", tid=req.uid)
                 self.active[slot] = req
                 self.last_token[slot] = tok
         # a slot whose context filled every KV block cannot take another
@@ -324,6 +391,7 @@ class ContinuousBatcher:
             for slot, req in enumerate(self.active):
                 if req is not None and cap(slot):
                     self._stamp_stats(slot, req)
+                    self._retire_trace(req, "at_capacity")
                     finished.append(req)
                     self.active[slot] = None
                     self.adapter.clear(slot)
@@ -332,6 +400,9 @@ class ContinuousBatcher:
         self.last_active = int(active.sum())
         self.peak_active = max(self.peak_active, self.last_active)
         if not active.any():
+            if tr is not None:
+                tr.end("tick", pid=self.trace_pid, tid=0,
+                       args={"active": 0, "finished": len(finished)})
             return finished
         toks = self.adapter.decode(self.last_token, active)
         for slot, req in enumerate(self.active):
@@ -342,10 +413,15 @@ class ContinuousBatcher:
             self.last_token[slot] = tok
             if req.done:
                 self._stamp_stats(slot, req)
+                self._retire_trace(req, "done")
                 finished.append(req)
                 self.active[slot] = None
                 self.adapter.clear(slot)
                 self.last_token[slot] = 0
+        if tr is not None:
+            tr.end("tick", pid=self.trace_pid, tid=0,
+                   args={"active": self.last_active,
+                         "finished": len(finished)})
         return finished
 
     def run(self) -> list[Request]:

@@ -44,6 +44,12 @@ class RequestRecord:
     # energy_nj (frontend.migration_energy_nj), keeping the ledger conserved
     migration_bytes: int = 0
     migrations: int = 0
+    # serving SLO timestamps (virtual clock; -1 = not tracked): when the
+    # request left the queue for its slot, and when its first token existed
+    # (prefill done) — TTFT/TPOT and the queue-wait breakdown in report()
+    t_dequeue: float = -1.0
+    t_admit: float = -1.0
+    tokens_out: int = 0          # generated tokens (TPOT denominator)
 
     @property
     def latency_s(self) -> float:
@@ -54,13 +60,16 @@ class Telemetry:
     """Append-only request ledger + conserved fleet totals."""
 
     def __init__(self):
+        # (uid, kind, reason, t) rejections; indices 0/1 keep the legacy
+        # (uid, kind) tuple shape for existing consumers
         self.records: list[RequestRecord] = []
-        self.dropped: list[tuple[int, str]] = []   # (uid, kind) rejections
+        self.dropped: list[tuple[int, str, str, float]] = []
         self._fleet_energy_nj = 0.0
         self._fleet_link_bytes = 0
         self.pool: dict = {}          # paged KV pool snapshot (LM path)
         self.pools: dict = {}         # per-slice snapshots (sharded gateway)
         self.routing: dict = {}       # cross-slice routing/migration counts
+        self.series: list[dict] = []  # interval metric snapshots (serve/obs)
 
     # -- charging ----------------------------------------------------------
     def record(self, rec: RequestRecord) -> None:
@@ -68,8 +77,12 @@ class Telemetry:
         self._fleet_energy_nj += rec.energy_nj
         self._fleet_link_bytes += rec.link_bytes
 
-    def drop(self, uid: int, kind: str) -> None:
-        self.dropped.append((uid, kind))
+    def drop(self, uid: int, kind: str, reason: str = "unspecified",
+             t: float = 0.0) -> None:
+        """Rejection accounting: *why* (queue-full / capacity / deadline /
+        pool-exhausted) and *when* (virtual clock), not just who.  The old
+        2-tuple call shape still works — reason/t default."""
+        self.dropped.append((uid, kind, reason, t))
 
     def record_pool(self, stats: dict, slice_idx: int | None = None) -> None:
         """Snapshot the paged KV pool's counters (blocks in use, prefix-hit
@@ -111,6 +124,12 @@ class Telemetry:
         gateway): affinity vs load routes, spills, migrations, bytes."""
         self.routing = dict(counts)
 
+    def record_series(self, samples: list[dict]) -> None:
+        """Attach the interval metric snapshots a run sampled
+        (serve/obs.MetricsRegistry): occupancy/queue-depth curves ride in
+        ``report()`` next to the end-of-run aggregates."""
+        self.series = list(samples)
+
     # -- aggregation -------------------------------------------------------
     @property
     def fleet_energy_nj(self) -> float:
@@ -137,8 +156,18 @@ class Telemetry:
         out = {
             "completed": len(recs),
             "dropped": len(dropped),
-            "throughput_hz": len(recs) / duration_s if duration_s else 0.0,
+            # n_samples rides along so downstream gates (check_bench) can
+            # refuse percentile claims built on tiny samples
+            "n_samples": len(recs),
+            "throughput_hz": len(recs) / duration_s if duration_s > 0
+            else 0.0,
         }
+        if dropped:
+            by_reason: dict[str, int] = {}
+            for d in dropped:
+                r = d[2] if len(d) > 2 else "unspecified"
+                by_reason[r] = by_reason.get(r, 0) + 1
+            out["dropped_by_reason"] = by_reason
         if recs:
             lat = np.asarray([r.latency_s for r in recs])
             energy = np.asarray([r.energy_nj for r in recs])
@@ -164,10 +193,34 @@ class Telemetry:
                 out["migrations"] = mig
                 out["migration_bytes_total"] = \
                     int(sum(r.migration_bytes for r in recs))
+            # serving SLO stats, from requests that tracked the admission
+            # timestamps (LM paths; frame requests have no queue/prefill
+            # split so they simply don't contribute)
+            slo = [r for r in recs if r.t_admit >= 0]
+            if slo:
+                ttft = np.asarray([r.t_admit - r.t_arrival for r in slo])
+                tpot = np.asarray([(r.t_done - r.t_admit)
+                                   / max(1, r.tokens_out - 1) for r in slo])
+                out.update(
+                    slo_n_samples=len(slo),
+                    ttft_p50_ms=float(np.percentile(ttft, 50) * 1e3),
+                    ttft_p99_ms=float(np.percentile(ttft, 99) * 1e3),
+                    tpot_p50_ms=float(np.percentile(tpot, 50) * 1e3),
+                    tpot_p99_ms=float(np.percentile(tpot, 99) * 1e3),
+                )
+                qw = [r for r in slo if r.t_dequeue >= 0]
+                if qw:
+                    w = np.asarray([r.t_dequeue - r.t_arrival for r in qw])
+                    out["queue_wait_p50_ms"] = \
+                        float(np.percentile(w, 50) * 1e3)
+                    out["queue_wait_p99_ms"] = \
+                        float(np.percentile(w, 99) * 1e3)
         if self.pool and kind in (None, "prompt"):
             out["pool"] = dict(self.pool)
         if self.pools and kind in (None, "prompt"):
             out["pools"] = {i: dict(st) for i, st in self.pools.items()}
         if self.routing and kind in (None, "prompt"):
             out["routing"] = dict(self.routing)
+        if self.series:
+            out["series"] = list(self.series)
         return out

@@ -180,6 +180,11 @@ class PagedKVSlotAdapter:
         # compute-skip telemetry (prefill_tokens_* in pool_stats)
         self.prefill_tokens_total = 0
         self.prefill_tokens_skipped_total = 0
+        # obs span recorder, wired by the prompt gateways for a run's
+        # duration; every use is guarded so a bare adapter makes zero
+        # obs calls.  The batcher points the tracer's lane context at the
+        # admitting request before insert, so chunk spans land on it.
+        self.tracer = None
 
         # densely slot-stacked non-sequence state (incl. the scalar "len")
         cache0 = engine.init_cache(cfg, 1, self.max_len)
@@ -341,7 +346,13 @@ class PagedKVSlotAdapter:
             c = min(self.bs, P - q)
             batch = {"tokens": jnp.asarray(
                 np.asarray(prompt[q:q + c], np.int32)[None])}
+            if self.tracer is not None:
+                self.tracer.begin("prefill_chunk")
             cache, logits = self._chunk_fn(self.params, batch, cache, q)
+            if self.tracer is not None:
+                self.tracer.end("prefill_chunk",
+                                args={"q0": q, "tokens": c,
+                                      "prefix_hit": False})
             q += c
             if (self.cfg.family == "hybrid" and q % self.bs == 0
                     and q // self.bs <= n_full):
@@ -540,6 +551,12 @@ class PagedKVSlotAdapter:
 
         H = self._resume_blocks(P, hits, keys)
         q0 = H * self.bs
+        if H and self.tracer is not None:
+            # the H prefix-hit chunks are *skipped*, not folded — mark the
+            # resume point so the trace shows where compute was saved
+            self.tracer.instant("prefix_resume",
+                                args={"blocks": H, "tokens_skipped": q0,
+                                      "prefix_hit": True})
         state = None
         if H and self.cfg.family == "hybrid":
             state = self._boundary_states[keys[H - 1]]
@@ -783,6 +800,18 @@ class PagedKVSlotAdapter:
 
     def slot_stats(self, slot: int) -> dict:
         return dict(self._stats[slot])
+
+    def jit_fns(self) -> dict[str, object]:
+        """Named jitted entry points, for obs.RecompileDetector.track.
+        The chunk fold is process-wide (shared across adapters of one
+        config), so its bucket count reflects every adapter's folds."""
+        fns = {"prefill": self._prefill, "chunk_fold": self._chunk_fn,
+               "gather_prefix": self._gather_prefix,
+               "scatter": self._scatter, "copy": self._copy,
+               "write_block": self._write_block, "decode": self._decode}
+        if self.cfg.family == "encdec":
+            fns["encode"] = self._encode
+        return fns
 
     def pool_stats(self) -> dict:
         st = self.pool.stats()

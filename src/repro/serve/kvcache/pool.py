@@ -208,6 +208,17 @@ class BlockPool:
         return hits, partial_hit, keys, pkey
 
     # -- telemetry ---------------------------------------------------------
+    def gauges(self) -> dict:
+        """Instantaneous occupancy gauges for pull-mode interval sampling
+        (serve/obs ``MetricsRegistry.register``) — the cheap subset of
+        :meth:`stats`, read once per snapshot tick."""
+        q = self.prefix_queries
+        return {
+            "pool_blocks_in_use": int(self.blocks_in_use()),
+            "pool_blocks_cached": len(self.lru),
+            "prefix_hit_rate": (self.prefix_hits / q) if q else 0.0,
+        }
+
     def stats(self) -> dict:
         q = self.prefix_queries
         return {

@@ -1,0 +1,34 @@
+"""Serving-wide observability: tracing, metrics, exporters, profiling.
+
+Low-overhead instrumentation for the serving stack (gateway, slot batcher,
+paged KV adapter, sharded router):
+
+  tracer.py     per-request lifecycle spans over the virtual serving clock
+                (arrival -> queue wait -> prefill chunks -> decode ticks ->
+                migration -> completion), each completion carrying a
+                stage-attributed energy breakdown that sums *bitwise* to the
+                conserved telemetry ledger.
+  metrics.py    named counters / gauges / histograms with periodic interval
+                snapshots — occupancy-over-time curves instead of end-only
+                aggregates.
+  export.py     Chrome trace-event (Perfetto-loadable) JSON export, a
+                JSONL metrics dump, and a trace-schema validator.
+  recompile.py  jit-cache-entry accounting per compiled executable; flags
+                steady-state recompiles as a metric.
+
+The contract every instrumented hot path keeps: **disabled tracing costs
+zero Python-level callbacks** — call sites guard on ``tracer is None`` and
+the module-level :func:`callback_count` lets tests pin that the guard
+really short-circuits (tests/test_obs.py).
+"""
+from repro.serve.obs.metrics import MetricsRegistry
+from repro.serve.obs.recompile import RecompileDetector
+from repro.serve.obs.tracer import SimClock, Tracer, callback_count
+from repro.serve.obs.export import (chrome_trace, validate_chrome_trace,
+                                    write_chrome_trace, write_metrics_jsonl)
+
+__all__ = [
+    "MetricsRegistry", "RecompileDetector", "SimClock", "Tracer",
+    "callback_count", "chrome_trace", "validate_chrome_trace",
+    "write_chrome_trace", "write_metrics_jsonl",
+]

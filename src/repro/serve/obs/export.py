@@ -1,0 +1,115 @@
+"""Exporters: Chrome trace-event JSON (Perfetto-loadable) + metrics JSONL.
+
+The trace format is the Chrome trace-event *JSON object format*
+(``{"traceEvents": [...]}``) with complete-duration events (``ph: "X"``),
+instants (``"i"``), counters (``"C"``), and process-name metadata
+(``"M"``) — the subset Perfetto's legacy-trace importer accepts, so
+``chrome://tracing`` and https://ui.perfetto.dev open the file directly.
+Timestamps convert from the tracer's sim-clock seconds to the format's
+microseconds.
+
+:func:`validate_chrome_trace` is the schema gate CI runs over exported
+traces: structural errors (missing fields, bad phases, negative durations,
+non-numeric timestamps) are returned as a list so the pipeline fails
+loudly instead of shipping a trace Perfetto would silently drop events
+from.
+"""
+from __future__ import annotations
+
+import json
+
+_VALID_PHASES = {"X", "i", "C", "M"}
+
+
+def chrome_trace(tracer, metrics=None,
+                 process_names: dict[int, str] | None = None) -> dict:
+    """Assemble the Chrome trace-event object from a finished tracer
+    (and, optionally, a metrics registry whose interval snapshots become
+    counter tracks — occupancy curves right inside the trace UI)."""
+    evs: list[dict] = []
+    pids = set()
+    for e in tracer.events:
+        ev = {"name": e["name"], "ph": e["ph"], "pid": e["pid"],
+              "tid": e["tid"], "ts": e["ts"] * 1e6, "args": e["args"]}
+        if e["ph"] == "X":
+            ev["dur"] = e["dur"] * 1e6
+        if e["ph"] == "i":
+            ev["s"] = e.get("s", "t")
+        evs.append(ev)
+        pids.add(e["pid"])
+    if metrics is not None:
+        for snap in metrics.samples:
+            args = {k: v for k, v in snap.items() if k != "t"}
+            if args:
+                evs.append({"name": "metrics", "ph": "C", "pid": 1,
+                            "tid": 0, "ts": snap["t"] * 1e6, "args": args})
+                pids.add(1)
+    names = {0: "requests", 1: "engine"}
+    if process_names:
+        names.update(process_names)
+    for pid in sorted(pids):
+        evs.append({"name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+                    "ts": 0.0,
+                    "args": {"name": names.get(pid, f"slice{pid - 1}")}})
+    return {"traceEvents": evs, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(path: str, tracer, metrics=None,
+                       process_names: dict[int, str] | None = None) -> dict:
+    """Export + write; returns the trace object (already validated —
+    writing an invalid trace is a bug, not an artifact)."""
+    obj = chrome_trace(tracer, metrics, process_names)
+    errs = validate_chrome_trace(obj)
+    if errs:
+        raise AssertionError("refusing to write invalid trace: "
+                             + "; ".join(errs[:5]))
+    with open(path, "w") as f:
+        json.dump(obj, f)
+    return obj
+
+
+def validate_chrome_trace(obj) -> list[str]:
+    """Structural schema check for the trace-event object format.
+    Returns the (possibly empty) list of violations."""
+    errs: list[str] = []
+    if not isinstance(obj, dict):
+        return ["trace is not a JSON object"]
+    evs = obj.get("traceEvents")
+    if not isinstance(evs, list):
+        return ["missing/invalid 'traceEvents' array"]
+    if not evs:
+        errs.append("empty traceEvents")
+    for i, e in enumerate(evs):
+        where = f"traceEvents[{i}]"
+        if not isinstance(e, dict):
+            errs.append(f"{where}: not an object")
+            continue
+        for field in ("name", "ph", "pid", "tid", "ts"):
+            if field not in e:
+                errs.append(f"{where}: missing '{field}'")
+        ph = e.get("ph")
+        if ph not in _VALID_PHASES:
+            errs.append(f"{where}: unknown phase {ph!r}")
+        if not isinstance(e.get("ts"), (int, float)) or \
+                isinstance(e.get("ts"), bool):
+            errs.append(f"{where}: non-numeric ts {e.get('ts')!r}")
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or isinstance(dur, bool):
+                errs.append(f"{where}: X event missing numeric dur")
+            elif dur < 0:
+                errs.append(f"{where}: negative dur {dur}")
+        if ph == "C" and not isinstance(e.get("args"), dict):
+            errs.append(f"{where}: counter event without args dict")
+        if "args" in e and not isinstance(e["args"], dict):
+            errs.append(f"{where}: args is not an object")
+    return errs
+
+
+def write_metrics_jsonl(path: str, registry) -> int:
+    """One JSON line per interval snapshot (benchmarks/ consume this).
+    Returns the number of lines written."""
+    with open(path, "w") as f:
+        for snap in registry.samples:
+            f.write(json.dumps(snap) + "\n")
+    return len(registry.samples)

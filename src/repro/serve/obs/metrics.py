@@ -1,0 +1,103 @@
+"""Named time-series metrics with periodic interval snapshots.
+
+Replaces end-of-run aggregate dicts with counters, gauges, and histograms
+sampled on a configurable virtual-time tick: the serving loops call
+:meth:`MetricsRegistry.maybe_sample` every iteration, and the registry
+snapshots at most once per ``interval_s`` of sim time — so a run yields
+occupancy-over-time *curves* (pool blocks in use, queue depth, per-slice
+load, migration/spill totals) instead of a single high-water mark.
+
+Three instrument kinds:
+
+  counter    monotone cumulative float (``inc``); snapshots carry the
+             running value, so interval rates are first differences.
+  gauge      instantaneous value; either pushed (``set_gauge``) or pulled —
+             ``register(name, fn)`` samples ``fn()`` at snapshot time,
+             which is how pool occupancy and queue depth are wired without
+             the pool knowing the registry exists.
+  histogram  value stream (``observe``); ``percentiles`` summarizes with
+             the sample count attached (tiny-sample p99s are reported, but
+             ``n`` rides along so gates can demand minimum counts).
+
+Snapshots are plain dicts (``{"t": ..., name: value, ...}``) so they drop
+straight into ``Telemetry.record_series`` / the JSONL exporter.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class MetricsRegistry:
+    """Counters / gauges / histograms + interval snapshot sampler."""
+
+    def __init__(self, interval_s: float = 0.05):
+        assert interval_s > 0, "snapshot interval must be positive"
+        self.interval_s = interval_s
+        self.counters: dict[str, float] = {}
+        self.gauges: dict[str, float] = {}
+        self.hists: dict[str, list[float]] = {}
+        self._sources: dict[str, object] = {}     # pulled gauges: name -> fn
+        self.samples: list[dict] = []
+        self._next_t: float | None = None
+
+    # -- instruments ---------------------------------------------------------
+
+    def inc(self, name: str, v: float = 1.0) -> None:
+        self.counters[name] = self.counters.get(name, 0.0) + v
+
+    def set_gauge(self, name: str, v: float) -> None:
+        self.gauges[name] = v
+
+    def register(self, name: str, fn) -> None:
+        """Pull-mode gauge: ``fn()`` is read at each snapshot."""
+        self._sources[name] = fn
+
+    def observe(self, name: str, v: float) -> None:
+        self.hists.setdefault(name, []).append(float(v))
+
+    # -- sampling ------------------------------------------------------------
+
+    def snapshot(self, t: float) -> dict:
+        """One interval record: sim time + every counter, pushed gauge,
+        and pulled source value."""
+        rec: dict = {"t": t}
+        rec.update(self.counters)
+        rec.update(self.gauges)
+        for name, fn in self._sources.items():
+            rec[name] = fn()
+        self.samples.append(rec)
+        return rec
+
+    def maybe_sample(self, t: float) -> bool:
+        """Snapshot iff ``interval_s`` of sim time has passed since the
+        last snapshot (the first call snapshots immediately, anchoring the
+        series at the run's start).  Returns whether a sample was taken."""
+        if self._next_t is not None and t < self._next_t:
+            return False
+        self.snapshot(t)
+        self._next_t = t + self.interval_s
+        return True
+
+    # -- summaries -----------------------------------------------------------
+
+    def series(self, name: str) -> tuple[list[float], list[float]]:
+        """(t, value) arrays for one metric across the snapshots taken
+        (snapshots missing the metric — taken before it was registered —
+        are skipped)."""
+        ts, vs = [], []
+        for s in self.samples:
+            if name in s:
+                ts.append(s["t"])
+                vs.append(s[name])
+        return ts, vs
+
+    def percentiles(self, name: str, qs=(50, 99)) -> dict:
+        """Histogram summary with the sample count attached — small-n
+        percentiles are noise, and ``n`` lets consumers gate on it."""
+        vals = self.hists.get(name, [])
+        out = {"n": len(vals)}
+        if vals:
+            a = np.asarray(vals)
+            for q in qs:
+                out[f"p{q}"] = float(np.percentile(a, q))
+        return out

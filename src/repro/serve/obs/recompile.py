@@ -1,0 +1,73 @@
+"""Recompile detection: jit cache entries per compiled executable.
+
+The serving stack's steady-state contract is *no recompiles*: every hot
+path runs fixed-shape executables compiled at warmup (per-bucket gateway
+stages, per-(q_offset, shape) chunk-fold buckets, one decode tick per
+adapter).  A shape leak — a stray Python int becoming a traced dimension, a
+new padding bucket sneaking in — shows up as silent multi-second stalls
+under load.  This detector turns it into a metric:
+
+    det = RecompileDetector()
+    det.track("gateway", gw.jit_fns())        # anything with _cache_size()
+    gw.warmup(...); det.snapshot()            # steady state begins here
+    gw.run(traffic)
+    det.steady_state_recompiles()             # 0, or the leak count
+
+``jit_fns()`` surfaces are provided by the slot adapters, the
+micro-batch gateway, and the prompt gateways; per-executable counts (and
+the post-snapshot deltas) go into BENCH_obs.json, where check_bench gates
+them at zero.
+"""
+from __future__ import annotations
+
+
+class RecompileDetector:
+    """Tracks named jitted callables and diffs their cache-entry counts
+    against a steady-state baseline snapshot."""
+
+    def __init__(self):
+        self._fns: dict[str, object] = {}
+        self._baseline: dict[str, int] | None = None
+
+    def track(self, prefix: str, fns: dict[str, object]) -> None:
+        """Register named jitted callables (anything exposing
+        ``_cache_size()``, i.e. ``jax.jit`` wrappers)."""
+        for name, fn in fns.items():
+            assert hasattr(fn, "_cache_size"), \
+                f"{prefix}.{name} is not a jitted callable"
+            self._fns[f"{prefix}.{name}"] = fn
+
+    def counts(self) -> dict[str, int]:
+        """Current jit cache entries per tracked executable."""
+        return {name: fn._cache_size() for name, fn in self._fns.items()}
+
+    def snapshot(self) -> dict[str, int]:
+        """Mark the steady state: compilations after this point count as
+        recompiles."""
+        self._baseline = self.counts()
+        return dict(self._baseline)
+
+    def deltas(self) -> dict[str, int]:
+        """Per-executable cache growth since the snapshot (only growth:
+        caches never shrink, and a negative delta would mean the tracked
+        function was swapped out from under us)."""
+        assert self._baseline is not None, "snapshot() the steady state first"
+        cur = self.counts()
+        return {name: cur[name] - self._baseline.get(name, 0)
+                for name in cur}
+
+    def steady_state_recompiles(self) -> int:
+        """Total compilations since the steady-state snapshot — the metric
+        benches flag (zero in a healthy serving loop)."""
+        return sum(max(0, d) for d in self.deltas().values())
+
+    def report(self) -> dict:
+        """Metric payload: per-executable counts, deltas, and the flag."""
+        deltas = self.deltas()
+        return {
+            "tracked_executables": len(self._fns),
+            "cache_entries": self.counts(),
+            "recompiles_by_fn": {k: v for k, v in deltas.items() if v > 0},
+            "steady_state_recompiles": sum(max(0, d)
+                                           for d in deltas.values()),
+        }

@@ -47,6 +47,13 @@ class MigrationReceipt:
     blocks_shared: int           # satisfied by the destination radix index
     bytes_moved: int             # arena block bytes + slot-state row bytes
 
+    def trace_args(self, src_idx: int, dst_idx: int) -> dict:
+        """Args for the router's ``migrate`` span (serve/obs): where the
+        request moved and what the move actually cost on the wire."""
+        return {"src": src_idx, "dst": dst_idx, "bytes": self.bytes_moved,
+                "blocks_moved": self.blocks_moved,
+                "blocks_shared": self.blocks_shared}
+
 
 def migrate_slot(src, slot: int, dst, dst_slot: int,
                  prompt: np.ndarray) -> MigrationReceipt:

@@ -94,7 +94,8 @@ class ShardedPromptGateway:
                  max_new_tokens: int = 16, bytes_per_token: int = 4,
                  max_queue: int = 64,
                  energy_spec: fe.FrontendSpec | None = None,
-                 auto_rebalance: bool = True):
+                 auto_rebalance: bool = True,
+                 tracer=None, metrics=None):
         assert slices, "need at least one slice"
         assert len({sl.adapter.n_slots for sl in slices}) == 1, \
             "slices must share n_slots (the bitwise-parity contract)"
@@ -116,6 +117,21 @@ class ShardedPromptGateway:
         self.migrations = 0
         self.migration_bytes = 0
         self.peak_concurrent = 0    # max simultaneous active, fleet-wide
+        # observability (serve/obs/): wired into every slice's batcher +
+        # adapter only for the duration of run() — warmup stays untraced,
+        # and without a tracer the fleet makes zero obs calls
+        self.tracer = tracer
+        self.metrics = metrics
+
+    def jit_fns(self) -> dict[str, object]:
+        """Named jitted entry points across every slice, for
+        obs.RecompileDetector.track (slice-prefixed; the chunk-fold
+        executables are process-wide, so they repeat under each prefix)."""
+        fns: dict[str, object] = {}
+        for sl in self.slices:
+            for name, fn in sl.adapter.jit_fns().items():
+                fns[f"slice{sl.idx}.{name}"] = fn
+        return fns
 
     # -- routing ------------------------------------------------------------
 
@@ -180,8 +196,15 @@ class ShardedPromptGateway:
         assert req is not None, f"slice {src_idx} slot {slot} not active"
         dst_slot = self._free_slot(dst)
         assert dst_slot is not None, f"slice {dst_idx} has no free slot"
+        if self.tracer is not None:
+            # child of the request's open decode span — the move happens
+            # mid-generation on the request's own track
+            self.tracer.begin("migrate", tid=req.uid)
         receipt = migrate_slot(src.adapter, slot, dst.adapter, dst_slot,
                                req.prompt)
+        if self.tracer is not None:
+            self.tracer.end("migrate", tid=req.uid,
+                            args=receipt.trace_args(src_idx, dst_idx))
         dst.batcher.active[dst_slot] = req
         dst.batcher.last_token[dst_slot] = src.batcher.last_token[slot]
         src.batcher.active[slot] = None
@@ -278,25 +301,57 @@ class ShardedPromptGateway:
         arrivals = [a for a in arrivals if a.kind == "prompt"]
         arr_t = {a.uid: a.t for a in arrivals}
         arr_ep = {a.uid: a.endpoint for a in arrivals}
-        drive_prompt_loop(
-            arrivals, tel,
-            busy=lambda: self.busy,
-            queue_depth=lambda: self.queued,
-            max_queue=self.max_queue,
-            submit=lambda a: self.submit(Request(
-                uid=a.uid, prompt=np.asarray(a.payload, np.int32),
-                max_new_tokens=self.max_new_tokens)),
-            step=self.step,
-            # .get defaults: requests submitted directly (not via an
-            # Arrival) can still drain through run([])
-            record=lambda req, now: record_prompt_completion(
-                tel, req, now, arr_t.get(req.uid, 0.0),
-                arr_ep.get(req.uid, -1), self._token_energy_nj,
-                self.bytes_per_token, self.energy_spec))
+        # SLO timestamps (t_dequeue/t_admit) need one shared virtual clock
+        # across every slice, tracer or not
+        from repro.serve.obs import SimClock
+        clock = self.tracer.clock if self.tracer is not None else SimClock()
+        if self.metrics is not None:
+            m = self.metrics
+            m.register("queue_depth", lambda: self.queued)
+            m.register("migrations", lambda: self.migrations)
+            m.register("spills", lambda: self.routing["affinity_spill"])
+            for sl in self.slices:
+                m.register(f"slice{sl.idx}_blocks_in_use",
+                           lambda sl=sl:
+                           sl.adapter.pool.gauges()["pool_blocks_in_use"])
+                m.register(f"slice{sl.idx}_queue",
+                           lambda sl=sl: len(sl.batcher.pending))
+                m.register(f"slice{sl.idx}_active",
+                           lambda sl=sl: sl.batcher.last_active)
+        for sl in self.slices:
+            sl.batcher.clock = clock
+            sl.batcher.tracer = self.tracer
+            sl.batcher.trace_pid = 1 + sl.idx       # engine track per slice
+            sl.adapter.tracer = self.tracer
+        try:
+            drive_prompt_loop(
+                arrivals, tel,
+                busy=lambda: self.busy,
+                queue_depth=lambda: self.queued,
+                max_queue=self.max_queue,
+                submit=lambda a: self.submit(Request(
+                    uid=a.uid, prompt=np.asarray(a.payload, np.int32),
+                    max_new_tokens=self.max_new_tokens)),
+                step=self.step,
+                # .get defaults: requests submitted directly (not via an
+                # Arrival) can still drain through run([])
+                record=lambda req, now: record_prompt_completion(
+                    tel, req, now, arr_t.get(req.uid, 0.0),
+                    arr_ep.get(req.uid, -1), self._token_energy_nj,
+                    self.bytes_per_token, self.energy_spec,
+                    tracer=self.tracer),
+                clock=clock, tracer=self.tracer, metrics=self.metrics)
+        finally:
+            for sl in self.slices:
+                sl.batcher.clock = None
+                sl.batcher.tracer = None
+                sl.adapter.tracer = None
         for sl in self.slices:
             tel.record_pool(sl.adapter.pool_stats(), slice_idx=sl.idx)
         tel.record_routing({**self.routing, "migrations": self.migrations,
                             "migration_bytes": self.migration_bytes})
+        if self.metrics is not None and self.metrics.samples:
+            tel.record_series(self.metrics.samples)
         return tel
 
     # -- telemetry ----------------------------------------------------------
