@@ -67,14 +67,21 @@ SCHEMAS |= {
     "obs": (
         {"bench": str, "results": list, "overhead_budget": numbers.Real,
          "overhead_frac": numbers.Real,
+         "slo_overhead_budget": numbers.Real,
+         "slo_overhead_frac": numbers.Real,
          "disabled_callbacks": numbers.Integral,
          "span_energy_conserved": bool,
          "steady_state_recompiles": numbers.Integral,
          "recompile_report": dict, "trace_events": numbers.Integral,
          "trace_valid": bool, "series_points": numbers.Integral,
-         "ttft_p99_ms": numbers.Real, "tpot_p99_ms": numbers.Real},
+         "ttft_p99_ms": numbers.Real, "tpot_p99_ms": numbers.Real,
+         "roofline": dict, "ridge_flops_per_byte": numbers.Real,
+         "stage_energy_conserved": bool, "stage_energy_nj": dict,
+         "openmetrics_valid": bool,
+         "burn_series_points": numbers.Integral, "health": dict},
         {"path": str, "untraced_wall_s": numbers.Real,
          "traced_wall_s": numbers.Real, "overhead_frac": numbers.Real,
+         "slo_wall_s": numbers.Real, "slo_overhead_frac": numbers.Real,
          "completed": numbers.Integral, "n_samples": numbers.Integral},
     ),
     "prefix": (
@@ -195,6 +202,7 @@ def check(path: str) -> list[str]:
         # within the declared budget, and no steady-state recompiles (a
         # traced run must not perturb the fixed-shape executables)
         budget = payload["overhead_budget"]
+        slo_budget = payload["slo_overhead_budget"]
         if payload["disabled_callbacks"] != 0:
             errs.append(f"{path}: tracing-disabled run made "
                         f"{payload['disabled_callbacks']} obs callbacks "
@@ -208,6 +216,12 @@ def check(path: str) -> list[str]:
                     f"{path}: {r['path']} path tracing overhead "
                     f"{r['overhead_frac']:.1%} exceeds the "
                     f"{budget:.0%} budget")
+            if r["slo_overhead_frac"] > slo_budget:
+                errs.append(
+                    f"{path}: {r['path']} path tracing + burn-rate "
+                    f"overhead {r['slo_overhead_frac']:.1%} exceeds the "
+                    f"{slo_budget:.0%} budget (SLO evaluation must add "
+                    f"at most 1% beyond the tracing budget)")
         if {r["path"] for r in results} != {"frame", "prompt"}:
             errs.append(f"{path}: need one frame and one prompt result")
         if not payload["span_energy_conserved"]:
@@ -220,6 +234,29 @@ def check(path: str) -> list[str]:
             errs.append(f"{path}: exported trace invalid or empty")
         if payload["series_points"] <= 0:
             errs.append(f"{path}: no interval metric snapshots sampled")
+        # roofline attribution: the serving geometries have known verdicts
+        # when real XLA cost analysis backed the estimate; a degraded
+        # backend (interpret mode) reports bytes-only/measured-only and
+        # is exempt from the verdict pin but must still be present
+        roofline = payload["roofline"]
+        for stage, want in (("decode", "memory-bound"),
+                            ("chunk_fold", "compute-bound")):
+            entry = roofline.get(stage)
+            if entry is None:
+                errs.append(f"{path}: roofline is missing the "
+                            f"'{stage}' stage")
+            elif entry["source"] == "xla" and entry["verdict"] != want:
+                errs.append(f"{path}: roofline calls {stage} "
+                            f"{entry['verdict']} (want {want} at ridge "
+                            f"{payload['ridge_flops_per_byte']} F/B)")
+        if not payload["stage_energy_conserved"]:
+            errs.append(f"{path}: per-stage attributed energy did not "
+                        f"re-fold to the telemetry ledger bitwise")
+        if not payload["openmetrics_valid"]:
+            errs.append(f"{path}: OpenMetrics exposition failed its "
+                        f"validator")
+        if payload["burn_series_points"] <= 0:
+            errs.append(f"{path}: no burn-rate series columns sampled")
     if bench == "prefix" and not errs:
         # trend gate: prefix-hit admission must actually get cheaper once a
         # meaningful prefix (>= 2 shared blocks) is resumed

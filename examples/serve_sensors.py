@@ -27,11 +27,11 @@ from repro.serve.gateway.slots import ContinuousBatcher, make_adapter  # noqa: E
 
 
 def run_frames(events, frontend: str, bits: int, duration: float,
-               tracer=None, metrics=None) -> dict:
+               tracer=None, metrics=None, slo=None) -> dict:
     spec = fe.FrontendSpec(mode=frontend, bits=bits)
     gw = MicroBatchGateway(GatewayConfig(), spec)
     gw.warmup()
-    tel = gw.run(events, tracer=tracer, metrics=metrics)
+    tel = gw.run(events, tracer=tracer, metrics=metrics, slo=slo)
     tel.assert_conserved()
     if tracer is not None:
         tracer.assert_energy_conserved(tel)
@@ -66,14 +66,33 @@ def main():
     ap.add_argument("--trace-out", default="trace.json",
                     help="trace output path (with --trace); interval "
                          "metrics land next to it as <stem>_metrics.jsonl")
+    ap.add_argument("--slo", action="store_true",
+                    help="attach the SLO burn-rate monitor (SRE multi-window "
+                         "ladder scaled to --duration): prints the run's "
+                         "health verdict and any ok/warn/critical "
+                         "transitions")
+    ap.add_argument("--slo-ttft-ms", type=float, default=200.0,
+                    help="TTFT objective target (with --slo)")
+    ap.add_argument("--slo-queue-ms", type=float, default=100.0,
+                    help="queue-wait objective target (with --slo)")
+    ap.add_argument("--health-out", default=None,
+                    help="write the run's health surface (metrics + SLO burn "
+                         "state) as an OpenMetrics text exposition")
     args = ap.parse_args()
 
-    tracer = metrics = None
-    if args.trace:
+    tracer = metrics = slo_mon = None
+    if args.trace or args.slo or args.health_out:
         from repro.serve import obs
-        tracer = obs.Tracer()
         metrics = obs.MetricsRegistry(interval_s=max(args.duration / 50,
                                                      1e-3))
+    if args.trace:
+        tracer = obs.Tracer()
+    if args.slo:
+        slo_mon = obs.SLOMonitor(
+            obs.SLOPolicy.default(period_s=args.duration,
+                                  ttft_s=args.slo_ttft_ms / 1e3,
+                                  queue_wait_s=args.slo_queue_ms / 1e3),
+            tracer=tracer, metrics=metrics)
 
     prompt_frac = 0.0 if args.no_lm else 0.125
     fleet = SensorFleet(FleetConfig(
@@ -90,17 +109,19 @@ def main():
     # -- frame path: micro-batched hybrid LeNet, sc vs binary offload -------
     frontends = ("sc", "binary") if args.frontend == "both" \
         else (args.frontend,)
-    # one tracer, one serving path: the LM prompt path when it runs (the
-    # full lifecycle — queue/prefill/decode — is the richer trace), else
-    # the first frame frontend
-    trace_lm = bool(args.trace and not args.no_lm and n_prompts)
+    # one obs attachment (tracer/metrics/SLO monitor), one serving path:
+    # the LM prompt path when it runs (the full lifecycle —
+    # queue/prefill/decode — is the richer surface), else the first frame
+    # frontend
+    lm_path = bool(not args.no_lm and n_prompts)
+    trace_lm = bool(args.trace and lm_path)
     reports = {}
     for i, f in enumerate(frontends):
-        traced = tracer if (args.trace and not trace_lm and i == 0) \
-            else None
+        frame_obs = not lm_path and i == 0
         reports[f] = run_frames(events, f, args.bits, args.duration,
-                                tracer=traced,
-                                metrics=metrics if traced else None)
+                                tracer=tracer if frame_obs else None,
+                                metrics=metrics if frame_obs else None,
+                                slo=slo_mon if frame_obs else None)
         r = reports[f]
         if not r["completed"]:
             print(f"[{f:6s}] no frames completed "
@@ -139,7 +160,8 @@ def main():
                          extras=extras, paged=paged, block_size=8))
         pgw = PromptGateway(batcher, max_new_tokens=8,
                             tracer=tracer if trace_lm else None,
-                            metrics=metrics if trace_lm else None)
+                            metrics=metrics,
+                            slo=slo_mon)
         pgw.warmup(fleet.cfg.prompt_lens, cfg.vocab)
         tel = pgw.run(events)
         if trace_lm:
@@ -178,6 +200,21 @@ def main():
                   f"queue-wait p99 "
                   f"{r.get('queue_wait_p99_ms', 0.0):.1f} ms  "
                   f"(n={r['slo_n_samples']})")
+
+    # -- health verdict + OpenMetrics exposition ----------------------------
+    if slo_mon is not None:
+        rep = slo_mon.report()
+        burns = "  ".join(f"burn_{k}={v:.2f}"
+                          for k, v in sorted(rep["burns"].items()))
+        print(f"[health] state={rep['state']}  "
+              f"transitions={len(rep['transitions'])}  {burns}")
+        for tr_ in rep["transitions"]:
+            print(f"[health]   t={tr_['t']:.3f}s {tr_['from']} -> "
+                  f"{tr_['to']} (worst: {tr_['objective']})")
+    if args.health_out:
+        text = obs.write_openmetrics(args.health_out, metrics, slo_mon)
+        print(f"[health] {len(text.splitlines())} OpenMetrics lines "
+              f"(schema-validated) -> {args.health_out}")
 
     # -- trace export: Perfetto-loadable, schema-validated ------------------
     if args.trace:

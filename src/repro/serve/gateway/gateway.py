@@ -97,6 +97,21 @@ class MicroBatchGateway:
             fns[f"gateway_b{bs}"] = self._gateway_fns[bs]
         return fns
 
+    def cost_args(self) -> dict[str, tuple]:
+        """``jit_fns`` paired with representative abstract arguments, for
+        obs.costmodel roofline attribution (``fn.lower(*args)`` — shapes
+        only, nothing executes)."""
+        out: dict[str, tuple] = {}
+        ln = self.spec.lenet
+        for bs in self.cfg.bucket_sizes:
+            x = jax.ShapeDtypeStruct(
+                (bs, ln.image_size, ln.image_size, ln.channels), jnp.uint8)
+            out[f"sensor_b{bs}"] = (self._sensor_fns[bs], (self.params, x))
+            payload = jax.eval_shape(self._sensor_fns[bs], self.params, x)
+            out[f"gateway_b{bs}"] = (self._gateway_fns[bs],
+                                     (self.params, payload))
+        return out
+
     # -- one batch ----------------------------------------------------------
     def _bucket_for(self, n: int) -> int:
         for bs in self.cfg.bucket_sizes:
@@ -120,7 +135,7 @@ class MicroBatchGateway:
     # -- the event loop -----------------------------------------------------
     def run(self, arrivals: list[Arrival],
             telemetry: Telemetry | None = None, *,
-            tracer=None, metrics=None) -> Telemetry:
+            tracer=None, metrics=None, slo=None) -> Telemetry:
         tel = telemetry if telemetry is not None else Telemetry()
         arrivals = [a for a in arrivals if a.kind == "frame"]
         # payload hits the gateway queue after at-sensor compute + link time
@@ -144,7 +159,8 @@ class MicroBatchGateway:
             while i < n and arrivals[i].t + offset <= t:
                 a = arrivals[i]
                 i += 1
-                if len(queue) >= self.cfg.max_queue:
+                rejected = len(queue) >= self.cfg.max_queue
+                if rejected:
                     tel.drop(a.uid, "frame", "queue_full",
                              a.t + offset)    # backpressure: reject
                     if tracer is not None:
@@ -152,6 +168,10 @@ class MicroBatchGateway:
                                        args={"reason": "queue_full"})
                 else:
                     queue.append(a)
+                if slo is not None:
+                    # every admission decision is a drop_rate event; the
+                    # burn engine sees rejections as budget burn
+                    slo.observe_event("drop_rate", a.t + offset, rejected)
 
         while i < n or queue:
             if not queue:
@@ -196,10 +216,15 @@ class MicroBatchGateway:
                     tracer.end("request", tid=a.uid, t=now,
                                args={"energy_parts": parts,
                                      "energy_nj": energy_nj})
-                tel.record(RequestRecord(
+                rec = RequestRecord(
                     uid=a.uid, endpoint=a.endpoint, kind="frame",
                     t_arrival=a.t, t_done=now, energy_nj=energy_nj,
-                    link_bytes=self._link_bytes, output=int(preds[j])))
+                    link_bytes=self._link_bytes, output=int(preds[j]))
+                tel.record(rec)
+                if slo is not None:
+                    slo.observe_record(rec)
+            if slo is not None:
+                slo.evaluate(now)
             if metrics is not None:
                 metrics.inc("frames_completed", len(batch))
                 metrics.maybe_sample(now)
@@ -209,8 +234,9 @@ class MicroBatchGateway:
 
 
 def drive_prompt_loop(arrivals, tel: Telemetry, *, busy, queue_depth,
-                      max_queue: int, submit, step, record,
-                      clock=None, tracer=None, metrics=None) -> None:
+                      max_queue, submit, step, record,
+                      clock=None, tracer=None, metrics=None,
+                      slo=None) -> None:
     """The virtual-time event loop shared by the one-slice
     :class:`PromptGateway` and the sharded router (serve/shard/): drain
     arrivals into ``submit`` as virtual time reaches them (dropping, with
@@ -219,13 +245,20 @@ def drive_prompt_loop(arrivals, tel: Telemetry, *, busy, queue_depth,
     completion.  One driver means drop policy and clock accounting cannot
     drift between the two front doors.
 
-    Observability (serve/obs/) rides on three optional hooks: ``clock``
+    ``max_queue`` may be a callable returning the current bound — the
+    SLO-driven backpressure path shrinks it under critical burn, so the
+    gateway sheds early at admission instead of queueing work it already
+    knows will miss its deadline.
+
+    Observability (serve/obs/) rides on four optional hooks: ``clock``
     (a SimClock the loop advances, so the batcher can stamp dequeue/admit
     times), ``tracer`` (request/queue_wait spans open at submit; each
     ``step`` runs inside an ``anchor``/``release`` window so sub-tick
-    spans interpolate between the tick's virtual endpoints), and
-    ``metrics`` (interval snapshots after every tick).  All default to
-    None, and the loop makes zero observability calls then.
+    spans interpolate between the tick's virtual endpoints), ``metrics``
+    (interval snapshots after every tick), and ``slo`` (admission
+    decisions feed the drop_rate objective; the burn engine evaluates
+    once per tick, next to the metrics sampler).  All default to None,
+    and the loop makes zero observability calls then.
     """
     if tracer is not None and clock is None:
         clock = tracer.clock
@@ -238,7 +271,11 @@ def drive_prompt_loop(arrivals, tel: Telemetry, *, busy, queue_depth,
         while i < n and arrivals[i].t <= now:
             a = arrivals[i]
             i += 1
-            if queue_depth() >= max_queue:
+            mq = max_queue() if callable(max_queue) else max_queue
+            rejected = queue_depth() >= mq
+            if slo is not None:
+                slo.observe_event("drop_rate", now, rejected)
+            if rejected:
                 tel.drop(a.uid, "prompt", "queue_full", now)
                 if tracer is not None:
                     tracer.instant("drop", tid=a.uid, t=now,
@@ -262,6 +299,10 @@ def drive_prompt_loop(arrivals, tel: Telemetry, *, busy, queue_depth,
             tracer.release()
         for req in finished:
             record(req, now)
+        # evaluate before sampling so the burn/state gauges the evaluation
+        # pushes land in this tick's snapshot, not the next one
+        if slo is not None:
+            slo.evaluate(now)
         if metrics is not None:
             metrics.maybe_sample(now)
 
@@ -270,7 +311,7 @@ def record_prompt_completion(tel: Telemetry, req, now: float,
                              t_arrival: float, endpoint: int,
                              token_energy_nj: float, bytes_per_token: int,
                              energy_spec: "fe.FrontendSpec | None" = None,
-                             tracer=None) -> None:
+                             tracer=None, slo=None) -> None:
     """Charge one finished LM request into the ledger — the single pricing
     path shared by :class:`PromptGateway` and the sharded router
     (serve/shard/router.py), so the energy model cannot drift between the
@@ -281,16 +322,24 @@ def record_prompt_completion(tel: Telemetry, req, now: float,
     bytes, when present on the request, are priced through
     :func:`frontend.migration_energy_nj`.
 
-    The stage-attributed parts (frontend / link / migration) are folded
-    left-to-right into ``energy_nj`` and — when a ``tracer`` is attached —
-    stamped onto the closing request span, so the span stream's energy sum
-    reproduces the ledger total bitwise
-    (``obs.Tracer.assert_energy_conserved``).
+    The stage-attributed parts (frontend prefill / frontend decode / link /
+    migration — each an independent product, so the split itself introduces
+    no rounding) are folded left-to-right into ``energy_nj`` and — when a
+    ``tracer`` is attached — stamped onto the closing request span, so the
+    span stream's energy sum reproduces the ledger total bitwise
+    (``obs.Tracer.assert_energy_conserved``) and obs.costmodel can join
+    per-stage nJ against the roofline stages.  An attached ``slo`` monitor
+    observes the completion (TTFT / TPOT / queue-wait) as it is recorded.
     """
     n_tokens = len(req.prompt) + len(req.generated)
     processed = n_tokens - req.prefill_tokens_skipped
     link = bytes_per_token * n_tokens
-    parts = {"frontend_nj": token_energy_nj * processed,
+    # tokens the batched decode tick produced vs tokens the prefill pass
+    # processed (the first generated token comes out of prefill)
+    decode_tok = max(0, len(req.generated) - 1)
+    parts = {"frontend_prefill_nj": token_energy_nj
+             * (processed - decode_tok),
+             "frontend_decode_nj": token_energy_nj * decode_tok,
              "link_nj": fe.link_energy_nj(link)}
     migration_bytes = getattr(req, "migration_bytes", 0)
     if migration_bytes and energy_spec is not None:
@@ -299,7 +348,7 @@ def record_prompt_completion(tel: Telemetry, req, now: float,
     energy_nj = 0.0
     for v in parts.values():
         energy_nj += v
-    tel.record(RequestRecord(
+    rec = RequestRecord(
         uid=req.uid, endpoint=endpoint, kind="prompt",
         t_arrival=t_arrival, t_done=now, energy_nj=energy_nj,
         link_bytes=link, output=req.generated[-1],
@@ -311,7 +360,10 @@ def record_prompt_completion(tel: Telemetry, req, now: float,
         migrations=getattr(req, "migrations", 0),
         t_dequeue=getattr(req, "t_dequeue", -1.0),
         t_admit=getattr(req, "t_admit", -1.0),
-        tokens_out=len(req.generated)))
+        tokens_out=len(req.generated))
+    tel.record(rec)
+    if slo is not None:
+        slo.observe_record(rec)
     if tracer is not None:
         if tracer.innermost(tid=req.uid) != "request":
             # the request's whole active life predates the tracer wiring
@@ -344,7 +396,8 @@ class PromptGateway:
     def __init__(self, batcher: ContinuousBatcher, max_new_tokens: int = 16,
                  bytes_per_token: int = 4, max_queue: int = 64,
                  energy_spec: fe.FrontendSpec | None = None,
-                 tracer=None, metrics=None):
+                 tracer=None, metrics=None, slo=None,
+                 shed_factor: int = 4):
         self.batcher = batcher
         self.max_new_tokens = max_new_tokens
         self.bytes_per_token = bytes_per_token
@@ -354,15 +407,41 @@ class PromptGateway:
         self.energy_spec = energy_spec
         self._token_energy_nj = fe.lm_token_energy_nj(
             energy_spec, batcher.adapter.cfg.d_model)
-        # observability (serve/obs/): both default None and are wired into
+        # observability (serve/obs/): all default None and are wired into
         # the batcher only for the duration of run() — warmup stays
         # untraced and a gateway without a tracer makes zero obs calls
         self.tracer = tracer
         self.metrics = metrics
+        self.slo = slo
+        # SLO-driven backpressure: subscribe to the monitor's pressure
+        # signal; under critical burn the admission bound shrinks by
+        # shed_factor, so overload sheds at the door (cheap, counted)
+        # instead of queueing work that will blow its deadline anyway.
+        # The same hook is where the planned closed-loop bit-width
+        # degradation controller will step endpoints down the stream-length
+        # ladder (ROADMAP).
+        self.shed_factor = shed_factor
+        self._shedding = False
+        if slo is not None:
+            slo.pressure.subscribe(self._on_pressure)
+
+    def _on_pressure(self, event) -> None:
+        self._shedding = event.state == "critical"
+
+    def _admit_bound(self) -> int:
+        if self._shedding:
+            return max(1, self.max_queue // self.shed_factor)
+        return self.max_queue
 
     def jit_fns(self) -> dict[str, object]:
         """Named jitted entry points, for obs.RecompileDetector.track."""
         fns = getattr(self.batcher.adapter, "jit_fns", None)
+        return fns() if fns is not None else {}
+
+    def cost_args(self) -> dict[str, tuple]:
+        """Adapter stages + representative args, for obs.costmodel
+        roofline attribution (see the adapters' ``cost_args``)."""
+        fns = getattr(self.batcher.adapter, "cost_args", None)
         return fns() if fns is not None else {}
 
     def warmup(self, prompt_lens: tuple[int, ...], vocab: int = 2) -> None:
@@ -404,7 +483,7 @@ class PromptGateway:
                 arrivals, tel,
                 busy=lambda: self.batcher.busy,
                 queue_depth=lambda: len(self.batcher.pending),
-                max_queue=self.max_queue,
+                max_queue=self._admit_bound,
                 submit=lambda a: self.batcher.submit(Request(
                     uid=a.uid, prompt=np.asarray(a.payload, np.int32),
                     max_new_tokens=self.max_new_tokens)),
@@ -412,8 +491,9 @@ class PromptGateway:
                 record=lambda req, now: record_prompt_completion(
                     tel, req, now, arr_t[req.uid], arr_ep[req.uid],
                     self._token_energy_nj, self.bytes_per_token,
-                    self.energy_spec, tracer=self.tracer),
-                clock=clock, tracer=self.tracer, metrics=self.metrics)
+                    self.energy_spec, tracer=self.tracer, slo=self.slo),
+                clock=clock, tracer=self.tracer, metrics=self.metrics,
+                slo=self.slo)
         finally:
             self.batcher.clock = None
             self.batcher.tracer = None

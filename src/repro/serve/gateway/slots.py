@@ -130,6 +130,17 @@ class StateSlotAdapter:
         """Named jitted entry points, for obs.RecompileDetector.track."""
         return {"prefill": self._prefill, "decode": self._decode}
 
+    def cost_args(self, prompt_len: int = 8) -> dict[str, tuple]:
+        """``jit_fns`` paired with representative steady-state arguments,
+        for obs.costmodel roofline attribution (``fn.lower(*args)`` —
+        shapes only, nothing executes)."""
+        batch = {"tokens": jnp.zeros((1, prompt_len), jnp.int32)}
+        tokens = jnp.zeros((self.n_slots, 1), jnp.int32)
+        mask = jnp.ones((self.n_slots,), bool)
+        return {"prefill": (self._prefill, (self.params, batch)),
+                "decode": (self._decode,
+                           (self.params, self.state, tokens, mask))}
+
 
 class KVSlotAdapter:
     """KV-slot engine for attention-cache families, per-slot lengths.
@@ -201,6 +212,19 @@ class KVSlotAdapter:
     def jit_fns(self) -> dict[str, object]:
         """Named jitted entry points, for obs.RecompileDetector.track."""
         return {"prefill": self._prefill, "decode": self._decode}
+
+    def cost_args(self, prompt_len: int = 8) -> dict[str, tuple]:
+        """``jit_fns`` paired with representative steady-state arguments,
+        for obs.costmodel roofline attribution (``fn.lower(*args)`` —
+        shapes only, nothing executes)."""
+        batch = {"tokens": jnp.zeros((1, prompt_len), jnp.int32)}
+        if self.extras is not None:
+            batch.update(self.extras())
+        tokens = jnp.zeros((self.n_slots, 1, 1), jnp.int32)
+        mask = jnp.ones((self.n_slots,), bool)
+        return {"prefill": (self._prefill, (self.params, batch)),
+                "decode": (self._decode,
+                           (self.params, self.cache, tokens, mask))}
 
 
 def make_adapter(cfg: LMConfig, params, n_slots: int, max_len: int = 128,

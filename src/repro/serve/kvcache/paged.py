@@ -813,6 +813,29 @@ class PagedKVSlotAdapter:
             fns["encode"] = self._encode
         return fns
 
+    def cost_args(self) -> dict[str, tuple]:
+        """The serving-relevant stages of :meth:`jit_fns` paired with
+        representative steady-state arguments, for obs.costmodel roofline
+        attribution (``fn.lower(*args)`` — shapes only, nothing executes):
+        the in-place decode tick against the live arena, one cold
+        chunk-fold step (the block-size bucket every fold passes through),
+        a one-block prefill, and the CoW/migration block copy."""
+        batch = {"tokens": jnp.zeros((1, self.bs), jnp.int32)}
+        if self.extras is not None:
+            batch.update(self.extras())
+        tokens = jnp.zeros((self.n_slots, 1), jnp.int32)
+        mask = jnp.ones((self.n_slots,), bool)
+        wbids = jnp.zeros((self.n_slots,), jnp.int32)
+        return {
+            "prefill": (self._prefill, (self.params, batch)),
+            "chunk_fold": (self._chunk_fn,
+                           (self.params, batch, self._prefix_cache(0), 0)),
+            "decode": (self._decode,
+                       (self.params, self.arena, self.cache,
+                        jnp.asarray(self.tables), tokens, mask, wbids)),
+            "copy": (self._copy, (self.arena, jnp.int32(0), jnp.int32(1))),
+        }
+
     def pool_stats(self) -> dict:
         st = self.pool.stats()
         live = sum(1 for b in self.slot_bids if b)

@@ -1,4 +1,4 @@
-"""Serving-wide observability: tracing, metrics, exporters, profiling.
+"""Serving-wide observability: tracing, metrics, health verdicts, exporters.
 
 Low-overhead instrumentation for the serving stack (gateway, slot batcher,
 paged KV adapter, sharded router):
@@ -8,27 +8,56 @@ paged KV adapter, sharded router):
                 migration -> completion), each completion carrying a
                 stage-attributed energy breakdown that sums *bitwise* to the
                 conserved telemetry ledger.
-  metrics.py    named counters / gauges / histograms with periodic interval
+  metrics.py    named counters / gauges / histograms (capped reservoir
+                retention, explicit ``n_dropped``) with periodic interval
                 snapshots — occupancy-over-time curves instead of end-only
                 aggregates.
-  export.py     Chrome trace-event (Perfetto-loadable) JSON export, a
-                JSONL metrics dump, and a trace-schema validator.
+  slo.py        SLO policy + Google-SRE multi-window burn-rate engine:
+                ok/warn/critical health state machine over the serving
+                clock, trace instants at transitions, burn-rate series
+                columns, and the subscribable ``PressureSignal`` the
+                gateway backpressure path (and the future bit-width
+                degradation controller) consumes.
+  costmodel.py  per-stage roofline attribution: XLA ``cost_analysis()``
+                FLOPs/bytes over the ``cost_args()`` registries, joined
+                with measured span durations into achieved rates and
+                compute- vs memory-bound verdicts, cross-checked against
+                the energy ledger.
+  export.py     Chrome trace-event (Perfetto-loadable) JSON export with
+                bounded ``max_events``, an incremental JSONL span-stream
+                writer, a JSONL metrics dump, an OpenMetrics text
+                exposition, and structural validators for all of them.
   recompile.py  jit-cache-entry accounting per compiled executable; flags
                 steady-state recompiles as a metric.
 
-The contract every instrumented hot path keeps: **disabled tracing costs
-zero Python-level callbacks** — call sites guard on ``tracer is None`` and
-the module-level :func:`callback_count` lets tests pin that the guard
-really short-circuits (tests/test_obs.py).
+The contract every instrumented hot path keeps: **disabled observability
+costs zero Python-level callbacks** — call sites guard on
+``tracer/slo is None`` and the module-level :func:`callback_count` (which
+every obs entry point charges, SLO and costmodel included) lets tests pin
+that the guards really short-circuit (tests/test_obs.py, tests/test_slo.py).
 """
 from repro.serve.obs.metrics import MetricsRegistry
 from repro.serve.obs.recompile import RecompileDetector
-from repro.serve.obs.tracer import SimClock, Tracer, callback_count
-from repro.serve.obs.export import (chrome_trace, validate_chrome_trace,
-                                    write_chrome_trace, write_metrics_jsonl)
+from repro.serve.obs.tracer import (ENGINE_PID, REQUESTS_PID, SimClock,
+                                    Tracer, callback_count)
+from repro.serve.obs.slo import (BurnWindow, PressureEvent, PressureSignal,
+                                 SLObjective, SLOMonitor, SLOPolicy)
+from repro.serve.obs.costmodel import (DEFAULT_RIDGE, analyze, attribute,
+                                       span_for, stage_energy)
+from repro.serve.obs.export import (SpanStreamWriter, chrome_trace,
+                                    openmetrics_text, read_span_stream,
+                                    validate_chrome_trace,
+                                    validate_openmetrics,
+                                    write_chrome_trace, write_metrics_jsonl,
+                                    write_openmetrics)
 
 __all__ = [
-    "MetricsRegistry", "RecompileDetector", "SimClock", "Tracer",
-    "callback_count", "chrome_trace", "validate_chrome_trace",
-    "write_chrome_trace", "write_metrics_jsonl",
+    "ENGINE_PID", "MetricsRegistry", "RecompileDetector", "REQUESTS_PID",
+    "SimClock", "Tracer", "callback_count",
+    "BurnWindow", "PressureEvent", "PressureSignal", "SLObjective",
+    "SLOMonitor", "SLOPolicy",
+    "DEFAULT_RIDGE", "analyze", "attribute", "span_for", "stage_energy",
+    "SpanStreamWriter", "chrome_trace", "openmetrics_text",
+    "read_span_stream", "validate_chrome_trace", "validate_openmetrics",
+    "write_chrome_trace", "write_metrics_jsonl", "write_openmetrics",
 ]

@@ -18,6 +18,14 @@ Three instrument kinds:
   histogram  value stream (``observe``); ``percentiles`` summarizes with
              the sample count attached (tiny-sample p99s are reported, but
              ``n`` rides along so gates can demand minimum counts).
+             Retention is **capped** at ``hist_cap`` observations per
+             histogram: beyond the cap, new values enter a uniform
+             reservoir (Vitter's algorithm R, deterministic rng) so the
+             percentile summary stays an unbiased estimate over the whole
+             stream with bounded memory on long runs.  Truncation is never
+             silent — ``percentiles`` carries ``n`` (everything observed)
+             and ``n_dropped`` (observations no longer retained), and below
+             the cap summaries are exact.
 
 Snapshots are plain dicts (``{"t": ..., name: value, ...}``) so they drop
 straight into ``Telemetry.record_series`` / the JSONL exporter.
@@ -30,15 +38,22 @@ import numpy as np
 class MetricsRegistry:
     """Counters / gauges / histograms + interval snapshot sampler."""
 
-    def __init__(self, interval_s: float = 0.05):
+    def __init__(self, interval_s: float = 0.05, hist_cap: int = 4096,
+                 seed: int = 0):
         assert interval_s > 0, "snapshot interval must be positive"
+        assert hist_cap > 0, "histogram retention cap must be positive"
         self.interval_s = interval_s
+        self.hist_cap = hist_cap
         self.counters: dict[str, float] = {}
         self.gauges: dict[str, float] = {}
         self.hists: dict[str, list[float]] = {}
+        self.hist_counts: dict[str, int] = {}     # everything ever observed
         self._sources: dict[str, object] = {}     # pulled gauges: name -> fn
         self.samples: list[dict] = []
         self._next_t: float | None = None
+        # reservoir replacement draws are deterministic (seeded) so capped
+        # summaries are reproducible run to run
+        self._rng = np.random.default_rng(seed)
 
     # -- instruments ---------------------------------------------------------
 
@@ -53,7 +68,25 @@ class MetricsRegistry:
         self._sources[name] = fn
 
     def observe(self, name: str, v: float) -> None:
-        self.hists.setdefault(name, []).append(float(v))
+        """Record one histogram observation.  The first ``hist_cap`` values
+        are retained exactly; past the cap the retained set becomes a
+        uniform reservoir (each of the ``n`` observations so far kept with
+        probability ``hist_cap / n``), so memory stays bounded on long
+        runs while percentiles remain unbiased over the whole stream."""
+        vals = self.hists.setdefault(name, [])
+        n = self.hist_counts.get(name, 0) + 1
+        self.hist_counts[name] = n
+        if len(vals) < self.hist_cap:
+            vals.append(float(v))
+        else:
+            j = int(self._rng.integers(0, n))     # algorithm R
+            if j < self.hist_cap:
+                vals[j] = float(v)
+
+    def hist_dropped(self, name: str) -> int:
+        """Observations of ``name`` no longer retained under ``hist_cap``
+        (0 while the stream fits — truncation is explicit, not silent)."""
+        return self.hist_counts.get(name, 0) - len(self.hists.get(name, []))
 
     # -- sampling ------------------------------------------------------------
 
@@ -92,10 +125,14 @@ class MetricsRegistry:
         return ts, vs
 
     def percentiles(self, name: str, qs=(50, 99)) -> dict:
-        """Histogram summary with the sample count attached — small-n
-        percentiles are noise, and ``n`` lets consumers gate on it."""
+        """Histogram summary with the sample counts attached — small-n
+        percentiles are noise, and ``n`` lets consumers gate on it.  ``n``
+        counts every observation ever made; ``n_dropped`` is how many of
+        those the retention cap evicted from the reservoir (0 = the
+        summary is exact, >0 = it is a uniform-sample estimate)."""
         vals = self.hists.get(name, [])
-        out = {"n": len(vals)}
+        out = {"n": self.hist_counts.get(name, 0),
+               "n_dropped": self.hist_dropped(name)}
         if vals:
             a = np.asarray(vals)
             for q in qs:

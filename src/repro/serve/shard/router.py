@@ -95,7 +95,8 @@ class ShardedPromptGateway:
                  max_queue: int = 64,
                  energy_spec: fe.FrontendSpec | None = None,
                  auto_rebalance: bool = True,
-                 tracer=None, metrics=None):
+                 tracer=None, metrics=None, slo=None,
+                 shed_factor: int = 4):
         assert slices, "need at least one slice"
         assert len({sl.adapter.n_slots for sl in slices}) == 1, \
             "slices must share n_slots (the bitwise-parity contract)"
@@ -122,6 +123,23 @@ class ShardedPromptGateway:
         # and without a tracer the fleet makes zero obs calls
         self.tracer = tracer
         self.metrics = metrics
+        self.slo = slo
+        # SLO-driven backpressure, same policy as the one-slice gateway:
+        # under critical burn the fleet-wide admission bound shrinks by
+        # shed_factor (see PromptGateway; pressure is the subscription
+        # hook the ROADMAP degradation controller will also consume)
+        self.shed_factor = shed_factor
+        self._shedding = False
+        if slo is not None:
+            slo.pressure.subscribe(self._on_pressure)
+
+    def _on_pressure(self, event) -> None:
+        self._shedding = event.state == "critical"
+
+    def _admit_bound(self) -> int:
+        if self._shedding:
+            return max(1, self.max_queue // self.shed_factor)
+        return self.max_queue
 
     def jit_fns(self) -> dict[str, object]:
         """Named jitted entry points across every slice, for
@@ -132,6 +150,17 @@ class ShardedPromptGateway:
             for name, fn in sl.adapter.jit_fns().items():
                 fns[f"slice{sl.idx}.{name}"] = fn
         return fns
+
+    def cost_args(self) -> dict[str, tuple]:
+        """Slice-prefixed adapter stages + representative args, for
+        obs.costmodel roofline attribution — per-slice copies are distinct
+        executables (each compiled against its own mesh placement), so
+        each is costed under its own prefix."""
+        out: dict[str, tuple] = {}
+        for sl in self.slices:
+            for name, pair in sl.adapter.cost_args().items():
+                out[f"slice{sl.idx}.{name}"] = pair
+        return out
 
     # -- routing ------------------------------------------------------------
 
@@ -328,7 +357,7 @@ class ShardedPromptGateway:
                 arrivals, tel,
                 busy=lambda: self.busy,
                 queue_depth=lambda: self.queued,
-                max_queue=self.max_queue,
+                max_queue=self._admit_bound,
                 submit=lambda a: self.submit(Request(
                     uid=a.uid, prompt=np.asarray(a.payload, np.int32),
                     max_new_tokens=self.max_new_tokens)),
@@ -339,8 +368,9 @@ class ShardedPromptGateway:
                     tel, req, now, arr_t.get(req.uid, 0.0),
                     arr_ep.get(req.uid, -1), self._token_energy_nj,
                     self.bytes_per_token, self.energy_spec,
-                    tracer=self.tracer),
-                clock=clock, tracer=self.tracer, metrics=self.metrics)
+                    tracer=self.tracer, slo=self.slo),
+                clock=clock, tracer=self.tracer, metrics=self.metrics,
+                slo=self.slo)
         finally:
             for sl in self.slices:
                 sl.batcher.clock = None

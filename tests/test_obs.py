@@ -324,11 +324,12 @@ def test_metrics_counters_gauges_sources_and_interval():
 
 def test_metrics_percentiles_carry_sample_count():
     m = obs.MetricsRegistry()
-    assert m.percentiles("lat") == {"n": 0}
+    assert m.percentiles("lat") == {"n": 0, "n_dropped": 0}
     for v in (1.0, 2.0, 3.0):
         m.observe("lat", v)
     p = m.percentiles("lat")
     assert p["n"] == 3 and p["p50"] == 2.0
+    assert p["n_dropped"] == 0      # under the cap: summary is exact
 
 
 # ==========================================================================
