@@ -84,6 +84,16 @@ SCHEMAS |= {
          "slo_wall_s": numbers.Real, "slo_overhead_frac": numbers.Real,
          "completed": numbers.Integral, "n_samples": numbers.Integral},
     ),
+    "disagg": (
+        {"bench": str, "n_devices": numbers.Integral,
+         "n_slices": numbers.Integral, "roles": dict,
+         "n_requests": numbers.Integral, "block_size": numbers.Integral,
+         "results": list, "disagg_beats_colocated": bool},
+        {"mode": str, "completed": numbers.Integral,
+         "tick_p99_ms": numbers.Real, "prefill_tick_p99_ms": numbers.Real,
+         "handoffs": numbers.Integral, "handoff_bytes": numbers.Integral,
+         "routing": dict},
+    ),
     "prefix": (
         {"bench": str, "block_size": numbers.Integral, "results": list,
          "warm_beats_cold": bool},
@@ -257,6 +267,35 @@ def check(path: str) -> list[str]:
                         f"validator")
         if payload["burn_series_points"] <= 0:
             errs.append(f"{path}: no burn-rate series columns sampled")
+    if bench == "disagg" and not errs:
+        # trend gate: at equal device budget, splitting the mesh into
+        # prefill and decode roles must shield decode ticks from the
+        # prefill burst's chunked folds — the JetStream-style argument
+        # disaggregation exists to make.  Handoffs must actually have
+        # carried the traffic (a disagg run where nothing crossed the
+        # prefill->decode boundary proves nothing).
+        by_mode = {r["mode"]: r for r in results}
+        if set(by_mode) != {"colocated", "disagg"}:
+            errs.append(f"{path}: need one colocated and one disagg "
+                        f"result, got {sorted(by_mode)}")
+        else:
+            colo, dis = by_mode["colocated"], by_mode["disagg"]
+            for r in (colo, dis):
+                if r["completed"] != payload["n_requests"]:
+                    errs.append(
+                        f"{path}: {r['mode']} completed {r['completed']} "
+                        f"of {payload['n_requests']} requests")
+            if dis["handoffs"] <= 0 or dis["handoff_bytes"] <= 0:
+                errs.append(f"{path}: disagg run made no prefill->decode "
+                            f"handoffs")
+            if not payload["disagg_beats_colocated"] or \
+                    not 0.0 < dis["tick_p99_ms"] < colo["tick_p99_ms"]:
+                errs.append(
+                    f"{path}: disagg decode tick p99 "
+                    f"({dis['tick_p99_ms']:.3f} ms) did not beat the "
+                    f"colocated all-slice tick p99 "
+                    f"({colo['tick_p99_ms']:.3f} ms) under the prefill "
+                    f"burst")
     if bench == "prefix" and not errs:
         # trend gate: prefix-hit admission must actually get cheaper once a
         # meaningful prefix (>= 2 shared blocks) is resumed

@@ -29,9 +29,21 @@ job does) for a real multi-device comparison; the CI gate requires the
 8-slice aggregate to beat the single device's concurrency and the
 migration to be bitwise.
 
+A fourth series, ``disagg`` (``--disagg``), is the PR 8 acceptance run: at
+an equal device budget it drives the same short-decode streams plus a
+long-prompt prefill burst through a colocated 8-slice gateway and through
+the same slices under ``RolePlan.split(2, 6)`` (2 prefill-only slices
+handing finished prompts off to 6 decode-only slices).  The gated quantity
+is per-role p99 tick latency: decode-role ticks structurally never contain
+admission's chunked prefill folds, so disaggregation must beat the
+colocated gateway's all-slice tick p99 under the burst, with every request
+completing in both modes and every disagg request arriving via handoff.
+``--disagg`` writes its own payload (``BENCH_disagg.json`` unless ``--out``
+is given) instead of the kvcache one.
+
 Run:  PYTHONPATH=src python benchmarks/kvcache_bench.py
       [--arch stablelm_3b] [--budget-slots 4] [--requests 32] [--smoke]
-      [--sharded]
+      [--sharded | --disagg]
 """
 import argparse
 import dataclasses
@@ -258,6 +270,82 @@ def sharded_tick_series(cfg, params, *, block_size: int) -> dict:
     return rec
 
 
+def disagg_series(cfg, params, *, block_size: int) -> dict:
+    """Colocated vs disaggregated gateway under a prefill burst.
+
+    Mirrors the tests/test_disagg.py head-of-line bar: 8 single-device
+    slices (re-using devices modulo the host's count; run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a real
+    8-device comparison), 12 short decode-stream prompts plus 8 long
+    burst prompts, equal block budget per slice in both modes.  The
+    colocated gateway's ticks absorb admission's chunked folds; the
+    disaggregated gateway's decode-role ticks never do, which is exactly
+    the between-token latency a decode-bound serving tier sells.
+    """
+    from jax.sharding import Mesh
+    from repro.serve.shard import (RolePlan, ShardedPromptGateway,
+                                   build_slices)
+
+    n_slices, max_len, max_new = 8, 36, 6
+    plan = RolePlan.split(2, 6)
+    rng = np.random.default_rng(61)
+    short = [rng.integers(0, cfg.vocab, size=5, dtype=np.int32)
+             for _ in range(12)]
+    burst = [rng.integers(0, cfg.vocab, size=28, dtype=np.int32)
+             for _ in range(8)]
+    arrivals = [Arrival(uid=i, t=0.0, endpoint=0, kind="prompt", payload=p)
+                for i, p in enumerate(short)]
+    arrivals += [Arrival(uid=100 + i, t=0.0, endpoint=0, kind="prompt",
+                         payload=p) for i, p in enumerate(burst)]
+    devs = jax.devices()
+
+    def run(roles):
+        meshes = [Mesh(np.asarray([devs[i % len(devs)]]), ("model",))
+                  for i in range(n_slices)]
+        slices = build_slices(cfg, params, meshes, n_slots=2,
+                              max_len=max_len, block_size=block_size)
+        gw = ShardedPromptGateway(slices, max_new_tokens=max_new,
+                                  max_queue=4 * len(arrivals), roles=roles,
+                                  auto_rebalance=False)
+        gw.warmup((4, 8))
+        t0 = time.perf_counter()
+        tel = gw.run(list(arrivals))
+        wall = time.perf_counter() - t0
+        return gw, tel.report(max(wall, 1e-9), kind="prompt")
+
+    colo, crep = run(None)
+    dis, drep = run(plan)
+    results = [
+        {"mode": "colocated", "completed": crep["completed"],
+         "tick_p99_ms": colo.tick_latency_ms("all"),
+         "prefill_tick_p99_ms": 0.0,
+         "handoffs": 0, "handoff_bytes": 0,
+         "routing": dict(colo.routing)},
+        {"mode": "disagg", "completed": drep["completed"],
+         "tick_p99_ms": dis.tick_latency_ms("decode"),
+         "prefill_tick_p99_ms": dis.tick_latency_ms("prefill"),
+         "handoffs": dis.handoffs, "handoff_bytes": dis.handoff_bytes,
+         "routing": dict(dis.routing)},
+    ]
+    c_p99, d_p99 = results[0]["tick_p99_ms"], results[1]["tick_p99_ms"]
+    beats = 0.0 < d_p99 < c_p99
+    common.emit("disagg_tick", d_p99 * 1e3,
+                f"{d_p99:.2f}v{c_p99:.2f}ms,"
+                f"{dis.handoffs}handoffs,"
+                f"{'WIN' if beats else 'LOSS'}")
+    return {
+        "bench": "disagg",
+        "n_devices": jax.device_count(),
+        "n_slices": n_slices,
+        "roles": {"prefill": list(plan.prefill),
+                  "decode": list(plan.decode)},
+        "n_requests": len(arrivals),
+        "block_size": block_size,
+        "results": results,
+        "disagg_beats_colocated": beats,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm_3b")
@@ -273,14 +361,23 @@ def main():
                     help="add the sharded_tick series (1 vs N virtual "
                          "devices; run under XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="run the disaggregated prefill/decode series "
+                         "instead of the kvcache bench and write its own "
+                         "payload (BENCH_disagg.json by default); run "
+                         "under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8")
     ap.add_argument("--expect-devices", type=int, default=0,
                     help="fail fast unless jax sees at least this many "
                          "devices (the sharded CI job passes 8 so a "
                          "silently ineffective XLA_FLAGS cannot degrade "
                          "the series to a vacuous 1-slice run)")
-    ap.add_argument("--out", default=str(pathlib.Path(__file__).parent
-                                         / "BENCH_kvcache.json"))
+    ap.add_argument("--out", default="")
     args = ap.parse_args()
+    if not args.out:
+        args.out = str(pathlib.Path(__file__).parent /
+                       ("BENCH_disagg.json" if args.disagg
+                        else "BENCH_kvcache.json"))
     if args.smoke:
         args.requests, args.max_len, args.budget_slots = 8, 32, 2
     if args.expect_devices and jax.device_count() < args.expect_devices:
@@ -292,6 +389,14 @@ def main():
     cfg = dataclasses.replace(configs.smoke_config(args.arch),
                               param_dtype="float32")
     params, _ = lm.init(jax.random.key(0), cfg, {})
+    if args.disagg:
+        payload = disagg_series(cfg, params, block_size=args.block_size)
+        payload["arch"] = args.arch
+        common.emit_json(args.out, payload)
+        if not payload["disagg_beats_colocated"]:
+            print("WARNING: disagg decode ticks did not beat the "
+                  "colocated gateway under the prefill burst")
+        return
     arrivals = make_trace(cfg, args.requests, args.max_len, args.max_new)
     warm_lens = tuple(sorted({len(a.payload) for a in arrivals}))
     budget_bytes = args.budget_slots * kv_bytes_per_slot(cfg, args.max_len)

@@ -51,3 +51,34 @@ def make_serving_mesh(n_slices: int | None = None, model: int = 1):
     assert n_slices * model <= n_dev, \
         f"serving mesh {n_slices}x{model} exceeds {n_dev} devices"
     return _make((n_slices, model), ("data", "model"))
+
+
+def make_disagg_meshes(n_prefill: int, n_decode: int, *,
+                       prefill_model: int = 1, decode_model: int = 1):
+    """Role-partitioned slice meshes for disaggregated prefill/decode.
+
+    Prefill and decode want different partitionings (JetStream's engine
+    API makes the same split): prefill slices are few and model-parallel
+    (compute-bound chunked folds), decode slices are many lanes
+    (memory-bound in-place ticks).  Returns ``(prefill_meshes,
+    decode_meshes)`` — per-slice ``("model",)`` sub-meshes over disjoint
+    device groups, prefill slices taking the leading devices.  Feed the
+    concatenated list to ``shard.build_slices`` and describe the split
+    with a ``shard.RolePlan`` (``RolePlan.split(n_prefill, n_decode)``).
+    """
+    from jax.sharding import Mesh
+    import numpy as np
+    assert n_prefill >= 1 and n_decode >= 1, \
+        "disaggregation needs at least one slice per role"
+    need = n_prefill * prefill_model + n_decode * decode_model
+    devs = jax.devices()
+    assert need <= len(devs), \
+        f"disagg mesh needs {need} devices; have {len(devs)}"
+    out, k = [], 0
+    for n, model in ((n_prefill, prefill_model), (n_decode, decode_model)):
+        role = []
+        for _ in range(n):
+            role.append(Mesh(np.asarray(devs[k:k + model]), ("model",)))
+            k += model
+        out.append(role)
+    return tuple(out)

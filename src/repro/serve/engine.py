@@ -768,8 +768,8 @@ def decode_step_paged(cfg: LMConfig, params, cache, tokens, *, tables, lens,
     new token's single row per layer, scattered once after the layer scan.
 
     cache   slot-stacked non-sequence state, exactly the paged adapter's
-            dense dict: "len" (S,) plus hybrid conv/ssm and encdec xk/xv
-            (leading axis = slot lanes).
+            dense dict: "len" (S,) plus hybrid conv/ssm and encdec/vlm
+            xk/xv (leading axis = slot lanes).
     tokens  (S, 1) int32.
     tables  (S, nb) int32 arena block ids (trash-padded past each chain).
     lens    (S,) int32 per-lane lengths (== cache["len"]; the new token
@@ -796,11 +796,15 @@ def decode_step_paged(cfg: LMConfig, params, cache, tokens, *, tables, lens,
     :func:`decode_step` means this copy is stale, not that paging broke.
     """
     fam = cfg.family
-    assert fam in ("decoder", "moe", "hybrid", "encdec"), \
+    assert fam in ("decoder", "moe", "hybrid", "encdec", "vlm"), \
         f"in-place paged decode: unsupported family {fam}"
-    quant = cfg.kv_quant and fam != "encdec"     # encdec caches full-dtype
+    # encdec/vlm cache full-dtype (init_cache ignores kv_quant there)
+    quant = cfg.kv_quant and fam not in ("encdec", "vlm")
     assert not (quant and kernel), \
         "in-place paged decode: the Pallas kernel does not cover kv_quant"
+    assert not (fam == "vlm" and kernel), \
+        "in-place paged decode: the Pallas kernel does not cover the vlm " \
+        "grouped layout"
     S = tokens.shape[0]
     bs = arena["k"].shape[-3]
     nb = tables.shape[1]
@@ -938,6 +942,48 @@ def decode_step_paged(cfg: LMConfig, params, cache, tokens, *, tables, lens,
                       jnp.moveaxis(cache["xk"], 1, 0)[:, :, 0],
                       jnp.moveaxis(cache["xv"], 1, 0)[:, :, 0]))
 
+    elif fam == "vlm":
+        k_ = cfg.cross_every
+        G = cfg.n_layers // k_
+        self_pp = jax.tree.map(
+            lambda a: a.reshape((G, k_ - 1) + a.shape[1:]), params["blocks"])
+
+        def group(x, inp):
+            self_p, cross_p, kb_g, vb_g, kxb, vxb, xk, xv = inp
+
+            def inner(x, sinp):
+                lp, kb, vb = sinp
+                h, rows_i = attn(lp["attn"], _norm_apply(cfg, lp["ln1"], x),
+                                 kb, vb)
+                x = x + h
+                x = x + _mlp_apply(cfg, lp["mlp"],
+                                   _norm_apply(cfg, lp["ln2"], x))
+                return x, rows_i
+            x, self_rows = jax.lax.scan(inner, x, (self_p, kb_g, vb_g))
+            h, x_rows = attn(cross_p["attn"],
+                             _norm_apply(cfg, cross_p["ln1"], x), kxb, vxb)
+            x = x + h
+            q = _proj(_norm_apply(cfg, cross_p["ln_x"], x),
+                      cross_p["xattn"]["wq"]).reshape(
+                S, 1, cfg.n_heads, cfg.d_head)
+            o = attention.attend_decode(q, xk, xv, xk.shape[1])
+            hx = _proj(o.reshape(S, 1, -1), cross_p["xattn"]["wo"])
+            gate = jnp.tanh(cross_p["gate_attn"].astype(jnp.float32)
+                            ).astype(x.dtype)
+            x = x + gate * hx
+            x = x + _mlp_apply(cfg, cross_p["mlp"],
+                               _norm_apply(cfg, cross_p["ln2"], x))
+            return x, (self_rows, x_rows)
+
+        x, (self_rows, x_rows) = jax.lax.scan(
+            group, x, (self_pp, params["cross_blocks"], arena["k"],
+                       arena["v"], arena["kx_self"], arena["vx_self"],
+                       jnp.moveaxis(cache["xk"], 1, 0)[:, :, 0],
+                       jnp.moveaxis(cache["xv"], 1, 0)[:, :, 0]))
+        # grouped rows: self k/v (G, k-1, S, Hkv, Dh), cross-layer self
+        # k/v (G, S, Hkv, Dh) — ranks the generalized write below absorbs
+        rows = (self_rows[0], self_rows[1], x_rows[0], x_rows[1])
+
     # the tick's only sequence-axis write: one (S, Hkv, Dh) row per layer
     # (+ the f32 scale rows under kv_quant), landed at (block, offset) per
     # lane — trash-routed lanes are absorbed by the reserved block 0.  The
@@ -946,7 +992,10 @@ def decode_step_paged(cfg: LMConfig, params, cache, tokens, *, tables, lens,
     # of functionally rebuilding every layer slice (XLA donation already
     # covers the .at[].set reference leg).
     new_arena = dict(arena)
-    row_keys = ("k", "v", "k_scale", "v_scale") if quant else ("k", "v")
+    if fam == "vlm":
+        row_keys = ("k", "v", "kx_self", "vx_self")
+    else:
+        row_keys = ("k", "v", "k_scale", "v_scale") if quant else ("k", "v")
     if kernel:
         from repro.kernels.paged_attn import scatter_kv_rows
         new_arena["k"], new_arena["v"] = scatter_kv_rows(
@@ -954,7 +1003,12 @@ def decode_step_paged(cfg: LMConfig, params, cache, tokens, *, tables, lens,
             interpret=interpret)
     else:
         for key, r in zip(row_keys, rows):
-            new_arena[key] = arena[key].at[:, wbids, 0, offs].set(r)
+            # leading layer axes vary per key (one for decoder k/v, two
+            # for vlm's grouped self k/v, one for its cross-layer self
+            # k/v); the (block, B=1, offset) triple always sits 5 axes
+            # from the end — see arena_block_axis
+            idx = (slice(None),) * (arena[key].ndim - 5) + (wbids, 0, offs)
+            new_arena[key] = arena[key].at[idx].set(r)
 
     x = _norm_apply(cfg, params["final_norm"], x)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]

@@ -236,7 +236,7 @@ class MicroBatchGateway:
 def drive_prompt_loop(arrivals, tel: Telemetry, *, busy, queue_depth,
                       max_queue, submit, step, record,
                       clock=None, tracer=None, metrics=None,
-                      slo=None) -> None:
+                      slo=None, step_cost=None) -> None:
     """The virtual-time event loop shared by the one-slice
     :class:`PromptGateway` and the sharded router (serve/shard/): drain
     arrivals into ``submit`` as virtual time reaches them (dropping, with
@@ -259,7 +259,19 @@ def drive_prompt_loop(arrivals, tel: Telemetry, *, busy, queue_depth,
     decisions feed the drop_rate objective; the burn engine evaluates
     once per tick, next to the metrics sampler).  All default to None,
     and the loop makes zero observability calls then.
+
+    ``step_cost`` (optional, ``fn(wall_seconds) -> virtual_seconds``)
+    re-prices a tick before it is charged to the clock.  The sharded
+    router uses it to charge *concurrent-slice* time — slices are
+    disjoint device groups that tick simultaneously in a real fleet, so
+    a round costs the slowest slice's tick plus the router's serial
+    overhead, not the sum a single-host simulation measures.  Mutually
+    exclusive with ``tracer``: sub-tick spans interpolate real wall
+    offsets inside each tick, which only stay inside the tick's virtual
+    window under wall accounting (callers pass one or the other).
     """
+    assert step_cost is None or tracer is None, \
+        "step_cost re-pricing and wall-anchored tracing are exclusive"
     if tracer is not None and clock is None:
         clock = tracer.clock
     now, i, n = 0.0, 0, len(arrivals)
@@ -292,7 +304,10 @@ def drive_prompt_loop(arrivals, tel: Telemetry, *, busy, queue_depth,
             tracer.anchor()
         t0 = time.perf_counter()
         finished = step()
-        now += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        if step_cost is not None:
+            dt = step_cost(dt)
+        now += dt
         if clock is not None:
             clock.advance(now)
         if tracer is not None:

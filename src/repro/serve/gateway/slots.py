@@ -349,8 +349,15 @@ class ContinuousBatcher:
                             args={"tokens": len(req.generated),
                                   "retire": reason})
 
-    def step(self) -> list[Request]:
-        """Admit + one decode tick.  Returns requests completed this tick."""
+    def step(self, decode: bool = True) -> list[Request]:
+        """Admit + one decode tick.  Returns requests completed this tick.
+
+        ``decode=False`` is the prefill-role mode of the disaggregated
+        gateway (serve/shard/): admit pending requests (chunked prefill)
+        and retire at-capacity / EOS-at-prefill lanes, but skip the
+        batched decode — admitted lanes keep their prefill token staged in
+        ``last_token`` and wait for the router to hand them off to a
+        decode slice.  The default path is untouched."""
         tr = self.tracer
         if tr is not None:
             tr.begin("tick", pid=self.trace_pid, tid=0)
@@ -427,6 +434,12 @@ class ContinuousBatcher:
             if tr is not None:
                 tr.end("tick", pid=self.trace_pid, tid=0,
                        args={"active": 0, "finished": len(finished)})
+            return finished
+        if not decode:
+            if tr is not None:
+                tr.end("tick", pid=self.trace_pid, tid=0,
+                       args={"active": self.last_active,
+                             "finished": len(finished), "decode": False})
             return finished
         toks = self.adapter.decode(self.last_token, active)
         for slot, req in enumerate(self.active):

@@ -26,12 +26,13 @@ Decode tick (one jitted call, fixed shapes)
     The PR 2 gather tick (gather each chain into the dense layout ->
     vmapped :func:`engine.decode_step` -> scatter one block back) is kept
     as ``inplace=False``: it is the parity oracle the in-place path is
-    asserted bitwise against, and the fallback for the one layout the
-    in-place path does not cover (vlm's grouped cache).  The int8
-    ``kv_quant`` layout rides the in-place tick: the new row is quantized
-    post-RoPE and written as one int8 row + one f32 scale row per layer,
-    and the attention read dequantizes the gathered view — bitwise
-    against the gather-tick oracle.
+    asserted bitwise against.  Since PR 8 the in-place tick covers every
+    paged family — vlm's grouped cache (two leading layer axes) rides it
+    too, so decode slices of the disaggregated mesh never need the gather
+    path.  The int8 ``kv_quant`` layout rides the in-place tick as well:
+    the new row is quantized post-RoPE and written as one int8 row + one
+    f32 scale row per layer, and the attention read dequantizes the
+    gathered view — bitwise against the gather-tick oracle.
 
 Sharing / copy-on-write
     Admission walks the pool's radix index: full prompt blocks that match an
@@ -113,7 +114,8 @@ def chunk_fold_fn(cfg: LMConfig) -> Callable:
 
 
 class PagedKVSlotAdapter:
-    """Paged KV slots for the attention families (decoder/moe/hybrid/encdec).
+    """Paged KV slots for the attention families (decoder/moe/hybrid/
+    encdec/vlm).
 
     Drop-in for ``KVSlotAdapter`` in :class:`ContinuousBatcher` (same
     ``insert`` / ``decode`` / ``clear`` surface), plus the paging hooks the
@@ -138,12 +140,13 @@ class PagedKVSlotAdapter:
         # longer holds, and a family prefill_chunked implements
         self.chunked = (chunked and not cfg.kv_quant and cfg.family in
                         ("decoder", "moe", "hybrid", "encdec"))
-        # in-place decode covers the single-layer-axis attention families,
-        # incl. the int8 kv_quant layout (quantized one-row write +
-        # dequantize-in-tick); vlm's grouped cache keeps the PR 2 gather
-        # tick (which also stays available as the parity oracle)
+        # in-place decode covers every paged attention family — incl. the
+        # int8 kv_quant layout (quantized one-row write +
+        # dequantize-in-tick) and, since PR 8, vlm's grouped cache (two
+        # leading layer axes; the generalized row write absorbs the rank).
+        # The PR 2 gather tick stays available purely as the parity oracle.
         self.inplace = (inplace and cfg.family in
-                        ("decoder", "moe", "hybrid", "encdec"))
+                        ("decoder", "moe", "hybrid", "encdec", "vlm"))
         # kernel=None: Mosaic on TPU, XLA reference elsewhere (running the
         # Pallas interpreter inside the serving hot loop is for tests
         # only).  The kernel does not cover the int8 quant layout: the
@@ -153,11 +156,15 @@ class PagedKVSlotAdapter:
         if kernel and cfg.kv_quant:
             raise ValueError("paged_attn kernel does not support the int8 "
                              "kv_quant layout; use kernel=None/False")
+        if kernel and cfg.family == "vlm":
+            raise ValueError("paged_attn kernel does not support the vlm "
+                             "grouped layout; use kernel=None/False")
         if kernel is None:
             from repro.kernels.ops import default_interpret
             kernel = jax.default_backend() == "tpu" and not \
                 default_interpret()
-        self.kernel = bool(kernel) and not cfg.kv_quant
+        self.kernel = (bool(kernel) and not cfg.kv_quant
+                       and cfg.family != "vlm")
         if num_blocks is None:
             # dense-equivalent capacity + the reserved trash block
             num_blocks = n_slots * self.nb_max + 1

@@ -26,6 +26,12 @@ Design (vLLM-style, adapted to the slot batcher):
              freed — it parks in an LRU so a later request with the same
              prefix can revive it.  Allocation pops the free list first, then
              evicts from the cold end of the LRU (unindexing the key).
+  protected  chain keys marked hot by the owner (the disaggregated gateway
+             protects a handed-off prompt chain on its owning decode slice).
+             Eviction scans the LRU cold-to-hot for the first *unprotected*
+             block; only when every parked block is protected does it fall
+             back to plain cold-end eviction (allocation never fails because
+             of protection — it is a preference, not a pin).
 
 Admission math: a request needs ``ceil((P + max_new) / bs)`` blocks worst
 case; every *full*-block prefix hit removes one from that demand (a partial
@@ -78,6 +84,7 @@ class BlockPool:
         self.block_key: dict[int, bytes] = {}    # inverse (for eviction)
         self.partial_blocks: set[int] = set()    # indexed-partial block ids
         self.lru: OrderedDict[int, None] = OrderedDict()  # evictable blocks
+        self.protected: set[bytes] = set()       # eviction-deprioritized keys
         # observer: called as on_unindex(bid, key) whenever a key leaves the
         # index (eviction / partial invalidation) — the paged adapter hangs
         # its per-boundary recurrent-state side cache off this, so that
@@ -85,6 +92,7 @@ class BlockPool:
         self.on_unindex = None
         # counters (surfaced through gateway telemetry)
         self.evictions = 0
+        self.protected_evictions = 0
         self.prefix_queries = 0
         self.prefix_hits = 0
         self.cow_copies = 0
@@ -105,11 +113,23 @@ class BlockPool:
 
     # -- allocation / refcounting ------------------------------------------
     def alloc(self) -> int:
-        """Allocate a fresh block (refcount 1), evicting LRU if needed."""
+        """Allocate a fresh block (refcount 1), evicting LRU if needed.
+
+        Eviction is affinity-aware: the coldest *unprotected* block goes
+        first, so hot shared prefix chains a decode slice owns stay
+        resident under allocation pressure.  With every parked block
+        protected, the cold end goes anyway — protection never turns an
+        otherwise-satisfiable allocation into :class:`PoolExhausted`."""
         if self.free:
             bid = self.free.popleft()
         elif self.lru:
-            bid, _ = self.lru.popitem(last=False)    # cold end
+            bid = next((c for c in self.lru                # cold -> hot
+                        if self.block_key.get(c) not in self.protected),
+                       None)
+            if bid is None:                                # all protected
+                bid = next(iter(self.lru))
+                self.protected_evictions += 1
+            self.lru.pop(bid)
             self._unindex(bid)
             self.evictions += 1
         else:
@@ -169,9 +189,23 @@ class BlockPool:
         key = self.block_key.pop(bid, None)
         if key is not None:
             self.index.pop(key, None)
+            self.protected.discard(key)
             if self.on_unindex is not None:
                 self.on_unindex(bid, key)
         self.partial_blocks.discard(bid)
+
+    # -- eviction protection -----------------------------------------------
+    def protect(self, keys) -> None:
+        """Mark chain keys hot: their blocks are evicted last (see
+        :meth:`alloc`).  Keys not (or no longer) indexed are skipped —
+        protection tracks residency, it does not create it."""
+        for key in keys:
+            if key in self.index:
+                self.protected.add(key)
+
+    def unprotect(self, keys) -> None:
+        for key in keys:
+            self.protected.discard(key)
 
     # -- prefix matching ---------------------------------------------------
     def probe_chain(self, keys: list[bytes], pkey: bytes | None = None,
@@ -231,5 +265,7 @@ class BlockPool:
             "prefix_hits": self.prefix_hits,
             "prefix_hit_rate": (self.prefix_hits / q) if q else 0.0,
             "evictions": self.evictions,
+            "protected_keys": len(self.protected),
+            "protected_evictions": self.protected_evictions,
             "cow_copies": self.cow_copies,
         }

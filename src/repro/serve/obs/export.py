@@ -297,10 +297,14 @@ def openmetrics_text(metrics=None, slo=None, prefix: str = "repro") -> str:
 
 
 def write_openmetrics(path: str, metrics=None, slo=None,
-                      prefix: str = "repro") -> str:
-    """Render + write; validated before it hits disk, like the trace."""
+                      prefix: str = "repro",
+                      require: list[str] | None = None) -> str:
+    """Render + write; validated before it hits disk, like the trace.
+    ``require`` names metric families the exposition must declare —
+    the disaggregated gateway passes its per-role families so a scrape
+    missing them fails here rather than in the dashboard."""
     text = openmetrics_text(metrics, slo, prefix)
-    errs = validate_openmetrics(text)
+    errs = validate_openmetrics(text, require=require)
     if errs:
         raise AssertionError("refusing to write invalid OpenMetrics: "
                              + "; ".join(errs[:5]))
@@ -309,12 +313,15 @@ def write_openmetrics(path: str, metrics=None, slo=None,
     return text
 
 
-def validate_openmetrics(text) -> list[str]:
+def validate_openmetrics(text, require: list[str] | None = None
+                         ) -> list[str]:
     """Structural check of an OpenMetrics text exposition.  Verifies the
     ``# EOF`` terminator, comment/sample line grammar, metric-name
     charset, numeric sample values, that every sample's family was
     declared by a preceding ``# TYPE`` line, and that counter samples use
-    the ``_total`` suffix.  Returns the (possibly empty) violation list.
+    the ``_total`` suffix.  ``require`` lists family names that must be
+    declared (each missing one is a violation).  Returns the (possibly
+    empty) violation list.
     """
     if not isinstance(text, str):
         return ["exposition is not a string"]
@@ -366,4 +373,7 @@ def validate_openmetrics(text) -> list[str]:
                 ("_total", "_created")):
             errs.append(f"{where}: counter sample {name!r} must end "
                         f"in '_total'")
+    for name in require or ():
+        if name not in types:
+            errs.append(f"required family {name!r} not declared")
     return errs

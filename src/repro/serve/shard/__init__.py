@@ -11,12 +11,18 @@ radix-prefix affinity, spills by load, and migrates live requests between
 slices with refcounts and prefix sharing preserved
 (:func:`migrate.migrate_slot`).
 
+Disaggregated prefill/decode (PR 8): a :class:`RolePlan` partitions the
+slice list into prefill slices (admit-only chunked folds) and decode
+slices (in-place ticks); finished prefixes hand off prefill → decode over
+the migration path, scheduled by radix affinity then decode occupancy.
+
 Verified on CPU via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
-(tests/test_sharded.py; the ``sharded`` CI job).  See docs/sharding.md.
+(tests/test_sharded.py, tests/test_disagg.py; the ``sharded`` and
+``disagg`` CI jobs).  See docs/sharding.md.
 """
 from repro.serve.shard.migrate import MigrationReceipt, migrate_slot
-from repro.serve.shard.router import (GatewaySlice, ShardedPromptGateway,
-                                      build_slices)
+from repro.serve.shard.router import (GatewaySlice, RolePlan,
+                                      ShardedPromptGateway, build_slices)
 
-__all__ = ["GatewaySlice", "MigrationReceipt", "ShardedPromptGateway",
-           "build_slices", "migrate_slot"]
+__all__ = ["GatewaySlice", "MigrationReceipt", "RolePlan",
+           "ShardedPromptGateway", "build_slices", "migrate_slot"]

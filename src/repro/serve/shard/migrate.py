@@ -2,7 +2,8 @@
 
 A migration rebuilds a request's paged context on the destination slice's
 pool/arena and releases it from the source — the mechanism behind the
-sharded gateway's rebalancing (serve/shard/router.py).  The contract is the
+sharded gateway's rebalancing and, under a RolePlan, the prefill→decode
+handoff (serve/shard/router.py).  The contract is the
 one the parity suite pins (tests/test_sharded.py):
 
   exactness     the destination lane decodes the *same bits* the request
@@ -63,8 +64,10 @@ def migrate_slot(src, slot: int, dst, dst_slot: int,
     the same config and block geometry; ``prompt`` is the request's
     original prompt (the radix chain keys are recomputed from it, so the
     destination can reference blocks it already indexes).  On
-    ``PoolExhausted`` the destination is rolled back and the source is
-    left untouched.
+    ``PoolExhausted`` during allocation — or any failure mid-copy — the
+    destination is rolled back (partially-copied blocks released, only
+    this migration's index registrations undone) and the source is left
+    untouched, radix index included.
     """
     assert src.cfg == dst.cfg, "migration across configs"
     assert src.bs == dst.bs and src.nb_max == dst.nb_max, \
@@ -111,29 +114,58 @@ def migrate_slot(src, slot: int, dst, dst_slot: int,
     live = -(-int(src.lens[slot]) // src.bs)
     moved = 0
     n_copied = 0
-    for j, key, b in fresh:
-        if j >= live:
-            continue
-        contents = {k: jnp.asarray(np.asarray(src.arena_block(k, bids[j])))
-                    for k in src.seq_keys}
-        dst.arena = dst._write_block(dst.arena, jnp.asarray(b, jnp.int32),
-                                     contents)
-        moved += block_bytes
-        n_copied += 1
-        if key is not None:
-            # full prompt blocks are immutable from here on (the write
-            # position is past them) — index them so later destination
-            # admissions hit this chain
-            dst.pool.register(key, b)
+    try:
+        for j, key, b in fresh:
+            if j >= live:
+                continue
+            contents = {k: jnp.asarray(np.asarray(
+                src.arena_block(k, bids[j]))) for k in src.seq_keys}
+            dst.arena = dst._write_block(dst.arena,
+                                         jnp.asarray(b, jnp.int32),
+                                         contents)
+            moved += block_bytes
+            n_copied += 1
+            if key is not None:
+                # full prompt blocks are immutable from here on (the write
+                # position is past them) — index them so later destination
+                # admissions hit this chain
+                dst.pool.register(key, b)
 
-    # the slot-stacked state row: len, hybrid conv/ssm, encdec cross-K/V
-    for k in dst.cache:
-        row = np.asarray(src.cache[k][slot])
-        dst.cache[k] = dst.cache[k].at[dst_slot].set(jnp.asarray(row))
-        moved += row.nbytes
+        # the slot-stacked state row: len, hybrid conv/ssm, encdec cross-K/V
+        for k in dst.cache:
+            row = np.asarray(src.cache[k][slot])
+            dst.cache[k] = dst.cache[k].at[dst_slot].set(jnp.asarray(row))
+            moved += row.nbytes
+    except BaseException:
+        # mid-copy failure (the cross-host hop is the fallible part of a
+        # handoff): unwind the destination so the request can retry or
+        # keep decoding where it is.  Unregister only chain keys whose
+        # index entry points at a block *this* migration allocated —
+        # register is first-wins, so an entry for the same key that
+        # predates us belongs to another request's chain and must stay.
+        # Then drop every destination reference taken above.  The slot
+        # tables/lens/slot_bids commit below never ran and the source is
+        # only cleared after commit, so both slices read back exactly as
+        # they were before the call (src radix index included).
+        ours = {b for _, _, b in fresh}
+        for key in keys[:n_full]:
+            if dst.pool.index.get(key) in ours:
+                dst.pool._unindex(dst.pool.index[key])
+        for b in dst_bids:
+            dst.pool.release(b)
+        raise
+
+    dst.tables[dst_slot, :] = TRASH_BLOCK
+    dst.tables[dst_slot, :len(dst_bids)] = dst_bids
+    dst.lens[dst_slot] = src.lens[slot]
+    dst.slot_bids[dst_slot] = dst_bids
+    dst._stats[dst_slot] = dict(src._stats[slot])
+    dst._update_peaks()
 
     # hybrid: boundary recurrent-state snapshots ride along for the chain
-    # keys now indexed on the destination (a resume there would need them)
+    # keys now indexed on the destination (a resume there would need them).
+    # After the commit point on purpose — a rolled-back migration must not
+    # leave side-cache entries behind
     src_states = getattr(src, "_boundary_states", None)
     if src_states:
         for key in keys[:n_full]:
@@ -147,13 +179,6 @@ def migrate_slot(src, slot: int, dst, dst_slot: int,
         # must not grow the side cache past the arena-proportional cap
         while len(dst._boundary_states) > dst._max_boundary_states:
             dst._boundary_states.popitem(last=False)
-
-    dst.tables[dst_slot, :] = TRASH_BLOCK
-    dst.tables[dst_slot, :len(dst_bids)] = dst_bids
-    dst.lens[dst_slot] = src.lens[slot]
-    dst.slot_bids[dst_slot] = dst_bids
-    dst._stats[dst_slot] = dict(src._stats[slot])
-    dst._update_peaks()
 
     # release the source slot (drops its refs; a pending CoW spare — the
     # copy the migration just materialized — is released with it)

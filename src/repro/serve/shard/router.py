@@ -31,6 +31,17 @@ slice's decode tick is the same fixed-shape executable — a single-device
 slice produces bit-identical logits to the unsharded adapter, and a
 migrated request's post-move logits are bit-identical to the ones it would
 have produced in place (tests/test_sharded.py pins both).
+
+Disaggregated prefill/decode (PR 8): pass a :class:`RolePlan` and the flat
+slice list splits into **prefill slices** (admit-only ticks — chunked
+folds, no decode; see ``ContinuousBatcher.step(decode=False)``) and
+**decode slices** (in-place ticks only).  Finished prefixes hand off
+prefill → decode through the PR 5 migration path, routed by radix
+affinity then decode occupancy; handoff bytes ride the same
+``migration_energy_nj`` pricing so the energy ledger stays conserved.
+``roles=None`` keeps the colocated gateway byte-identical to PR 5/7
+behaviour (tests/test_disagg.py pins both sides).  See docs/sharding.md
+§Disaggregated prefill/decode.
 """
 from __future__ import annotations
 
@@ -57,6 +68,38 @@ class GatewaySlice:
     mesh: object
     adapter: object
     batcher: ContinuousBatcher
+
+
+@dataclasses.dataclass(frozen=True)
+class RolePlan:
+    """Role partition of a gateway's slice list: which slice indices run
+    prefill (admit-only chunked folds) and which run decode (in-place
+    ticks).  Replaces the flat "every slice does everything" plan; the
+    sets must be disjoint and non-empty, and together cover the gateway's
+    slices exactly (the gateway asserts coverage at construction)."""
+    prefill: tuple[int, ...]
+    decode: tuple[int, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "prefill", tuple(self.prefill))
+        object.__setattr__(self, "decode", tuple(self.decode))
+        assert self.prefill and self.decode, \
+            "disaggregation needs at least one slice per role"
+        assert not set(self.prefill) & set(self.decode), \
+            "a slice cannot serve both roles"
+
+    @classmethod
+    def split(cls, n_prefill: int, n_decode: int) -> "RolePlan":
+        """Leading ``n_prefill`` slices prefill, the rest decode — the
+        layout ``launch.mesh.make_disagg_meshes`` produces."""
+        return cls(tuple(range(n_prefill)),
+                   tuple(range(n_prefill, n_prefill + n_decode)))
+
+    def role_of(self, idx: int) -> str:
+        if idx in self.prefill:
+            return "prefill"
+        assert idx in self.decode, f"slice {idx} not in the plan"
+        return "decode"
 
 
 def build_slices(cfg, params, mesh, *, n_slots: int, max_len: int,
@@ -95,6 +138,7 @@ class ShardedPromptGateway:
                  max_queue: int = 64,
                  energy_spec: fe.FrontendSpec | None = None,
                  auto_rebalance: bool = True,
+                 roles: RolePlan | None = None,
                  tracer=None, metrics=None, slo=None,
                  shed_factor: int = 4):
         assert slices, "need at least one slice"
@@ -105,6 +149,15 @@ class ShardedPromptGateway:
             "slices must share block geometry (routing hashes prompts at " \
             "one block size and migration asserts bs/nb_max equality)"
         self.slices = slices
+        # role-partitioned (disaggregated) serving: prefill slices run
+        # admit-only ticks, decode slices run in-place ticks, finished
+        # prefixes hand off through the migration path.  roles=None is
+        # the colocated gateway, byte-identical to the pre-disagg router.
+        self.roles = roles
+        if roles is not None:
+            assert set(roles.prefill) | set(roles.decode) == \
+                set(range(len(slices))), \
+                "RolePlan must cover the slice list exactly"
         self.max_new_tokens = max_new_tokens
         self.bytes_per_token = bytes_per_token
         self.max_queue = max_queue
@@ -117,6 +170,8 @@ class ShardedPromptGateway:
         self.routing = {"affinity": 0, "affinity_spill": 0, "load": 0}
         self.migrations = 0
         self.migration_bytes = 0
+        self.handoffs = 0           # prefill -> decode moves (role mode)
+        self.handoff_bytes = 0
         self.peak_concurrent = 0    # max simultaneous active, fleet-wide
         # observability (serve/obs/): wired into every slice's batcher +
         # adapter only for the duration of run() — warmup stays untraced,
@@ -130,14 +185,35 @@ class ShardedPromptGateway:
         # hook the ROADMAP degradation controller will also consume)
         self.shed_factor = shed_factor
         self._shedding = False
+        self._shed_role = None      # role mode: which scheduler sheds
+        # per-round slice-tick wall times, for concurrent-slice clock
+        # accounting (see _step_cost)
+        self._tick_sum = 0.0
+        self._tick_max = 0.0
+        # every slice tick's wall seconds, keyed by role ("all" when
+        # colocated) — the head-of-line metric: a decode-slice tick never
+        # contains a prefill fold, so its latency distribution is what a
+        # decode device's between-token time looks like (tick_latency_ms)
+        self.tick_times: dict[str, list[float]] = {}
         if slo is not None:
             slo.pressure.subscribe(self._on_pressure)
 
     def _on_pressure(self, event) -> None:
         self._shedding = event.state == "critical"
+        if self.roles is None or not self._shedding:
+            self._shed_role = None
+        else:
+            # per-role shedding: TPOT burn is a decode-side symptom — the
+            # decode-occupancy scheduler tightens (handoffs need
+            # shed_factor x headroom, so prefill lanes back up and throttle
+            # themselves); every other objective (ttft / queue_wait /
+            # drop_rate) is admission-side — the prefill-capacity
+            # scheduler sheds at the door exactly like the colocated bound
+            self._shed_role = "decode" if event.worst == "tpot" \
+                else "prefill"
 
     def _admit_bound(self) -> int:
-        if self._shedding:
+        if self._shedding and self._shed_role != "decode":
             return max(1, self.max_queue // self.shed_factor)
         return self.max_queue
 
@@ -155,11 +231,22 @@ class ShardedPromptGateway:
         """Slice-prefixed adapter stages + representative args, for
         obs.costmodel roofline attribution — per-slice copies are distinct
         executables (each compiled against its own mesh placement), so
-        each is costed under its own prefix."""
+        each is costed under its own prefix.  Under a :class:`RolePlan`
+        the attribution is per role: a prefill slice only ever runs the
+        prefill/chunk-fold stages and a decode slice only the decode tick
+        + block copy, so each contributes exactly its role's stages under
+        a role-named prefix (``prefill0.chunk_fold``, ``decode2.decode``)."""
         out: dict[str, tuple] = {}
         for sl in self.slices:
             for name, pair in sl.adapter.cost_args().items():
-                out[f"slice{sl.idx}.{name}"] = pair
+                if self.roles is None:
+                    out[f"slice{sl.idx}.{name}"] = pair
+                    continue
+                role = self.roles.role_of(sl.idx)
+                keep = ("prefill", "chunk_fold") if role == "prefill" \
+                    else ("decode", "copy")
+                if name in keep:
+                    out[f"{role}{sl.idx}.{name}"] = pair
         return out
 
     # -- routing ------------------------------------------------------------
@@ -173,19 +260,28 @@ class ShardedPromptGateway:
         return (sl.adapter.pool.blocks_in_use() + queued,
                 len(sl.batcher.pending))
 
+    def _admission_slices(self) -> list[int]:
+        """Slice indices admissions may route to: every slice when
+        colocated, only the prefill slices under a :class:`RolePlan`."""
+        if self.roles is None:
+            return list(range(len(self.slices)))
+        return list(self.roles.prefill)
+
     def route(self, prompt: np.ndarray, max_new: int) -> tuple[int, str]:
         """(slice index, reason): radix-prefix affinity first, then
         least-loaded.  Pure policy — no references taken, no state
-        mutated except the routing counters."""
+        mutated except the routing counters.  Under a :class:`RolePlan`
+        only prefill slices are candidates (admission is scheduled by
+        prefill capacity; decode slices receive work via handoff)."""
         prompt = np.asarray(prompt, np.int32)
         keys, pkey = chain_keys(prompt, self.slices[0].adapter.bs)
-        hits = [len(sl.adapter.pool.probe_chain(keys, pkey, count=False)[0])
-                for sl in self.slices]
-        best = int(np.argmax(hits))
-        cand = range(len(self.slices))
+        cand = self._admission_slices()
+        hits = {i: len(self.slices[i].adapter.pool.probe_chain(
+            keys, pkey, count=False)[0]) for i in cand}
+        best = max(cand, key=lambda i: hits[i])
         if hits[best] > 0:
             sl = self.slices[best]
-            if len(self.slices) == 1 or (
+            if len(cand) == 1 or (
                     not sl.batcher.pending and
                     sl.adapter.can_admit(prompt, max_new)):
                 self.routing["affinity"] += 1
@@ -216,10 +312,12 @@ class ShardedPromptGateway:
                 return j
         return None
 
-    def migrate(self, src_idx: int, slot: int, dst_idx: int) -> int:
+    def migrate(self, src_idx: int, slot: int, dst_idx: int, *,
+                kind: str = "migrate") -> int:
         """Move the active request in ``(src_idx, slot)`` to ``dst_idx``.
         Returns bytes moved (also accumulated on the request and the
-        router's totals)."""
+        router's totals).  ``kind`` names the trace span — "migrate" for
+        rebalancing moves, "handoff" for prefill->decode moves."""
         src, dst = self.slices[src_idx], self.slices[dst_idx]
         req = src.batcher.active[slot]
         assert req is not None, f"slice {src_idx} slot {slot} not active"
@@ -228,11 +326,11 @@ class ShardedPromptGateway:
         if self.tracer is not None:
             # child of the request's open decode span — the move happens
             # mid-generation on the request's own track
-            self.tracer.begin("migrate", tid=req.uid)
+            self.tracer.begin(kind, tid=req.uid)
         receipt = migrate_slot(src.adapter, slot, dst.adapter, dst_slot,
                                req.prompt)
         if self.tracer is not None:
-            self.tracer.end("migrate", tid=req.uid,
+            self.tracer.end(kind, tid=req.uid,
                             args=receipt.trace_args(src_idx, dst_idx))
         dst.batcher.active[dst_slot] = req
         dst.batcher.last_token[dst_slot] = src.batcher.last_token[slot]
@@ -240,9 +338,75 @@ class ShardedPromptGateway:
         src.batcher.last_token[slot] = 0
         req.migrations += 1
         req.migration_bytes += receipt.bytes_moved
-        self.migrations += 1
-        self.migration_bytes += receipt.bytes_moved
+        # router totals are per-kind: rebalance moves vs prefill->decode
+        # handoffs (the request-side bytes above ride the energy pricing
+        # identically either way)
+        if kind == "handoff":
+            self.handoffs += 1
+            self.handoff_bytes += receipt.bytes_moved
+        else:
+            self.migrations += 1
+            self.migration_bytes += receipt.bytes_moved
         return receipt.bytes_moved
+
+    # -- disaggregated handoff (role mode) ----------------------------------
+
+    def route_handoff(self, req: Request) -> int | None:
+        """Decode slice for a finished prefix: deepest radix-affinity hit
+        first (the prompt's chain may already live there from an earlier
+        handoff), then lowest decode occupancy.  None when no decode slice
+        has a free lane + block headroom right now — the lane then waits
+        on its prefill slice (natural backpressure), and under decode-side
+        shedding the headroom requirement tightens by ``shed_factor``."""
+        prompt = np.asarray(req.prompt, np.int32)
+        keys, pkey = chain_keys(prompt, self.slices[0].adapter.bs)
+        factor = self.shed_factor if self._shed_role == "decode" else 1
+        cands = []
+        for i in self.roles.decode:
+            sl = self.slices[i]
+            if self._free_slot(sl) is None:
+                continue
+            demand = sl.adapter._block_demand(len(prompt),
+                                              req.max_new_tokens)
+            if demand * factor > sl.adapter.pool.available():
+                continue
+            hits = len(sl.adapter.pool.probe_chain(keys, pkey,
+                                                   count=False)[0])
+            cands.append((-hits, self._load(sl), i))
+        return min(cands)[2] if cands else None
+
+    def handoff(self, src_idx: int, slot: int, dst_idx: int) -> int:
+        """One prefill->decode handoff: the migration move plus the
+        handoff counters, and the handed-off prompt chain is *protected*
+        on its owning decode slice — eviction under later handoff or
+        allocation pressure prefers unprotected blocks, keeping the hot
+        shared prefix resident where its lanes decode (affinity-aware
+        eviction; the pool falls back to evicting protected blocks only
+        when nothing else is left)."""
+        req = self.slices[src_idx].batcher.active[slot]
+        moved = self.migrate(src_idx, slot, dst_idx, kind="handoff")
+        dst = self.slices[dst_idx]
+        keys, _ = chain_keys(np.asarray(req.prompt, np.int32),
+                             dst.adapter.bs)
+        dst.adapter.pool.protect(keys)
+        return moved
+
+    def _handoff_pass(self) -> int:
+        """Hand off every prefilled lane whose chosen decode slice can
+        take it now; lanes with no target stay put until decode capacity
+        frees up.  Returns handoffs performed."""
+        n = 0
+        for i in self.roles.prefill:
+            src = self.slices[i]
+            for slot, req in enumerate(src.batcher.active):
+                if req is None:
+                    continue
+                dst_idx = self.route_handoff(req)
+                if dst_idx is None:
+                    continue
+                self.handoff(i, slot, dst_idx)
+                n += 1
+        return n
 
     def maybe_rebalance(self) -> int:
         """One rebalance pass: every slice with queued work sheds its
@@ -305,14 +469,21 @@ class ShardedPromptGateway:
             sl.batcher.peak_active = 0
 
     def step(self) -> list[Request]:
-        """Rebalance, then one decode tick on every busy slice."""
+        """Rebalance, then one decode tick on every busy slice (colocated);
+        admit → handoff → decode tick in role mode."""
+        if self.roles is not None:
+            return self._step_disagg()
         if self.auto_rebalance:
             self.maybe_rebalance()
         finished: list[Request] = []
         concurrent = 0
+        ticks: list[float] = []
         for sl in self.slices:
             if sl.batcher.busy:
+                t0 = time.perf_counter()
                 finished.extend(sl.batcher.step())
+                ticks.append(time.perf_counter() - t0)
+                self.tick_times.setdefault("all", []).append(ticks[-1])
                 # lanes that actually decoded this round's tick
                 # (batcher.last_active — the same quantity the
                 # single-device peak_active maximizes, so the sharded
@@ -323,6 +494,52 @@ class ShardedPromptGateway:
                 # not be added
                 concurrent += sl.batcher.last_active
         self.peak_concurrent = max(self.peak_concurrent, concurrent)
+        self._tick_sum, self._tick_max = sum(ticks), max(ticks, default=0.0)
+        return finished
+
+    def _step_cost(self, wall: float) -> float:
+        """Virtual cost of the round just stepped: slices are disjoint
+        device groups that tick *simultaneously* in a real fleet, so the
+        round costs the slowest slice's tick plus the router's serial
+        work (routing, rebalance/handoff copies through the host) — not
+        the sum a single-host simulation measures.  Fed to
+        ``drive_prompt_loop(step_cost=...)`` for untraced runs; with a
+        tracer attached wall accounting stays (sub-tick spans anchor to
+        real offsets), which the loop asserts."""
+        return max(0.0, wall - self._tick_sum) + self._tick_max
+
+    def _step_disagg(self) -> list[Request]:
+        """One disaggregated round: prefill slices run admit-only ticks
+        (chunked folds, no decode), finished prefixes hand off onto decode
+        slices, decode slices run their in-place tick.  Rebalancing is the
+        handoff pass itself — ``maybe_rebalance`` never runs in role mode
+        (a migration onto a prefill slice would put decode work there)."""
+        finished: list[Request] = []
+        ticks: list[float] = []
+        for i in self.roles.prefill:
+            sl = self.slices[i]
+            if sl.batcher.busy:
+                # admission can retire a request here (EOS at prefill /
+                # at_capacity) — those never reach a decode slice
+                t0 = time.perf_counter()
+                finished.extend(sl.batcher.step(decode=False))
+                ticks.append(time.perf_counter() - t0)
+                self.tick_times.setdefault("prefill", []).append(ticks[-1])
+        self._handoff_pass()
+        concurrent = 0
+        for i in self.roles.decode:
+            sl = self.slices[i]
+            if sl.batcher.busy:
+                t0 = time.perf_counter()
+                finished.extend(sl.batcher.step())
+                ticks.append(time.perf_counter() - t0)
+                self.tick_times.setdefault("decode", []).append(ticks[-1])
+                # only lanes that actually decoded count toward fleet
+                # concurrency — prefill lanes parked awaiting handoff are
+                # queueing, not decoding
+                concurrent += sl.batcher.last_active
+        self.peak_concurrent = max(self.peak_concurrent, concurrent)
+        self._tick_sum, self._tick_max = sum(ticks), max(ticks, default=0.0)
         return finished
 
     def run(self, arrivals, telemetry: Telemetry | None = None) -> Telemetry:
@@ -339,6 +556,30 @@ class ShardedPromptGateway:
             m.register("queue_depth", lambda: self.queued)
             m.register("migrations", lambda: self.migrations)
             m.register("spills", lambda: self.routing["affinity_spill"])
+            if self.roles is not None:
+                # per-role series (satellite: disagg observability) — queue
+                # depth per scheduler, lane occupancy per role, handoff
+                # volume.  Occupancy is lanes-in-use over lanes available,
+                # the quantity route_handoff load-balances on
+                def occ(idxs):
+                    used = sum(
+                        sum(r is not None
+                            for r in self.slices[i].batcher.active)
+                        for i in idxs)
+                    return used / (len(idxs) *
+                                   self.slices[0].adapter.n_slots)
+                m.register("prefill_queue", lambda: sum(
+                    len(self.slices[i].batcher.pending)
+                    for i in self.roles.prefill))
+                m.register("decode_queue", lambda: sum(
+                    len(self.slices[i].batcher.pending)
+                    for i in self.roles.decode))
+                m.register("prefill_occupancy",
+                           lambda: occ(self.roles.prefill))
+                m.register("decode_occupancy",
+                           lambda: occ(self.roles.decode))
+                m.register("handoffs", lambda: self.handoffs)
+                m.register("handoff_bytes", lambda: self.handoff_bytes)
             for sl in self.slices:
                 m.register(f"slice{sl.idx}_blocks_in_use",
                            lambda sl=sl:
@@ -370,7 +611,8 @@ class ShardedPromptGateway:
                     self.bytes_per_token, self.energy_spec,
                     tracer=self.tracer, slo=self.slo),
                 clock=clock, tracer=self.tracer, metrics=self.metrics,
-                slo=self.slo)
+                slo=self.slo,
+                step_cost=self._step_cost if self.tracer is None else None)
         finally:
             for sl in self.slices:
                 sl.batcher.clock = None
@@ -379,7 +621,9 @@ class ShardedPromptGateway:
         for sl in self.slices:
             tel.record_pool(sl.adapter.pool_stats(), slice_idx=sl.idx)
         tel.record_routing({**self.routing, "migrations": self.migrations,
-                            "migration_bytes": self.migration_bytes})
+                            "migration_bytes": self.migration_bytes,
+                            "handoffs": self.handoffs,
+                            "handoff_bytes": self.handoff_bytes})
         if self.metrics is not None and self.metrics.samples:
             tel.record_series(self.metrics.samples)
         return tel
@@ -392,3 +636,18 @@ class ShardedPromptGateway:
         per-slice peaks — those can occur at different times and would
         overstate what the fleet ever ran at once."""
         return self.peak_concurrent
+
+    def tick_latency_ms(self, role: str = "all", q: float = 99.0) -> float:
+        """Percentile of per-slice tick wall time in ms, the decode
+        head-of-line metric: each tick is one generated token for every
+        lane it decodes, so a slice's tick-latency distribution is its
+        between-token time.  Colocated ticks ("all") absorb admission's
+        chunked-prefill folds; a decode-role tick never does — under a
+        prefill burst p99("decode") on a disaggregated gateway beating
+        p99("all") on a colocated one at equal device budget is exactly
+        the head-of-line relief disaggregation buys
+        (benchmarks/kvcache_bench.py --disagg gates this)."""
+        ts = self.tick_times.get(role, ())
+        if not ts:
+            return 0.0
+        return float(np.percentile(np.asarray(ts, np.float64), q) * 1e3)

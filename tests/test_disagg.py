@@ -1,0 +1,498 @@
+"""Disaggregated prefill/decode serving (serve/shard/ under a RolePlan):
+role-partitioned admission, prefill->decode handoff parity against the
+stay-put oracle per attention family, handoff energy conservation,
+affinity-aware eviction protection, migration rollback, per-role shedding,
+and the head-of-line acceptance bar on a forced multi-device CPU mesh.
+
+Single-device runs exercise everything but true multi-device placement
+(slices then share the one device); the ``disagg`` CI job re-runs this file
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the
+@multi head-of-line test activates.
+"""
+import dataclasses
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro import configs
+from repro.launch.mesh import make_disagg_meshes
+from repro.models import lm
+from repro.serve.gateway.sensors import Arrival
+from repro.serve.gateway.slots import ContinuousBatcher, Request, make_adapter
+from repro.serve.kvcache.pool import BlockPool, PoolExhausted
+from repro.serve.shard import (RolePlan, ShardedPromptGateway, build_slices,
+                               migrate_slot)
+
+FAMILY_ARCH = {                      # one arch per attention family
+    "decoder": "stablelm_3b",
+    "moe": "deepseek_moe_16b",
+    "hybrid": "hymba_1_5b",
+    "encdec": "whisper_medium",
+}
+BS = 4
+
+multi = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+_SETUP_CACHE: dict = {}
+
+
+def _setup(arch):
+    if arch not in _SETUP_CACHE:
+        cfg = dataclasses.replace(configs.smoke_config(arch),
+                                  param_dtype="float32")
+        params, _ = lm.init(jax.random.key(0), cfg, {})
+        extras = None
+        if cfg.family == "encdec":
+            rng = np.random.default_rng(99)
+            enc = jnp.asarray(rng.normal(0, 1, (1, cfg.enc_len, cfg.d_model)),
+                              jnp.float32)
+            extras = (lambda e=enc: {"enc_embed": e})
+        _SETUP_CACHE[arch] = (cfg, params, extras)
+    return _SETUP_CACHE[arch]
+
+
+def _slice_mesh(i: int) -> Mesh:
+    devs = jax.devices()
+    return Mesh(np.asarray([devs[i % len(devs)]]), ("model",))
+
+
+def _mk_gateway(cfg, params, extras, n_slices, *, roles=None, n_slots=2,
+                num_blocks=None, max_new=4, max_len=16, max_queue=128):
+    slices = build_slices(cfg, params,
+                          [_slice_mesh(i) for i in range(n_slices)],
+                          n_slots=n_slots, max_len=max_len, block_size=BS,
+                          num_blocks=num_blocks, extras=extras)
+    return ShardedPromptGateway(slices, max_new_tokens=max_new,
+                                max_queue=max_queue, roles=roles)
+
+
+def _run_capture(gw, prompts):
+    """Run prompts through the gateway, returning the Request objects."""
+    arrivals = [Arrival(uid=i, t=0.0, endpoint=0, kind="prompt", payload=p)
+                for i, p in enumerate(prompts)]
+    reqs = {}
+    orig = gw.submit
+
+    def submit(req):
+        reqs[req.uid] = req
+        return orig(req)
+
+    gw.submit = submit
+    tel = gw.run(arrivals)
+    gw.submit = orig
+    return reqs, tel
+
+
+def _oracle_tokens(cfg, params, extras, prompts, max_new):
+    ad = make_adapter(cfg, params, n_slots=2, max_len=16, extras=extras,
+                      paged=True, block_size=BS)
+    out = []
+    for i, p in enumerate(prompts):
+        ob = ContinuousBatcher(ad)
+        o = Request(uid=1000 + i, prompt=p, max_new_tokens=max_new)
+        ob.submit(o)
+        ob.run()
+        out.append(o.generated)
+    return out
+
+
+# ==========================================================================
+# RolePlan + mesh factoring.
+# ==========================================================================
+
+def test_roleplan_validation():
+    plan = RolePlan.split(1, 2)
+    assert plan.prefill == (0,) and plan.decode == (1, 2)
+    assert plan.role_of(0) == "prefill" and plan.role_of(2) == "decode"
+    with pytest.raises(AssertionError):
+        RolePlan(prefill=(0, 1), decode=(1, 2))     # overlap
+    with pytest.raises(AssertionError):
+        RolePlan(prefill=(0,), decode=())           # empty role
+    with pytest.raises(AssertionError):
+        plan.role_of(3)                             # not in the plan
+    cfg, params, extras = _setup("stablelm_3b")
+    with pytest.raises(AssertionError):             # plan must cover slices
+        _mk_gateway(cfg, params, extras, 2, roles=RolePlan.split(1, 2))
+
+
+def test_disagg_meshes_partition_devices():
+    if jax.device_count() >= 2:
+        pre, dec = make_disagg_meshes(1, jax.device_count() - 1)
+        assert len(pre) == 1
+        ids = [d.id for m in pre + dec for d in m.devices.flat]
+        assert len(ids) == len(set(ids))            # disjoint device groups
+    with pytest.raises(AssertionError):
+        make_disagg_meshes(0, 1)
+    with pytest.raises(AssertionError):
+        make_disagg_meshes(jax.device_count(), 1)   # over budget
+
+
+# ==========================================================================
+# Tentpole parity: the disaggregated gateway's tokens are the stay-put
+# oracle's, per attention family; handoff energy re-folds conserved.
+# ==========================================================================
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCH))
+def test_disagg_tokens_match_oracle(family):
+    """1 prefill + 2 decode slices: every request is admitted on the
+    prefill slice, handed off mid-lifecycle, and must still generate the
+    solo oracle's tokens exactly (the migration path's bitwise contract,
+    exercised through the role scheduler for all four families)."""
+    cfg, params, extras = _setup(FAMILY_ARCH[family])
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(0, cfg.vocab, size=int(s)).astype(np.int32)
+               for s in (5, 9, 6, 7)]
+    gw = _mk_gateway(cfg, params, extras, 3, roles=RolePlan.split(1, 2))
+    reqs, tel = _run_capture(gw, prompts)
+    tel.assert_conserved()
+    rep = tel.report(1.0, kind="prompt")
+    assert rep["completed"] == len(prompts)
+    # every request decoded somewhere else than it prefilled
+    assert gw.handoffs == len(prompts)
+    assert rep["routing"]["handoffs"] == gw.handoffs
+    assert rep["routing"]["handoff_bytes"] == gw.handoff_bytes > 0
+    assert gw.migrations == 0            # no rebalancing in role mode
+    for i, want in enumerate(_oracle_tokens(cfg, params, extras, prompts,
+                                            gw.max_new_tokens)):
+        assert reqs[i].generated == want, i
+
+
+def test_handoff_energy_rides_the_conserved_ledger():
+    """Handoff bytes are charged per request through the same
+    migration-energy pricing as rebalancing moves — the ledger stays
+    conserved and the per-record bytes sum to the router's total."""
+    cfg, params, extras = _setup("stablelm_3b")
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(0, cfg.vocab, size=int(s)).astype(np.int32)
+               for s in (5, 9, 6)]
+    gw = _mk_gateway(cfg, params, extras, 3, roles=RolePlan.split(1, 2))
+    reqs, tel = _run_capture(gw, prompts)
+    tel.assert_conserved()
+    rep = tel.report(1.0, kind="prompt")
+    moved = [r for r in tel.records if r.migration_bytes > 0]
+    assert moved and sum(r.migration_bytes for r in moved) == \
+        gw.handoff_bytes > 0
+    assert rep["migration_bytes_total"] == gw.handoff_bytes
+    assert all(reqs[i].migrations == 1 for i in range(len(prompts)))
+
+
+def test_colocated_roles_none_matches_disagg_tokens():
+    """roles=None is the PR 5 gateway: same prompts produce the same
+    tokens through both scheduling modes (and the colocated run reports
+    zero handoffs)."""
+    cfg, params, extras = _setup("stablelm_3b")
+    rng = np.random.default_rng(29)
+    prompts = [rng.integers(0, cfg.vocab, size=int(s)).astype(np.int32)
+               for s in (5, 9, 6, 7)]
+    colo = _mk_gateway(cfg, params, extras, 3)
+    creqs, ctel = _run_capture(colo, prompts)
+    assert colo.handoffs == 0
+    assert ctel.report(1.0, kind="prompt")["routing"]["handoffs"] == 0
+    disagg = _mk_gateway(cfg, params, extras, 3, roles=RolePlan.split(1, 2))
+    dreqs, _ = _run_capture(disagg, prompts)
+    for i in range(len(prompts)):
+        assert creqs[i].generated == dreqs[i].generated, i
+
+
+# ==========================================================================
+# Satellite: affinity-aware eviction — handoff protects the prompt chain
+# on its owning decode slice; the pool prefers evicting unprotected blocks.
+# ==========================================================================
+
+def test_handoff_protects_chain_on_owning_decode_slice():
+    """Two requests sharing a full-block prefix hand off to the same
+    decode slice (radix affinity beats occupancy), and the chain's keys
+    are protected on that slice's pool."""
+    cfg, params, extras = _setup("stablelm_3b")
+    rng = np.random.default_rng(31)
+    prefix = rng.integers(0, cfg.vocab, size=2 * BS).astype(np.int32)
+    prompts = [np.concatenate([prefix, rng.integers(0, cfg.vocab, size=3,
+                                                    dtype=np.int32)]),
+               np.concatenate([prefix, rng.integers(0, cfg.vocab, size=5,
+                                                    dtype=np.int32)])]
+    gw = _mk_gateway(cfg, params, extras, 3, roles=RolePlan.split(1, 2),
+                     max_len=24)
+    # serialize: first request completes before the second arrives, so the
+    # second's handoff sees the first's chain parked on its decode slice
+    arrivals = [Arrival(uid=0, t=0.0, endpoint=0, kind="prompt",
+                        payload=prompts[0])]
+    gw.run(arrivals)
+    owners = [i for i in gw.roles.decode
+              if gw.slices[i].adapter.pool.protected]
+    assert len(owners) == 1                     # exactly one owning slice
+    gw.run([Arrival(uid=1, t=0.0, endpoint=0, kind="prompt",
+                    payload=prompts[1])])
+    assert gw.handoffs == 2
+    own = gw.slices[owners[0]].adapter.pool
+    # both chains live on the owner, prefix keys protected there
+    from repro.serve.kvcache.pool import chain_keys
+    keys, _ = chain_keys(prefix, BS)
+    assert set(keys) <= own.protected
+    assert all(not gw.slices[i].adapter.pool.protected
+               for i in gw.roles.decode if i != owners[0])
+
+
+def test_pool_protected_eviction_preference():
+    """Eviction takes the coldest *unprotected* block first; with every
+    parked block protected it falls back to the cold end (liveness) and
+    counts the forced eviction."""
+    pool = BlockPool(num_blocks=4, block_size=BS)
+    bids = [pool.alloc() for _ in range(3)]
+    keys = [bytes([i]) * 20 for i in range(3)]
+    for k, b in zip(keys, bids):
+        pool.register(k, b)
+    for b in bids:
+        pool.release(b)                         # LRU cold->hot: bids order
+    pool.protect([keys[0]])
+    got = pool.alloc()                          # coldest unprotected
+    assert got == bids[1]
+    assert keys[0] in pool.index and keys[1] not in pool.index
+    assert pool.protected_evictions == 0
+    pool.protect([keys[2]])                     # everything parked protected
+    got2 = pool.alloc()
+    assert got2 == bids[0]                      # cold-end fallback
+    assert pool.protected_evictions == 1
+    assert keys[0] not in pool.protected        # unindex clears protection
+    pool.unprotect(keys)
+    assert not pool.protected
+    # protecting an unindexed key is a no-op, not a leak
+    pool.protect([b"missing" * 3])
+    assert not pool.protected
+
+
+# ==========================================================================
+# Satellite: migration rollback — a failed handoff leaves both slices
+# exactly as they were (dst blocks released, src radix untouched).
+# ==========================================================================
+
+def _two_adapters(cfg, params, extras, *, dst_blocks=None):
+    mk = lambda mesh, nb: make_adapter(
+        cfg, params, n_slots=2, max_len=24, extras=extras, paged=True,
+        block_size=BS, num_blocks=nb, mesh=mesh)
+    return mk(_slice_mesh(0), None), mk(_slice_mesh(1), dst_blocks)
+
+
+def test_migrate_rollback_on_pool_exhausted():
+    """Destination too small for the chain: allocation fails partway and
+    every destination block is released; the source keeps decoding the
+    oracle's bits as if nothing happened."""
+    cfg, params, extras = _setup("stablelm_3b")
+    rng = np.random.default_rng(41)
+    prompt = rng.integers(0, cfg.vocab, size=9).astype(np.int32)
+    src, dst = _two_adapters(cfg, params, extras, dst_blocks=3)
+    oracle, _ = _two_adapters(cfg, params, extras)
+    assert oracle.insert(0, prompt, max_new=8) == \
+        src.insert(0, prompt, max_new=8)
+    free0, idx0 = len(dst.pool.free), dict(dst.pool.index)
+    with pytest.raises(PoolExhausted):
+        migrate_slot(src, 0, dst, 0, prompt)
+    assert len(dst.pool.free) == free0 and dst.pool.index == idx0
+    assert not dst.slot_bids[0]
+    assert src.slot_bids[0]                     # source untouched
+    lane0 = np.asarray([True, False])
+    for _ in range(3):
+        forced = rng.integers(0, cfg.vocab, size=2).astype(np.int32)
+        np.testing.assert_array_equal(oracle.decode(forced, lane0),
+                                      src.decode(forced, lane0))
+        np.testing.assert_array_equal(np.asarray(oracle.last_logits)[0],
+                                      np.asarray(src.last_logits)[0])
+
+
+def test_migrate_rollback_mid_copy_releases_and_unregisters():
+    """A failure *after* some blocks copied and registered (the cross-host
+    hop is the fallible part) must unregister exactly this migration's
+    index entries, release every destination block, leave pre-existing
+    destination chains untouched, and keep the source decodable — and a
+    retry must then succeed."""
+    cfg, params, extras = _setup("stablelm_3b")
+    rng = np.random.default_rng(43)
+    # prompt shares exactly ONE full block with dst's pre-existing chain:
+    # its second full block is fresh, so the failing copy sequence is
+    # [register-worthy fresh block, fresh partial block] — the fault on
+    # call 2 lands after a registration happened
+    prefix = rng.integers(0, cfg.vocab, size=BS).astype(np.int32)
+    prompt = np.concatenate([prefix, rng.integers(0, cfg.vocab, size=7,
+                                                  dtype=np.int32)])
+    other = np.concatenate([prefix, rng.integers(0, cfg.vocab, size=5,
+                                                 dtype=np.int32)])
+    src, dst = _two_adapters(cfg, params, extras)
+    oracle, _ = _two_adapters(cfg, params, extras)
+    assert oracle.insert(0, prompt, max_new=8) == \
+        src.insert(0, prompt, max_new=8)
+    # a pre-existing chain on dst: shared-prefix hits must survive rollback
+    dst.insert(0, other, max_new=4)
+    idx0 = dict(dst.pool.index)
+    ref0 = dst.pool.refcount.copy()
+    free0 = len(dst.pool.free)
+    real_write, calls = dst._write_block, []
+
+    def flaky(arena, bid, contents):
+        calls.append(int(bid))
+        if len(calls) >= 2:
+            raise RuntimeError("wire dropped mid-copy")
+        return real_write(arena, bid, contents)
+
+    dst._write_block = flaky
+    with pytest.raises(RuntimeError, match="mid-copy"):
+        migrate_slot(src, 0, dst, 1, prompt)
+    dst._write_block = real_write
+    assert len(calls) == 2                      # it really failed partway
+    assert dst.pool.index == idx0               # registrations undone,
+    np.testing.assert_array_equal(dst.pool.refcount, ref0)  # refs restored
+    assert len(dst.pool.free) == free0
+    assert not dst.slot_bids[1]
+    assert src.slot_bids[0]                     # src radix/blocks untouched
+    # retry succeeds and the moved lane continues the oracle bitwise
+    receipt = migrate_slot(src, 0, dst, 1, prompt)
+    assert receipt.bytes_moved > 0
+    lane0 = np.asarray([True, False])
+    lane1 = np.asarray([False, True])
+    for _ in range(3):
+        forced = rng.integers(0, cfg.vocab, size=2).astype(np.int32)
+        to = oracle.decode(forced, lane0)
+        td = dst.decode(forced[::-1], lane1)
+        assert to[0] == td[1]
+        np.testing.assert_array_equal(np.asarray(oracle.last_logits)[0],
+                                      np.asarray(dst.last_logits)[1])
+
+
+# ==========================================================================
+# Per-role admission control: which scheduler sheds under which burn.
+# ==========================================================================
+
+def test_per_role_shedding_mapping():
+    """TPOT burn (a decode symptom) tightens the handoff scheduler and
+    leaves admission alone; every other objective sheds at the door.
+    Colocated keeps the PR 7 behaviour: one bound, no role split."""
+    cfg, params, extras = _setup("stablelm_3b")
+    gw = _mk_gateway(cfg, params, extras, 3, roles=RolePlan.split(1, 2),
+                     max_queue=64)
+    ev = lambda worst, state="critical": types.SimpleNamespace(
+        state=state, worst=worst, prev="ok", burns={}, t=0.0)
+    gw._on_pressure(ev("ttft"))
+    assert gw._shed_role == "prefill"
+    assert gw._admit_bound() == 64 // gw.shed_factor
+    gw._on_pressure(ev("tpot"))
+    assert gw._shed_role == "decode"
+    assert gw._admit_bound() == 64              # admission unaffected
+    gw._on_pressure(ev("tpot", state="ok"))
+    assert gw._shed_role is None and gw._admit_bound() == 64
+    colo = _mk_gateway(cfg, params, extras, 2, max_queue=64)
+    colo._on_pressure(ev("tpot"))
+    assert colo._shed_role is None              # no role split colocated
+    assert colo._admit_bound() == 64 // colo.shed_factor
+
+
+def test_decode_shed_tightens_handoff_headroom():
+    """Under decode-side shedding a handoff needs shed_factor x block
+    headroom on the target — a slice that could just fit the chain stops
+    being a candidate until pressure clears."""
+    cfg, params, extras = _setup("stablelm_3b")
+    gw = _mk_gateway(cfg, params, extras, 3, roles=RolePlan.split(1, 2),
+                     num_blocks=9)
+    rng = np.random.default_rng(47)
+    prompt = rng.integers(0, cfg.vocab, size=9).astype(np.int32)
+    req = Request(uid=0, prompt=prompt, max_new_tokens=4)
+    gw.submit(req)
+    gw.slices[0].batcher.step(decode=False)     # prefilled, awaiting handoff
+    assert gw.route_handoff(req) in gw.roles.decode
+    gw._shedding, gw._shed_role = True, "decode"
+    assert gw.route_handoff(req) is None        # headroom x4 not available
+    gw._shedding, gw._shed_role = False, None
+    assert gw.route_handoff(req) in gw.roles.decode
+
+
+# ==========================================================================
+# Per-role observability: gauge series + OpenMetrics exposition.
+# ==========================================================================
+
+def test_role_metrics_series_and_openmetrics(tmp_path):
+    from repro.serve.obs import MetricsRegistry
+    from repro.serve.obs.export import (openmetrics_text,
+                                        validate_openmetrics,
+                                        write_openmetrics)
+    cfg, params, extras = _setup("stablelm_3b")
+    rng = np.random.default_rng(53)
+    prompts = [rng.integers(0, cfg.vocab, size=int(s)).astype(np.int32)
+               for s in (5, 9, 6)]
+    slices = build_slices(cfg, params,
+                          [_slice_mesh(i) for i in range(3)],
+                          n_slots=2, max_len=16, block_size=BS)
+    metrics = MetricsRegistry(interval_s=1e-9)
+    gw = ShardedPromptGateway(slices, max_new_tokens=4, max_queue=128,
+                              roles=RolePlan.split(1, 2), metrics=metrics)
+    arrivals = [Arrival(uid=i, t=0.0, endpoint=0, kind="prompt", payload=p)
+                for i, p in enumerate(prompts)]
+    tel = gw.run(arrivals)
+    rep = tel.report(1.0, kind="prompt")
+    names = set().union(*(s.keys() for s in rep["series"])) - {"t"}
+    for want in ("prefill_queue", "decode_queue", "prefill_occupancy",
+                 "decode_occupancy", "handoffs", "handoff_bytes"):
+        assert want in names, (want, names)
+    last = rep["series"][-1]
+    assert last["handoffs"] == gw.handoffs == len(prompts)
+    assert last["prefill_occupancy"] == 0.0     # drained at run end
+    text = openmetrics_text(metrics)
+    required = ["repro_handoffs", "repro_handoff_bytes",
+                "repro_prefill_occupancy", "repro_decode_occupancy",
+                "repro_prefill_queue", "repro_decode_queue"]
+    assert validate_openmetrics(text, require=required) == []
+    assert validate_openmetrics(text, require=["repro_nope"]) \
+        == ["required family 'repro_nope' not declared"]
+    out = write_openmetrics(str(tmp_path / "m.txt"), metrics=metrics,
+                            require=required)
+    assert "repro_handoffs" in out
+    with pytest.raises(AssertionError, match="repro_nope"):
+        write_openmetrics(str(tmp_path / "m2.txt"), metrics=metrics,
+                         require=["repro_nope"])
+
+
+# ==========================================================================
+# Forced 8-device mesh: the head-of-line acceptance bar.
+# ==========================================================================
+
+@multi
+def test_disagg_relieves_decode_head_of_line():
+    """Under a forced prefill burst at equal device budget, the decode
+    slices' p99 tick latency (between-token time; ticks never contain
+    prefill folds) must beat the colocated gateway's all-slice p99 tick
+    latency (ticks absorb admission's chunked folds).  This is the
+    JetStream-style argument for disaggregation, and the trend the
+    ``--disagg`` bench gate enforces."""
+    cfg, params, extras = _setup("stablelm_3b")
+    rng = np.random.default_rng(61)
+    short = [rng.integers(0, cfg.vocab, size=5, dtype=np.int32)
+             for _ in range(12)]
+    burst = [rng.integers(0, cfg.vocab, size=28, dtype=np.int32)
+             for _ in range(8)]
+    arrivals = [Arrival(uid=i, t=0.0, endpoint=0, kind="prompt", payload=p)
+                for i, p in enumerate(short)]
+    arrivals += [Arrival(uid=100 + i, t=0.0, endpoint=0, kind="prompt",
+                         payload=p) for i, p in enumerate(burst)]
+
+    def build(roles):
+        slices = build_slices(cfg, params,
+                              [_slice_mesh(i) for i in range(8)],
+                              n_slots=2, max_len=36, block_size=BS)
+        gw = ShardedPromptGateway(slices, max_new_tokens=6, max_queue=128,
+                                  roles=roles, auto_rebalance=False)
+        gw.warmup((4, 8))
+        return gw
+
+    colo = build(None)
+    ctel = colo.run(list(arrivals))
+    disagg = build(RolePlan.split(2, 6))
+    dtel = disagg.run(list(arrivals))
+    assert ctel.report(1.0, kind="prompt")["completed"] == \
+        dtel.report(1.0, kind="prompt")["completed"] == len(arrivals)
+    assert disagg.handoffs > 0
+    c_p99 = colo.tick_latency_ms("all")
+    d_p99 = disagg.tick_latency_ms("decode")
+    assert d_p99 > 0 and c_p99 > 0
+    assert d_p99 < c_p99, (d_p99, c_p99)

@@ -32,6 +32,12 @@ def _setup(arch):
         enc = jnp.asarray(rng.normal(0, 1, (1, cfg.enc_len, cfg.d_model)),
                           jnp.float32)
         extras = lambda: {"enc_embed": enc}
+    elif cfg.family == "vlm":
+        rng = np.random.default_rng(98)
+        vis = jnp.asarray(
+            rng.normal(0, 1, (1, cfg.n_vision_tokens, cfg.d_model)),
+            jnp.float32)
+        extras = lambda: {"vision_embed": vis}
     return cfg, params, extras
 
 
@@ -146,6 +152,57 @@ def test_kvquant_inplace_matches_gather_tick_bitwise(family):
         a, b = _chain_blocks(inp, slot), _chain_blocks(gat, slot)
         for key in a:
             np.testing.assert_array_equal(a[key], b[key], err_msg=str(key))
+
+
+# ==========================================================================
+# vlm's grouped cache rides the in-place tick (PR 8: the last gather-tick
+# fallback is gone) — bitwise against the kept gather oracle.
+# ==========================================================================
+
+def test_vlm_inplace_matches_gather_tick_bitwise():
+    """The grouped layout (two leading layer axes on self k/v, one on the
+    cross-layer self k/v) decodes through the generalized in-place row
+    write: the gather tick's logits, arena blocks, and slot state bit for
+    bit, every step."""
+    cfg, params, extras = _setup("llama32_vision_90b")
+    assert cfg.family == "vlm"
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, size=s).astype(np.int32)
+               for s in (5, 9)]
+    adapters = [make_adapter(cfg, params, n_slots=2, max_len=24,
+                             extras=extras, paged=True, block_size=BS,
+                             inplace=ip) for ip in (True, False)]
+    assert adapters[0].inplace and not adapters[1].inplace
+    assert not adapters[0].kernel          # grouped layout: XLA reference
+    assert {"kx_self", "vx_self"} <= set(adapters[0].seq_keys)
+    for slot, p in enumerate(prompts):
+        toks = [ad.insert(slot, p, max_new=8) for ad in adapters]
+        assert toks[0] == toks[1]
+    active = np.asarray([True, True])
+    for step in range(5):
+        forced = rng.integers(0, cfg.vocab, size=2).astype(np.int32)
+        outs = [ad.decode(forced, active) for ad in adapters]
+        np.testing.assert_array_equal(outs[0], outs[1])
+        np.testing.assert_array_equal(np.asarray(adapters[0].last_logits),
+                                      np.asarray(adapters[1].last_logits))
+    inp, gat = adapters
+    assert inp.slot_bids == gat.slot_bids
+    for slot in range(2):
+        a, b = _chain_blocks(inp, slot), _chain_blocks(gat, slot)
+        for key in a:
+            np.testing.assert_array_equal(a[key], b[key], err_msg=str(key))
+    for key in inp.cache:
+        np.testing.assert_array_equal(np.asarray(inp.cache[key]),
+                                      np.asarray(gat.cache[key]))
+
+
+def test_vlm_explicit_kernel_rejected():
+    """kernel=True is a contract; the grouped layout must refuse it loudly
+    instead of silently measuring the XLA path."""
+    cfg, params, extras = _setup("llama32_vision_90b")
+    with pytest.raises(ValueError, match="vlm"):
+        make_adapter(cfg, params, n_slots=1, max_len=8, extras=extras,
+                     paged=True, block_size=BS, kernel=True)
 
 
 # ==========================================================================
