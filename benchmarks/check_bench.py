@@ -94,6 +94,20 @@ SCHEMAS |= {
          "handoffs": numbers.Integral, "handoff_bytes": numbers.Integral,
          "routing": dict},
     ),
+    "cascade": (
+        {"bench": str, "block_size": numbers.Integral, "results": list,
+         "cascade_beats_flat_deep": bool},
+        {"lanes": numbers.Integral, "prefix_blocks": numbers.Integral,
+         "prefix_tokens": numbers.Integral,
+         "block_size": numbers.Integral, "groups": numbers.Integral,
+         "grouped_lanes": numbers.Integral,
+         "prefix_rows": numbers.Integral,
+         "prefix_rows_flat": numbers.Integral,
+         "inplace_tok_s": numbers.Real, "cascade_tok_s": numbers.Real,
+         "inplace_bytes_proxy": numbers.Integral,
+         "cascade_bytes_proxy": numbers.Integral,
+         "speedup": numbers.Real},
+    ),
     "prefix": (
         {"bench": str, "block_size": numbers.Integral, "results": list,
          "warm_beats_cold": bool},
@@ -296,6 +310,56 @@ def check(path: str) -> list[str]:
                     f"colocated all-slice tick p99 "
                     f"({colo['tick_p99_ms']:.3f} ms) under the prefill "
                     f"burst")
+    if bench == "cascade" and not errs:
+        # structural gates, exact: cascade attends each shared prefix once
+        # per *group*, so its per-layer prefix KV rows are O(prefix) —
+        # constant in the lane count at a fixed depth — while the flat
+        # tick's per-lane equivalent grows linearly with the lanes; the
+        # dataflow bytes proxy must undercut the flat tick's everywhere.
+        # Every cell must actually have grouped (a degraded cell times the
+        # flat executable twice and proves nothing).
+        bs = payload["block_size"]
+        for r in results:
+            cell = (f"{path}: cascade lanes={r['lanes']} "
+                    f"prefix_blocks={r['prefix_blocks']}")
+            if r["groups"] < 1 or r["grouped_lanes"] != r["lanes"]:
+                errs.append(f"{cell}: not all lanes grouped "
+                            f"({r['grouped_lanes']}/{r['lanes']} in "
+                            f"{r['groups']} groups)")
+            if r["prefix_rows"] != r["prefix_blocks"] * bs:
+                errs.append(f"{cell}: prefix rows {r['prefix_rows']} != "
+                            f"shared depth {r['prefix_blocks'] * bs} — "
+                            f"not O(prefix)")
+            if r["prefix_rows_flat"] != r["lanes"] * r["prefix_rows"]:
+                errs.append(f"{cell}: flat-equivalent prefix rows "
+                            f"{r['prefix_rows_flat']} != lanes x "
+                            f"{r['prefix_rows']}")
+            if r["cascade_bytes_proxy"] >= r["inplace_bytes_proxy"]:
+                errs.append(f"{cell}: cascade bytes proxy "
+                            f"({r['cascade_bytes_proxy']}) not below flat "
+                            f"({r['inplace_bytes_proxy']})")
+        # wall-clock gate at the deepest shared-prefix cell only: >= 4
+        # lanes over >= 4 shared blocks where the prefix dominates the
+        # tick, cascade must win outright.  Shallow cells pay the
+        # merge/scatter overhead without enough prefix to amortize it —
+        # reported for the trend, not gated (mirrors the sharded series'
+        # CPU wall-clock stance).
+        if results and not errs:
+            deep = max(results,
+                       key=lambda r: (r["prefix_blocks"], r["lanes"]))
+            if deep["lanes"] < 4 or deep["prefix_blocks"] < 4:
+                errs.append(f"{path}: deepest cascade cell "
+                            f"(lanes={deep['lanes']}, prefix_blocks="
+                            f"{deep['prefix_blocks']}) too shallow to "
+                            f"carry the wall-clock gate")
+            elif not payload["cascade_beats_flat_deep"] or \
+                    deep["cascade_tok_s"] < deep["inplace_tok_s"]:
+                errs.append(
+                    f"{path}: cascade tick lost to the flat tick at the "
+                    f"deepest shared-prefix cell (lanes={deep['lanes']}, "
+                    f"prefix_blocks={deep['prefix_blocks']}: "
+                    f"{deep['cascade_tok_s']:.1f} < "
+                    f"{deep['inplace_tok_s']:.1f} tok/s)")
     if bench == "prefix" and not errs:
         # trend gate: prefix-hit admission must actually get cheaper once a
         # meaningful prefix (>= 2 shared blocks) is resumed

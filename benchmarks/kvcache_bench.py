@@ -41,9 +41,24 @@ completing in both modes and every disagg request arriving via handoff.
 ``--disagg`` writes its own payload (``BENCH_disagg.json`` unless ``--out``
 is given) instead of the kvcache one.
 
+A fifth series, ``cascade`` (``--cascade``), is the PR 9 acceptance run:
+lanes sharing a radix prefix decode through the flat in-place tick
+(``backend="xla"``, every lane re-attends the whole prefix) and through
+the cascade tick (``backend="cascade"``, one multi-query prefix pass per
+shared chain + per-lane suffix passes + log-sum-exp merge) over a
+lanes x prefix-depth grid.  Gated quantities (check_bench): the grouping
+stats must show prefix KV rows O(prefix) — constant in the lane count at
+fixed depth, vs the flat tick's O(lanes x prefix) — the cascade bytes
+proxy must undercut the flat proxy everywhere, and at the deepest
+shared-prefix cell the cascade tick must win wall-clock.  Shallow cells
+are reported, not gated: the merge/scatter overhead only amortizes once
+the prefix dominates the tick (on CPU the crossover sits near 32 shared
+blocks at 8 lanes; a TPU's per-block DMA moves it earlier).  ``--cascade``
+writes its own payload (``BENCH_cascade.json`` by default).
+
 Run:  PYTHONPATH=src python benchmarks/kvcache_bench.py
       [--arch stablelm_3b] [--budget-slots 4] [--requests 32] [--smoke]
-      [--sharded | --disagg]
+      [--sharded | --disagg | --cascade]
 """
 import argparse
 import dataclasses
@@ -346,6 +361,81 @@ def disagg_series(cfg, params, *, block_size: int) -> dict:
     }
 
 
+def cascade_series(cfg, params, *, block_size: int, smoke: bool) -> dict:
+    """Flat in-place tick vs cascade tick over shared-prefix lane groups.
+
+    Each cell inserts ``lanes`` prompts that share a ``prefix_blocks``-deep
+    radix prefix (the pool dedups it to one refcounted chain) plus a
+    16-token distinct tail, then times *live* decode ticks — live, because
+    frozen at-capacity lanes drop out of grouping and the cascade tick
+    would degrade to the flat executable, timing nothing.  The tail length
+    and tick count are chosen so every lane stays inside one pow2 suffix
+    bucket: the whole run re-invokes a single jitted executable per
+    backend.  Alongside wall time the cell records the grouping stats
+    (``cascade_stats``) and the dataflow bytes proxy; those carry the
+    structural O(prefix) claim, which holds regardless of the platform's
+    wall-clock crossover.
+    """
+    lanes_list = (2, 4, 8)
+    prefix_list = (8, 32) if smoke else (8, 32, 64)
+    iters, tail = 4, 16
+    rng = np.random.default_rng(7)
+    results = []
+    for nbp in prefix_list:
+        shared = rng.integers(1, cfg.vocab, size=nbp * block_size,
+                              dtype=np.int32)
+        for lanes in lanes_list:
+            rec = {"lanes": lanes, "prefix_blocks": nbp,
+                   "prefix_tokens": nbp * block_size,
+                   "block_size": block_size}
+            for mode, backend in (("inplace", "xla"),
+                                  ("cascade", "cascade")):
+                ad = make_adapter(cfg, params, n_slots=lanes,
+                                  max_len=nbp * block_size + 48,
+                                  paged=True, block_size=block_size,
+                                  backend=backend)
+                for slot in range(lanes):
+                    suffix = rng.integers(1, cfg.vocab, size=tail,
+                                          dtype=np.int32)
+                    ad.insert(slot, np.concatenate([shared, suffix]),
+                              max_new=24)
+                toks = np.zeros(lanes, np.int32)
+                active = np.ones(lanes, bool)
+                for _ in range(2):        # compile + settle suffix bucket
+                    ad.decode(toks, active)
+                if backend == "cascade":
+                    if ad.last_groups < 1:
+                        raise SystemExit(
+                            f"cascade cell lanes={lanes} nbp={nbp}: prefix "
+                            f"sharing did not form a group — the series "
+                            f"would time the flat degrade path")
+                    rec.update(ad.cascade_stats())
+                rec[f"{mode}_bytes_proxy"] = ad.tick_bytes_proxy()[mode]
+                dt = np.inf
+                for _ in range(3):        # best-of-3: see decode_tick
+                    t0 = time.perf_counter()
+                    for _ in range(iters):
+                        ad.decode(toks, active)   # live, host-synced
+                    dt = min(dt, time.perf_counter() - t0)
+                rec[f"{mode}_tok_s"] = lanes * iters / max(dt, 1e-9)
+            rec["speedup"] = rec["cascade_tok_s"] / max(
+                rec["inplace_tok_s"], 1e-9)
+            common.emit(f"cascade_P{nbp}_L{lanes}",
+                        1e6 * lanes / rec["cascade_tok_s"],
+                        f"{rec['speedup']:.2f}x_vs_flat,"
+                        f"{rec['prefix_rows']}v{rec['prefix_rows_flat']}"
+                        f"prefix_rows")
+            results.append(rec)
+    deep = max(results,
+               key=lambda r: (r["prefix_blocks"], r["lanes"]))
+    return {
+        "bench": "cascade",
+        "block_size": block_size,
+        "results": results,
+        "cascade_beats_flat_deep": deep["speedup"] >= 1.0,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm_3b")
@@ -367,6 +457,11 @@ def main():
                          "payload (BENCH_disagg.json by default); run "
                          "under XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8")
+    ap.add_argument("--cascade", action="store_true",
+                    help="run the shared-prefix cascade-vs-flat decode "
+                         "tick series instead of the kvcache bench and "
+                         "write its own payload (BENCH_cascade.json by "
+                         "default)")
     ap.add_argument("--expect-devices", type=int, default=0,
                     help="fail fast unless jax sees at least this many "
                          "devices (the sharded CI job passes 8 so a "
@@ -377,6 +472,7 @@ def main():
     if not args.out:
         args.out = str(pathlib.Path(__file__).parent /
                        ("BENCH_disagg.json" if args.disagg
+                        else "BENCH_cascade.json" if args.cascade
                         else "BENCH_kvcache.json"))
     if args.smoke:
         args.requests, args.max_len, args.budget_slots = 8, 32, 2
@@ -396,6 +492,15 @@ def main():
         if not payload["disagg_beats_colocated"]:
             print("WARNING: disagg decode ticks did not beat the "
                   "colocated gateway under the prefill burst")
+        return
+    if args.cascade:
+        payload = cascade_series(cfg, params, block_size=args.block_size,
+                                 smoke=args.smoke)
+        payload["arch"] = args.arch
+        common.emit_json(args.out, payload)
+        if not payload["cascade_beats_flat_deep"]:
+            print("WARNING: cascade tick did not beat the flat tick at "
+                  "the deepest shared-prefix cell")
         return
     arrivals = make_trace(cfg, args.requests, args.max_len, args.max_new)
     warm_lens = tuple(sorted({len(a.payload) for a in arrivals}))

@@ -20,10 +20,10 @@ import jax  # noqa: E402
 from repro import configs  # noqa: E402
 from repro.models import lm  # noqa: E402
 from repro.serve.gateway import frontend as fe  # noqa: E402
-from repro.serve.gateway.gateway import (GatewayConfig, MicroBatchGateway,  # noqa: E402
-                                         PromptGateway)
+from repro.serve.gateway.gateway import (GatewayConfig,  # noqa: E402
+                                         MicroBatchGateway)
 from repro.serve.gateway.sensors import FleetConfig, SensorFleet  # noqa: E402
-from repro.serve.gateway.slots import ContinuousBatcher, make_adapter  # noqa: E402
+from repro.serve.spec import ServeSpec, make_gateway  # noqa: E402
 
 
 def run_frames(events, frontend: str, bits: int, duration: float,
@@ -59,6 +59,12 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="paged KV slots (block pool + prefix sharing); "
                          "no-op for rwkv, which has O(1) state")
+    ap.add_argument("--backend", default=None,
+                    choices=("gather", "xla", "pallas", "cascade"),
+                    help="paged decode-tick attention dataflow (with "
+                         "--paged); default probes the platform.  "
+                         "'cascade' attends shared radix prefixes once "
+                         "per group instead of once per lane")
     ap.add_argument("--trace", action="store_true",
                     help="record per-request lifecycle spans + interval "
                          "metrics and export a Chrome trace-event JSON "
@@ -155,13 +161,12 @@ def main():
             extras = lambda: {"vision_embed": jnp.zeros(    # noqa: E731
                 (1, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)}
         paged = args.paged and cfg.family != "rwkv"
-        batcher = ContinuousBatcher(
-            make_adapter(cfg, params, n_slots=args.slots, max_len=64,
-                         extras=extras, paged=paged, block_size=8))
-        pgw = PromptGateway(batcher, max_new_tokens=8,
-                            tracer=tracer if trace_lm else None,
-                            metrics=metrics,
-                            slo=slo_mon)
+        spec = ServeSpec(n_slots=args.slots, max_len=64, paged=paged,
+                         block_size=8, backend=args.backend if paged
+                         else None, max_new_tokens=8,
+                         tracer=tracer if trace_lm else None,
+                         metrics=metrics, slo=slo_mon)
+        pgw = make_gateway(cfg, params, spec, extras=extras)
         pgw.warmup(fleet.cfg.prompt_lens, cfg.vocab)
         tel = pgw.run(events)
         if trace_lm:

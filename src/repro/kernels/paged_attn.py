@@ -26,7 +26,20 @@ sliding alike — through one kernel.
 Validated in interpret mode against ``attend_decode_paged`` over
 shape/dtype/table/window permutations (tests/test_paged_attn.py), and
 wired into the serving tick by ``engine.decode_step_paged`` (the
-``kernel=True`` path of the paged slot adapter).
+``backend="pallas"`` path of the paged slot adapter).
+
+The cascade extension (``backend="cascade"``) splits decode attention over
+a shared radix prefix and per-lane divergent suffixes and merges the
+partial online-softmax states by log-sum-exp: ``cascade_prefix_attention``
+runs one multi-query pass per shared chain (prefix KV streamed once per
+*group*, not once per lane), ``paged_decode_attention_with_state`` is this
+file's flat sweep restarted at an absolute position offset ``q0`` and
+returning its *unnormalized* (acc, m, l) state, and ``merge_attn_states``
+fuses the two states and normalizes.  Unlike the flat kernel, the state
+kernels zero masked probabilities (``p *= valid``) so an all-masked sweep
+yields the empty state (m = NEG_INF, l = 0) that the merge drops exactly —
+the flat kernel can leave garbage in fully-masked lanes because it
+normalizes in place and its callers mask those lanes out.
 """
 from __future__ import annotations
 
@@ -219,3 +232,278 @@ def paged_decode_attention(q, k_arena, v_arena, tables, lens, *,
         out_shape=jax.ShapeDtypeStruct((B, Hq, D), v_arena.dtype),
         interpret=interpret,
     )(*operands)
+
+
+def _paged_state_kernel(tables_ref, lens_ref, win_ref, q0_ref, q_ref, k_ref,
+                        v_ref, *rest, bs: int, nb: int, n_rep: int,
+                        scale: float, splice: bool):
+    if splice:
+        k1_ref, v1_ref, acc_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        acc_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = rest
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)              # (Hq, D)
+    k = k_ref[0].astype(jnp.float32)              # (bs, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)
+    Hq, D = q.shape
+    Hkv = k.shape[1]
+    # absolute positions: this sweep covers [q0, q0 + nb*bs) of the chain
+    pos = q0_ref[b] + j * bs + \
+        jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    if splice:
+        here = (pos == lens_ref[b] - 1).reshape(bs, 1, 1)
+        k = jnp.where(here, k1_ref[0].astype(jnp.float32)[None], k)
+        v = jnp.where(here, v1_ref[0].astype(jnp.float32)[None], v)
+    kt = jnp.swapaxes(k, 0, 1)                    # (Hkv, bs, D)
+    qh = q.reshape(Hkv, n_rep, D)
+    s = jax.lax.dot_general(qh, kt, (((2,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32) * scale
+    s = s.reshape(Hq, bs)
+    valid = (pos < lens_ref[b]) & (pos >= lens_ref[b] - win_ref[0])
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    # unlike the flat kernel, zero masked probabilities: an all-masked
+    # sweep must return the EMPTY state (m = NEG_INF, l = 0) — with both
+    # operands at NEG_INF, exp(s - m) is exp(0) = 1 per position, which
+    # would poison the cascade merge with a phantom uniform distribution
+    p = jnp.exp(s - m_new[:, None]) * valid.astype(jnp.float32)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_prev * corr + jnp.sum(p, axis=-1)
+    m_scr[...] = m_new
+    vt = jnp.swapaxes(v, 0, 1)                    # (Hkv, bs, D)
+    ph = p.reshape(Hkv, n_rep, bs)
+    o = jax.lax.dot_general(ph, vt, (((2,), (1,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + o.reshape(Hq, D)
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        acc_ref[0] = acc_scr[...]
+        m_ref[0] = m_scr[...]
+        l_ref[0] = l_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_with_state(q, k_arena, v_arena, tables, lens, *,
+                                      window=None, q0=None, new_kv=None,
+                                      interpret: bool | None = None):
+    """The flat paged sweep, restarted at an offset and left unnormalized.
+
+    Same operands as :func:`paged_decode_attention` plus ``q0``: (B,)
+    int32 absolute position of each lane's first table entry — the table
+    names the lane's *divergent suffix* blocks and positions are
+    ``q0[b] + j*bs + i``, so the ``lens``/``window`` bounds select exactly
+    the suffix share of the flat kernel's key set (the group prefix pass
+    covers ``[0, q0)``; disjoint and complete).  Returns the float32
+    online-softmax state ``(acc (B, Hq, D), m (B, Hq), l (B, Hq))`` for
+    :func:`merge_attn_states`; the new-token row still splices at
+    ``lens - 1``, which always falls in the suffix (the shared prefix is
+    full blocks only).
+    """
+    from repro.kernels.ops import resolve_interpret
+    interpret = resolve_interpret(interpret)
+    B, Hq, D = q.shape
+    _, bs, Hkv, _ = k_arena.shape
+    nb = tables.shape[1]
+    n_rep = Hq // Hkv
+    scale = D ** -0.5
+    if window is None:
+        window = NO_WINDOW
+    win = jnp.where(jnp.asarray(window, jnp.int32) == 0, NO_WINDOW,
+                    jnp.asarray(window, jnp.int32)).reshape(1)
+    if q0 is None:
+        q0 = jnp.zeros((B,), jnp.int32)
+    row = pl.BlockSpec((1, Hq, D), lambda b, j, t, ln, w, z: (b, 0, 0))
+    hrow = pl.BlockSpec((1, Hq), lambda b, j, t, ln, w, z: (b, 0))
+    blk = pl.BlockSpec((1, bs, Hkv, D),
+                       lambda b, j, t, ln, w, z: (t[b, j], 0, 0, 0))
+    kv_row = pl.BlockSpec((1, Hkv, D), lambda b, j, t, ln, w, z: (b, 0, 0))
+    splice = new_kv is not None
+    operands = (jnp.asarray(tables, jnp.int32), jnp.asarray(lens, jnp.int32),
+                win, jnp.asarray(q0, jnp.int32), q, k_arena, v_arena)
+    in_specs = [row, blk, blk]
+    if splice:
+        operands += tuple(new_kv)
+        in_specs += [kv_row, kv_row]
+    return pl.pallas_call(
+        functools.partial(_paged_state_kernel, bs=bs, nb=nb, n_rep=n_rep,
+                          scale=scale, splice=splice),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(B, nb),
+            in_specs=in_specs,
+            out_specs=[row, hrow, hrow],
+            scratch_shapes=[
+                pltpu.VMEM((Hq,), jnp.float32),      # running max
+                pltpu.VMEM((Hq,), jnp.float32),      # running sum
+                pltpu.VMEM((Hq, D), jnp.float32),    # output accumulator
+            ],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((B, Hq, D), jnp.float32),
+                   jax.ShapeDtypeStruct((B, Hq), jnp.float32),
+                   jax.ShapeDtypeStruct((B, Hq), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
+
+
+def _cascade_prefix_kernel(tables_ref, glen_ref, win_ref, ll_ref, q_ref,
+                           k_ref, v_ref, acc_ref, m_ref, l_ref, m_scr,
+                           l_scr, acc_scr, *, bs: int, nb: int, n_rep: int,
+                           scale: float):
+    g = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)              # (Lc, Hq, D)
+    k = k_ref[0].astype(jnp.float32)              # (bs, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)
+    Lc, Hq, D = q.shape
+    Hkv = k.shape[1]
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bs), 2)
+    # one key set per group, one validity row per lane: the chain bound is
+    # shared (group_len), the window bound is each lane's own length
+    valid = pos < glen_ref[g]                                  # (1, 1, bs)
+    lane_len = ll_ref[0].reshape(Lc, 1, 1)                     # (Lc, 1, 1)
+    valid = valid & (pos >= lane_len - win_ref[0])             # (Lc, 1, bs)
+
+    kt = jnp.swapaxes(k, 0, 1)                    # (Hkv, bs, D)
+    qh = q.reshape(Lc, Hkv, n_rep, D).transpose(1, 0, 2, 3) \
+        .reshape(Hkv, Lc * n_rep, D)
+    s = jax.lax.dot_general(qh, kt, (((2,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32) * scale
+    s = s.reshape(Hkv, Lc, n_rep, bs).transpose(1, 0, 2, 3) \
+        .reshape(Lc, Hq, bs)
+    valid = jnp.broadcast_to(valid, (Lc, Hq, bs))
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None]) * valid.astype(jnp.float32)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_prev * corr + jnp.sum(p, axis=-1)
+    m_scr[...] = m_new
+    vt = jnp.swapaxes(v, 0, 1)                    # (Hkv, bs, D)
+    ph = p.reshape(Lc, Hkv, n_rep, bs).transpose(1, 0, 2, 3) \
+        .reshape(Hkv, Lc * n_rep, bs)
+    o = jax.lax.dot_general(ph, vt, (((2,), (1,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)
+    o = o.reshape(Hkv, Lc, n_rep, D).transpose(1, 0, 2, 3) \
+        .reshape(Lc, Hq, D)
+    acc_scr[...] = acc_scr[...] * corr[..., None] + o
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        acc_ref[0] = acc_scr[...]
+        m_ref[0] = m_scr[...]
+        l_ref[0] = l_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cascade_prefix_attention(qg, k_arena, v_arena, group_tables, group_len,
+                             lane_lens, *, window=None,
+                             interpret: bool | None = None):
+    """One multi-query pass per shared-prefix chain.
+
+    qg: (G, Lc, Hq, D) the grouped lanes' query rows; group_tables:
+    (G, npre) int32 shared chain block ids (trash-padded); group_len: (G,)
+    int32 prefix tokens (0 for pad groups — their state comes back empty);
+    lane_lens: (G, Lc) int32 each lane's cache length, which anchors the
+    sliding-window bound ``pos >= lane_len - window`` when the window
+    clips into the shared prefix.  Grid (G, npre): each chain's KV
+    streams out of the arena ONCE and every lane of the group attends it
+    from the Lc axis.  Returns float32 ``(acc (G, Lc, Hq, D), m, l
+    (G, Lc, Hq))`` — unnormalized, for :func:`merge_attn_states` after
+    the caller scatters group slots back to lanes.
+    """
+    from repro.kernels.ops import resolve_interpret
+    interpret = resolve_interpret(interpret)
+    G, Lc, Hq, D = qg.shape
+    _, bs, Hkv, _ = k_arena.shape
+    nb = group_tables.shape[1]
+    n_rep = Hq // Hkv
+    scale = D ** -0.5
+    if window is None:
+        window = NO_WINDOW
+    win = jnp.where(jnp.asarray(window, jnp.int32) == 0, NO_WINDOW,
+                    jnp.asarray(window, jnp.int32)).reshape(1)
+    qrow = pl.BlockSpec((1, Lc, Hq, D), lambda g, j, t, gl, w: (g, 0, 0, 0))
+    lrow = pl.BlockSpec((1, Lc), lambda g, j, t, gl, w: (g, 0))
+    blk = pl.BlockSpec((1, bs, Hkv, D),
+                       lambda g, j, t, gl, w: (t[g, j], 0, 0, 0))
+    grow = pl.BlockSpec((1, Lc, Hq, D), lambda g, j, t, gl, w: (g, 0, 0, 0))
+    hrow = pl.BlockSpec((1, Lc, Hq), lambda g, j, t, gl, w: (g, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_cascade_prefix_kernel, bs=bs, nb=nb, n_rep=n_rep,
+                          scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(G, nb),
+            in_specs=[lrow, qrow, blk, blk],
+            out_specs=[grow, hrow, hrow],
+            scratch_shapes=[
+                pltpu.VMEM((Lc, Hq), jnp.float32),     # running max
+                pltpu.VMEM((Lc, Hq), jnp.float32),     # running sum
+                pltpu.VMEM((Lc, Hq, D), jnp.float32),  # output accumulator
+            ],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((G, Lc, Hq, D), jnp.float32),
+                   jax.ShapeDtypeStruct((G, Lc, Hq), jnp.float32),
+                   jax.ShapeDtypeStruct((G, Lc, Hq), jnp.float32)],
+        interpret=interpret,
+    )(jnp.asarray(group_tables, jnp.int32), jnp.asarray(group_len, jnp.int32),
+      win, jnp.asarray(lane_lens, jnp.int32), qg, k_arena, v_arena)
+
+
+def _merge_kernel(acc1_ref, m1_ref, l1_ref, acc2_ref, m2_ref, l2_ref, o_ref):
+    m1 = m1_ref[0]
+    m2 = m2_ref[0]
+    m = jnp.maximum(m1, m2)
+    c1 = jnp.exp(m1 - m)
+    c2 = jnp.exp(m2 - m)
+    l = c1 * l1_ref[0] + c2 * l2_ref[0]
+    acc = c1[:, None] * acc1_ref[0] + c2[:, None] * acc2_ref[0]
+    o_ref[0] = acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_attn_states(acc1, m1, l1, acc2, m2, l2, *,
+                      interpret: bool | None = None):
+    """Log-sum-exp merge of two partial softmax states, then normalize.
+
+    acc: (B, Hq, D) float32 unnormalized accumulators; m, l: (B, Hq)
+    float32 running max / sum.  The Pallas counterpart of
+    ``nn.attention.merge_softmax_states`` + the final ``acc / max(l,
+    tiny)`` division: an empty side (m = NEG_INF, l = 0) drops out
+    through exp underflow, both sides empty yields zeros.  Returns
+    (B, Hq, D) float32.
+    """
+    from repro.kernels.ops import resolve_interpret
+    interpret = resolve_interpret(interpret)
+    B, Hq, D = acc1.shape
+    arow = pl.BlockSpec((1, Hq, D), lambda b: (b, 0, 0))
+    hrow = pl.BlockSpec((1, Hq), lambda b: (b, 0))
+    return pl.pallas_call(
+        _merge_kernel,
+        grid=(B,),
+        in_specs=[arow, hrow, hrow, arow, hrow, hrow],
+        out_specs=arow,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), jnp.float32),
+        interpret=interpret,
+    )(acc1, m1, l1, acc2, m2, l2)

@@ -525,8 +525,8 @@ def _attn_apply(cfg: LMConfig, p, x, positions, *, causal=True, window=0,
 
 
 def attn_decode_paged(cfg: LMConfig, p, x1, k_blocks, v_blocks, tables, pos,
-                      *, window=0, kernel=False, interpret=None,
-                      scales=None):
+                      *, window=0, kernel=None, interpret=None,
+                      scales=None, backend=None, cascade=None):
     """One-token decode attention for a batch of slots, reading K/V in
     place from one layer's slice of the paged block arena.
 
@@ -556,7 +556,14 @@ def attn_decode_paged(cfg: LMConfig, p, x1, k_blocks, v_blocks, tables, pos,
     in-place quant decode stays bitwise against the gather-tick oracle.
     Returns (out, k1q, v1q, k1_scale, v1_scale) in that case; the Pallas
     kernel path does not cover the quant layout (assert).
+
+    ``backend`` ("xla" | "pallas" | "cascade", plus ``cascade=`` group
+    metadata for the last — see :mod:`repro.serve.backend`) is the read-
+    path dispatch forwarded to :func:`nn.attention.attend_decode_paged`;
+    ``kernel=True`` survives as the deprecated alias for "pallas".
     """
+    if backend is None:
+        backend = "pallas" if kernel else "xla"
     B = x1.shape[0]
     q = _proj(x1, p["wq"], p.get("bq")).reshape(B, 1, cfg.n_heads, cfg.d_head)
     k1 = _proj(x1, p["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.d_head)
@@ -568,7 +575,8 @@ def attn_decode_paged(cfg: LMConfig, p, x1, k_blocks, v_blocks, tables, pos,
         k1 = rope.apply_rope(k1, posb, cfg.rope_theta)
     kb, vb = k_blocks[:, 0], v_blocks[:, 0]      # (num_blocks, bs, Hkv, Dh)
     if scales is not None:
-        assert not kernel, "paged_attn kernel: int8 kv_quant unsupported"
+        assert backend == "xla", \
+            "only the XLA reference covers the int8 kv_quant layout"
         from repro.serve import kvquant
         k1q, k1s = kvquant.quantize(k1)
         v1q, v1s = kvquant.quantize(v1)
@@ -580,16 +588,11 @@ def attn_decode_paged(cfg: LMConfig, p, x1, k_blocks, v_blocks, tables, pos,
         out = _proj(o.reshape(B, 1, cfg.n_heads * cfg.d_head), p["wo"],
                     p.get("bo"))
         return out, k1q[:, 0], v1q[:, 0], k1s[:, 0], v1s[:, 0]
-    if kernel:
-        from repro.kernels.paged_attn import paged_decode_attention
-        o = paged_decode_attention(q[:, 0], kb, vb, tables, pos + 1,
-                                   window=window,
-                                   new_kv=(k1[:, 0], v1[:, 0]),
-                                   interpret=interpret)[:, None]
-    else:
-        o = attention.attend_decode_paged(q, kb, vb, tables, pos + 1,
-                                          window=window,
-                                          new_kv=(k1[:, 0], v1[:, 0]))
+    o = attention.attend_decode_paged(q, kb, vb, tables, pos + 1,
+                                      window=window,
+                                      new_kv=(k1[:, 0], v1[:, 0]),
+                                      backend=backend, cascade=cascade,
+                                      interpret=interpret)
     out = _proj(o.reshape(B, 1, cfg.n_heads * cfg.d_head), p["wo"],
                 p.get("bo"))
     return out, k1[:, 0], v1[:, 0]

@@ -376,7 +376,8 @@ def gather_paged_kv(arena, block_table) -> jax.Array:
 
 def attend_decode_paged(q, k_arena, v_arena, block_table, cache_len, *,
                         window=0, new_kv=None, scales=None,
-                        out_dtype=None) -> jax.Array:
+                        out_dtype=None, backend=None, cascade=None,
+                        interpret=None) -> jax.Array:
     """One-token decode attention against a *paged* cache (single layer).
 
     q: (B, 1, Hq, D); k_arena, v_arena: (num_blocks, bs, Hkv, D);
@@ -399,11 +400,31 @@ def attend_decode_paged(q, k_arena, v_arena, block_table, cache_len, *,
     dequantized current row — exactly what the dense quant tick attends
     over after writing the quantized row.
 
-    Gathers each row's block chain into the dense layout and applies the
-    same masked softmax as :func:`attend_decode`, with a per-row length
-    vector instead of a shared scalar.  This is the XLA reference semantics
-    for ``kernels/paged_attn.py``.
+    ``backend`` is the per-layer read-path dispatch (see
+    :mod:`repro.serve.backend`): ``None``/``"xla"`` gathers each row's
+    block chain into the dense layout and applies the same masked softmax
+    as :func:`attend_decode` with a per-row length vector; ``"pallas"``
+    routes to :func:`repro.kernels.paged_attn.paged_decode_attention`
+    (no gather — the block table rides in as a scalar-prefetch operand);
+    ``"cascade"`` routes to :func:`attend_decode_cascade` with the group
+    metadata in ``cascade``.  The ``"xla"`` body is the reference
+    semantics the other two are pinned against.
     """
+    if backend == "pallas":
+        from repro.kernels.paged_attn import paged_decode_attention
+        assert scales is None, "pallas backend does not cover kv_quant"
+        nk = None if new_kv is None else (new_kv[0], new_kv[1])
+        out = paged_decode_attention(q[:, 0], k_arena, v_arena, block_table,
+                                     cache_len, window=window, new_kv=nk,
+                                     interpret=interpret)
+        return out[:, None]
+    if backend == "cascade":
+        assert cascade is not None, "cascade backend needs group metadata"
+        return attend_decode_cascade(q, k_arena, v_arena, cascade, cache_len,
+                                     window=window, new_kv=new_kv,
+                                     scales=scales, out_dtype=out_dtype,
+                                     interpret=interpret)
+    assert backend in (None, "xla"), f"unknown attention backend {backend!r}"
     B, _, Hq, D = q.shape
     Hkv = k_arena.shape[2]
     n_rep = Hq // Hkv
@@ -434,3 +455,167 @@ def attend_decode_paged(q, k_arena, v_arena, block_table, cache_len, *,
     out = jnp.einsum("bhrs,bshd->bhrd", p.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
     return out.reshape(B, 1, Hq, D).astype(v.dtype)
+
+
+def merge_softmax_states(acc1, m1, l1, acc2, m2, l2):
+    """Log-sum-exp merge of two partial online-softmax states.
+
+    Each side carries the flash-attention ``(acc, m, l)`` triple over its
+    own key set: ``m = max_j s_j`` (``NEG_INF`` for an empty set),
+    ``l = sum_j exp(s_j - m)`` (0 for empty), ``acc = sum_j exp(s_j - m)
+    v_j`` (unnormalized; trailing feature axis).  Returns the merged
+    triple over the union of the two key sets; the caller normalizes once
+    with ``acc / max(l, tiny)``.  An empty side drops out exactly:
+    ``exp(NEG_INF - m)`` underflows to zero against a finite ``m``, and
+    with both sides empty every term is already zero — so a lane with no
+    shared prefix reproduces its suffix-only softmax state bit-for-bit.
+    """
+    m = jnp.maximum(m1, m2)
+    c1 = jnp.exp(m1 - m)
+    c2 = jnp.exp(m2 - m)
+    l = c1 * l1 + c2 * l2
+    acc = c1[..., None] * acc1 + c2[..., None] * acc2
+    return acc, m, l
+
+
+def _softmax_state(s, valid):
+    """Masked online-softmax state: s (..., S) f32 scores, valid (..., S)
+    bool.  Returns (p, m, l) with p the unnormalized probabilities (zero
+    where invalid — a fully-masked row yields l == 0, not a uniform
+    distribution, which is what lets the merge drop it exactly)."""
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None]) * valid
+    return p, m, jnp.sum(p, axis=-1)
+
+
+def attend_decode_cascade(q, k_arena, v_arena, cascade, cache_len, *,
+                          window=0, new_kv=None, scales=None,
+                          out_dtype=None, kernel=False,
+                          interpret=None) -> jax.Array:
+    """Two-level shared-prefix decode attention (flashinfer-style cascade).
+
+    Lanes sharing an indexed radix prefix chain attend it *once as a
+    group*: one multi-query pass over the shared prefix KV (gathered once
+    per group instead of once per lane), a per-lane pass over each
+    divergent suffix, and a log-sum-exp merge of the two partial softmax
+    states (:func:`merge_softmax_states`).  ``cascade`` carries the
+    host-built group metadata, padded to static bucket shapes:
+
+      group_tables  (G, npre)  int32  shared-prefix block ids, trash-padded
+      group_len     (G,)       int32  prefix tokens (multiple of bs; 0 pads)
+      group_lanes   (G, Lc)    int32  lane ids per group, 0-padded
+      group_mask    (G, Lc)    bool   which lane slots are real
+      lane_q0       (B,)       int32  per-lane prefix tokens (0 = ungrouped)
+      suffix_tables (B, nsuf)  int32  per-lane divergent-suffix block ids
+
+    Positions ``[0, lane_q0)`` are covered by the lane's group prefix
+    pass and ``[lane_q0, cache_len)`` by its suffix pass — disjoint and
+    complete, with absolute positions throughout, so the same
+    ``cache_len``/``window`` masking as flat :func:`attend_decode_paged`
+    selects exactly the same key set.  A window that clips into the
+    shared prefix masks the clipped prefix positions inside the group
+    pass (per-lane lengths broadcast against the shared keys); a window
+    entirely inside the suffix empties the lane's prefix state, which the
+    merge then drops exactly.  Scores and accumulators are float32; the
+    flat path normalizes *before* its value contraction and this one
+    after, so flat-vs-cascade parity is last-ulp tolerance rather than
+    bitwise (docs/kvcache.md §Cascade decode — the serving adapter
+    degrades to the flat executable when no chain is shared, which *is*
+    bitwise).
+
+    ``kernel=True`` runs the three stages through the Pallas kernels
+    (``kernels.paged_attn.cascade_prefix_attention`` /
+    ``paged_decode_attention_with_state`` / ``merge_attn_states``)
+    instead of the XLA math; the kernels-interpret suite pins the two
+    against each other.
+    """
+    assert scales is None, "cascade does not cover the kv_quant layout"
+    B, _, Hq, D = q.shape
+    Hkv = k_arena.shape[2]
+    n_rep = Hq // Hkv
+    scale = D ** -0.5
+    group_tables = cascade["group_tables"]
+    group_len = cascade["group_len"]
+    group_lanes = cascade["group_lanes"]
+    group_mask = cascade["group_mask"]
+    lane_q0 = cascade["lane_q0"]
+    suffix_tables = cascade["suffix_tables"]
+    G, Lc = group_lanes.shape
+
+    if kernel:
+        from repro.kernels import paged_attn as pk
+        qg = q[:, 0][group_lanes]                       # (G, Lc, Hq, D)
+        lane_len = cache_len[group_lanes]
+        acc1g, m1g, l1g = pk.cascade_prefix_attention(
+            qg, k_arena, v_arena, group_tables, group_len,
+            lane_len.astype(jnp.int32), window=window, interpret=interpret)
+        nk = None if new_kv is None else (new_kv[0], new_kv[1])
+        acc2, m2, l2 = pk.paged_decode_attention_with_state(
+            q[:, 0], k_arena, v_arena, suffix_tables, cache_len,
+            window=window, q0=lane_q0, new_kv=nk, interpret=interpret)
+    else:
+        # -- shared-prefix pass: one gather + one multi-query attention per
+        # group; every lane of the group rides in the Lc axis
+        qg = q[:, 0][group_lanes].reshape(G, Lc, Hkv, n_rep, D)
+        kp = gather_paged_kv(k_arena, group_tables)     # (G, Sp, Hkv, D)
+        vp = gather_paged_kv(v_arena, group_tables)
+        s1 = jnp.einsum("gchrd,gshd->gchrs", qg, kp,
+                        preferred_element_type=jnp.float32) * scale
+        posp = jnp.arange(kp.shape[1])
+        valid1 = posp[None, None, :] < group_len[:, None, None]  # (G,1,Sp)
+        valid1 = jnp.broadcast_to(valid1, (G, Lc, kp.shape[1]))
+        if not _static_zero(window):
+            lane_len = cache_len[group_lanes]           # (G, Lc)
+            valid1 &= posp[None, None, :] >= (lane_len[:, :, None] - window)
+        p1, m1g, l1g = _softmax_state(
+            s1.astype(jnp.float32), valid1[:, :, None, None, :])
+        acc1g = jnp.einsum("gchrs,gshd->gchrd", p1, vp.astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+        acc1g = acc1g.reshape(G, Lc, Hq, D)
+        m1g = m1g.reshape(G, Lc, Hq)
+        l1g = l1g.reshape(G, Lc, Hq)
+        # -- divergent-suffix pass: per-lane, absolute positions from q0
+        qh = q[:, 0].reshape(B, Hkv, n_rep, D)
+        ks = gather_paged_kv(k_arena, suffix_tables)    # (B, Ss, Hkv, D)
+        vs = gather_paged_kv(v_arena, suffix_tables)
+        if new_kv is not None:
+            k1, v1 = new_kv
+            rows = jnp.arange(B)
+            loc = cache_len - 1 - lane_q0
+            ks = ks.at[rows, loc].set(k1.astype(ks.dtype), mode="drop")
+            vs = vs.at[rows, loc].set(v1.astype(vs.dtype), mode="drop")
+        s2 = jnp.einsum("bhrd,bshd->bhrs", qh, ks,
+                        preferred_element_type=jnp.float32) * scale
+        pos_abs = lane_q0[:, None] + jnp.arange(ks.shape[1])     # (B, Ss)
+        valid2 = pos_abs < cache_len[:, None]
+        if not _static_zero(window):
+            valid2 &= pos_abs >= (cache_len - window)[:, None]
+        p2, m2, l2 = _softmax_state(
+            s2.astype(jnp.float32), valid2[:, None, None, :])
+        acc2 = jnp.einsum("bhrs,bshd->bhrd", p2, vs.astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+        acc2 = acc2.reshape(B, Hq, D)
+        m2 = m2.reshape(B, Hq)
+        l2 = l2.reshape(B, Hq)
+
+    # -- scatter group states back to lanes (each real lane sits in exactly
+    # one group slot, so the adds are pure placement; padded slots are
+    # zeroed / NEG_INF'd here rather than inside the passes)
+    flat = group_lanes.reshape(-1)
+    fmask = group_mask.reshape(-1)
+    acc1 = jnp.zeros((B, Hq, D), jnp.float32).at[flat].add(
+        jnp.where(fmask[:, None, None], acc1g.reshape(-1, Hq, D), 0.0))
+    l1 = jnp.zeros((B, Hq), jnp.float32).at[flat].add(
+        jnp.where(fmask[:, None], l1g.reshape(-1, Hq), 0.0))
+    m1 = jnp.full((B, Hq), NEG_INF, jnp.float32).at[flat].max(
+        jnp.where(fmask[:, None], m1g.reshape(-1, Hq), NEG_INF))
+
+    if kernel:
+        from repro.kernels import paged_attn as pk
+        out = pk.merge_attn_states(acc1, m1, l1, acc2, m2, l2,
+                                   interpret=interpret)
+    else:
+        acc, _, l = merge_softmax_states(acc1, m1, l1, acc2, m2, l2)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, 1, Hq, D).astype(out_dtype or v_arena.dtype)

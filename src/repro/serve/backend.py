@@ -1,0 +1,88 @@
+"""The one attention-backend dispatch surface for the paged decode tick.
+
+Five PRs of growth left backend selection smeared across two booleans:
+``inplace=`` picked the tick (gather-oracle vs in-place) and ``kernel=``
+picked the read path inside it (XLA reference vs Pallas), with ``None``
+meaning "probe the platform".  This module replaces that with one enum —
+
+    backend="gather"   the PR 2 gather tick (parity oracle; gathers the
+                       full chain, vmapped dense decode, rescatter)
+    backend="xla"      the in-place tick, XLA reference attention read
+    backend="pallas"   the in-place tick, Pallas paged-attention kernel
+                       (Mosaic on TPU; interpreter under
+                       REPRO_KERNELS_INTERPRET=1)
+    backend="cascade"  the in-place tick with shared-prefix cascade
+                       grouping (one multi-query pass per shared radix
+                       chain + per-lane suffix pass, log-sum-exp merged;
+                       degrades to the flat "xla" executable on ticks
+                       with no chain shared by >= 2 lanes)
+
+— threaded through ``make_adapter`` / ``PagedKVSlotAdapter`` /
+``engine.decode_step_paged`` / ``attention.attend_decode_paged``.  The old
+booleans survive as deprecated aliases: ``resolve_backend`` maps them and
+the public constructors warn (``DeprecationWarning``); alias<->enum
+equivalence is pinned in tests/test_cascade.py.
+"""
+from __future__ import annotations
+
+import warnings
+
+BACKENDS = ("gather", "xla", "pallas", "cascade")
+
+# backends that run the in-place tick (everything but the gather oracle)
+INPLACE_BACKENDS = ("xla", "pallas", "cascade")
+
+
+def auto_backend() -> str:
+    """The platform default for the in-place tick: the Pallas kernel under
+    Mosaic on a real TPU, the XLA reference everywhere else — the same
+    probe the deprecated ``kernel=None`` made, honoring
+    ``REPRO_KERNELS_INTERPRET`` through ``kernels.ops.default_interpret``.
+    """
+    import jax
+
+    from repro.kernels.ops import default_interpret
+    if jax.default_backend() == "tpu" and not default_interpret():
+        return "pallas"
+    return "xla"
+
+
+def resolve_backend(backend: str | None = None, *,
+                    inplace: bool | None = None,
+                    kernel: bool | None = None,
+                    warn: bool = False) -> str:
+    """Resolve the backend enum, mapping the deprecated boolean aliases.
+
+    ``backend`` wins when given (and the booleans must not disagree —
+    mixing the old and new spelling in one call is an error, not a
+    guess).  Otherwise: ``inplace=False`` -> "gather"; ``kernel=True`` ->
+    "pallas"; ``kernel=False`` -> "xla"; both ``None`` -> the platform
+    auto choice.  ``warn=True`` emits the ``DeprecationWarning`` for
+    boolean callers — set by the public constructors, left off on the
+    internal engine/lm plumbing so one adapter call warns once, not once
+    per layer.
+    """
+    if backend is not None:
+        if backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS}, got {backend!r}")
+        if inplace is not None or kernel is not None:
+            raise ValueError(
+                "pass backend= alone; inplace=/kernel= are its deprecated "
+                f"aliases (got backend={backend!r}, inplace={inplace!r}, "
+                f"kernel={kernel!r})")
+        return backend
+    if inplace is None and kernel is None:
+        return auto_backend()
+    if warn:
+        warnings.warn(
+            "inplace=/kernel= are deprecated; pass backend="
+            "\"gather\"|\"xla\"|\"pallas\"|\"cascade\" instead "
+            "(docs/serving.md)", DeprecationWarning, stacklevel=3)
+    if inplace is not None and not inplace:
+        if kernel:
+            raise ValueError("inplace=False (gather tick) has no kernel path")
+        return "gather"
+    if kernel is None:
+        return auto_backend()
+    return "pallas" if kernel else "xla"

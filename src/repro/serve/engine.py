@@ -756,7 +756,8 @@ def decode_step(cfg: LMConfig, params, cache, tokens):
 # ==========================================================================
 
 def decode_step_paged(cfg: LMConfig, params, cache, tokens, *, tables, lens,
-                      arena, wbids=None, kernel=False, interpret=None):
+                      arena, wbids=None, kernel=None, interpret=None,
+                      backend=None, cascade=None):
     """One batched decode tick reading K/V **in place** from the block arena.
 
     The gather-free counterpart of ``vmap(decode_step)`` over slot lanes:
@@ -798,12 +799,21 @@ def decode_step_paged(cfg: LMConfig, params, cache, tokens, *, tables, lens,
     fam = cfg.family
     assert fam in ("decoder", "moe", "hybrid", "encdec", "vlm"), \
         f"in-place paged decode: unsupported family {fam}"
+    # backend= is the per-layer read-path enum ("xla" | "pallas" |
+    # "cascade", see repro.serve.backend); kernel= survives as its
+    # deprecated boolean alias (True -> "pallas")
+    if backend is None:
+        backend = "pallas" if kernel else "xla"
+    assert backend in ("xla", "pallas", "cascade"), \
+        f"in-place paged decode: unknown backend {backend!r}"
+    assert backend != "cascade" or cascade is not None, \
+        "backend=\"cascade\" needs the group metadata in cascade="
     # encdec/vlm cache full-dtype (init_cache ignores kv_quant there)
     quant = cfg.kv_quant and fam not in ("encdec", "vlm")
-    assert not (quant and kernel), \
-        "in-place paged decode: the Pallas kernel does not cover kv_quant"
-    assert not (fam == "vlm" and kernel), \
-        "in-place paged decode: the Pallas kernel does not cover the vlm " \
+    assert not (quant and backend != "xla"), \
+        "in-place paged decode: only the XLA reference covers kv_quant"
+    assert not (fam == "vlm" and backend != "xla"), \
+        "in-place paged decode: only the XLA reference covers the vlm " \
         "grouped layout"
     S = tokens.shape[0]
     bs = arena["k"].shape[-3]
@@ -829,8 +839,9 @@ def decode_step_paged(cfg: LMConfig, params, cache, tokens, *, tables, lens,
         layer owes the arena — (k1, v1) plain, + (k1_scale, v1_scale)
         under the int8 kv_quant layout."""
         out = lm.attn_decode_paged(cfg, lp, z, kb, vb, tables, pos,
-                                   window=window, kernel=kernel,
-                                   interpret=interpret, scales=scales)
+                                   window=window, backend=backend,
+                                   cascade=cascade, interpret=interpret,
+                                   scales=scales)
         return out[0], out[1:]
 
     def layer_arenas(sl):
@@ -996,7 +1007,7 @@ def decode_step_paged(cfg: LMConfig, params, cache, tokens, *, tables, lens,
         row_keys = ("k", "v", "kx_self", "vx_self")
     else:
         row_keys = ("k", "v", "k_scale", "v_scale") if quant else ("k", "v")
-    if kernel:
+    if backend == "pallas":
         from repro.kernels.paged_attn import scatter_kv_rows
         new_arena["k"], new_arena["v"] = scatter_kv_rows(
             arena["k"], arena["v"], rows[0], rows[1], wbids, offs,

@@ -231,8 +231,8 @@ def make_adapter(cfg: LMConfig, params, n_slots: int, max_len: int = 128,
                  extras: Callable[[], dict] | None = None, *,
                  paged: bool = False, block_size: int = 16,
                  num_blocks: int | None = None, chunked: bool = True,
-                 inplace: bool = True, kernel: bool | None = None,
-                 mesh=None):
+                 inplace: bool | None = None, kernel: bool | None = None,
+                 mesh=None, backend: str | None = None):
     """Family dispatch: state slots for rwkv, KV slots for everything else.
 
     ``paged=True`` swaps the dense per-slot KV buffers for the block-pool
@@ -240,16 +240,19 @@ def make_adapter(cfg: LMConfig, params, n_slots: int, max_len: int = 128,
     and admission priced in blocks instead of whole slots.  ``chunked``
     (paged only) prefills via the block-size chunk fold so prefix hits skip
     recomputing the shared prompt; ``chunked=False`` keeps the one-shot
-    prefill with storage-only sharing.  ``inplace`` (paged only) decodes
-    straight against the block arena through ``engine.decode_step_paged``
-    instead of the PR 2 gather->decode->scatter tick; ``kernel`` forces the
-    Pallas paged-attention kernel on/off inside that tick (None = Mosaic on
-    TPU, XLA reference elsewhere).  ``mesh`` (paged only) commits the
-    adapter's arena/params to a serving-mesh slice with
-    ``engine.arena_specs`` placement — the sharded-serving entry point
-    (serve/shard/; a single-device slice stays bitwise-identical to the
-    unsharded adapter).  rwkv has O(1) state, so ``paged`` is a no-op for
-    it.
+    prefill with storage-only sharing.  ``backend`` (paged only) picks the
+    decode tick's attention dataflow — ``"gather"`` (the PR 2
+    gather->decode->scatter parity oracle), ``"xla"`` (in-place tick, XLA
+    reference read), ``"pallas"`` (in-place tick, Pallas paged-attention
+    kernel), ``"cascade"`` (in-place tick with shared-prefix cascade
+    grouping); None probes the platform (``serve.backend.auto_backend``).
+    The old ``inplace``/``kernel`` booleans are deprecated aliases mapped
+    by ``serve.backend.resolve_backend`` (with a ``DeprecationWarning``).
+    ``mesh`` (paged only) commits the adapter's arena/params to a
+    serving-mesh slice with ``engine.arena_specs`` placement — the
+    sharded-serving entry point (serve/shard/; a single-device slice stays
+    bitwise-identical to the unsharded adapter).  rwkv has O(1) state, so
+    ``paged`` is a no-op for it.
     """
     if mesh is not None and (not paged or cfg.family == "rwkv"):
         # silently returning an unplaced adapter would defeat the sharding
@@ -266,7 +269,7 @@ def make_adapter(cfg: LMConfig, params, n_slots: int, max_len: int = 128,
                                   block_size=block_size,
                                   num_blocks=num_blocks, extras=extras,
                                   chunked=chunked, inplace=inplace,
-                                  kernel=kernel, mesh=mesh)
+                                  kernel=kernel, mesh=mesh, backend=backend)
     return KVSlotAdapter(cfg, params, n_slots, max_len, extras)
 
 

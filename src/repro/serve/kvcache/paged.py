@@ -81,6 +81,7 @@ import numpy as np
 
 from repro.models.lm import LMConfig
 from repro.serve import engine
+from repro.serve.backend import resolve_backend
 from repro.serve.kvcache.pool import (TRASH_BLOCK, BlockPool, PoolExhausted)
 
 
@@ -126,8 +127,9 @@ class PagedKVSlotAdapter:
     def __init__(self, cfg: LMConfig, params, n_slots: int, max_len: int,
                  *, block_size: int = 16, num_blocks: int | None = None,
                  extras: Callable[[], dict] | None = None,
-                 chunked: bool = True, inplace: bool = True,
-                 kernel: bool | None = None, mesh=None):
+                 chunked: bool = True, inplace: bool | None = None,
+                 kernel: bool | None = None, mesh=None,
+                 backend: str | None = None):
         assert cfg.family != "rwkv", "rwkv has O(1) state; nothing to page"
         self.cfg = cfg
         self.params = params
@@ -140,31 +142,30 @@ class PagedKVSlotAdapter:
         # longer holds, and a family prefill_chunked implements
         self.chunked = (chunked and not cfg.kv_quant and cfg.family in
                         ("decoder", "moe", "hybrid", "encdec"))
-        # in-place decode covers every paged attention family — incl. the
-        # int8 kv_quant layout (quantized one-row write +
-        # dequantize-in-tick) and, since PR 8, vlm's grouped cache (two
-        # leading layer axes; the generalized row write absorbs the rank).
-        # The PR 2 gather tick stays available purely as the parity oracle.
-        self.inplace = (inplace and cfg.family in
-                        ("decoder", "moe", "hybrid", "encdec", "vlm"))
-        # kernel=None: Mosaic on TPU, XLA reference elsewhere (running the
-        # Pallas interpreter inside the serving hot loop is for tests
-        # only).  The kernel does not cover the int8 quant layout: the
-        # auto-selection quietly falls back to XLA there, but an
-        # *explicit* kernel=True is a contract ("forces the kernel") and
-        # must fail loudly rather than measure the wrong path.
-        if kernel and cfg.kv_quant:
-            raise ValueError("paged_attn kernel does not support the int8 "
-                             "kv_quant layout; use kernel=None/False")
-        if kernel and cfg.family == "vlm":
-            raise ValueError("paged_attn kernel does not support the vlm "
-                             "grouped layout; use kernel=None/False")
-        if kernel is None:
-            from repro.kernels.ops import default_interpret
-            kernel = jax.default_backend() == "tpu" and not \
-                default_interpret()
-        self.kernel = (bool(kernel) and not cfg.kv_quant
-                       and cfg.family != "vlm")
+        # one backend enum ("gather" | "xla" | "pallas" | "cascade", see
+        # repro.serve.backend) replaces the inplace=/kernel= booleans,
+        # which survive as deprecated aliases (warned once, here).  The
+        # in-place tick covers every paged family — incl. the int8
+        # kv_quant layout (quantized one-row write + dequantize-in-tick)
+        # and, since PR 8, vlm's grouped cache; the PR 2 gather tick
+        # stays available purely as the parity oracle.  The Pallas kernel
+        # and the cascade grouping do NOT cover kv_quant or vlm: the
+        # platform auto-selection quietly falls back to XLA there, but an
+        # *explicit* backend choice is a contract ("forces the path") and
+        # must fail loudly rather than measure the wrong one.
+        explicit = backend is not None or kernel
+        self.backend = resolve_backend(backend, inplace=inplace,
+                                       kernel=kernel, warn=True)
+        if self.backend in ("pallas", "cascade") and \
+                (cfg.kv_quant or cfg.family == "vlm"):
+            layout = "int8 kv_quant" if cfg.kv_quant else "vlm grouped"
+            if explicit:
+                raise ValueError(
+                    f"backend={self.backend!r} does not support the "
+                    f"{layout} layout; use backend=\"xla\"")
+            self.backend = "xla"
+        self.inplace = self.backend != "gather"
+        self.kernel = self.backend == "pallas"
         if num_blocks is None:
             # dense-equivalent capacity + the reserved trash block
             num_blocks = n_slots * self.nb_max + 1
@@ -261,6 +262,14 @@ class PagedKVSlotAdapter:
                                     donate_argnums=(0,) if dn else ())
         tick = self._tick_inplace_impl if self.inplace else self._tick_impl
         self._decode = jax.jit(tick, donate_argnums=(1, 2) if dn else ())
+        # the cascade tick sits NEXT TO the flat one, not instead of it:
+        # a tick on which no chain is shared by >= 2 lanes degrades to
+        # self._decode — the *same* executable, hence bitwise.  jit
+        # specializes per metadata bucket shape (next-pow-2 padded group /
+        # chain / lane / suffix counts), a fixed set in the steady state.
+        if self.backend == "cascade":
+            self._decode_cascade = jax.jit(
+                self._tick_cascade_impl, donate_argnums=(1, 2) if dn else ())
 
     # -- jitted bodies ------------------------------------------------------
 
@@ -422,7 +431,26 @@ class PagedKVSlotAdapter:
         wbids = jnp.where(dense["len"] >= self.max_len, TRASH_BLOCK, wbids)
         new_arena, new_cache, logits = engine.decode_step_paged(
             self.cfg, p, dense, tokens, tables=tables, lens=dense["len"],
-            arena=arena, wbids=wbids, kernel=self.kernel)
+            arena=arena, wbids=wbids,
+            backend="pallas" if self.kernel else "xla")
+        sel = lambda new, old: jnp.where(
+            mask.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
+        new_dense = {key: sel(new_cache[key], dense[key]) for key in dense}
+        return new_arena, new_dense, logits
+
+    def _tick_cascade_impl(self, p, arena, dense, tables, tokens, mask,
+                           wbids, cascade):
+        """The in-place tick with shared-prefix cascade attention: every
+        attention layer reads each shared radix chain *once per group*
+        (multi-query pass, prefix KV gathered once), each divergent suffix
+        per lane, and merges the partial softmax states by log-sum-exp
+        (:func:`nn.attention.attend_decode_cascade`).  ``cascade`` is the
+        host-built group metadata from :meth:`_cascade_meta`; the write
+        epilogue is identical to the flat tick."""
+        wbids = jnp.where(dense["len"] >= self.max_len, TRASH_BLOCK, wbids)
+        new_arena, new_cache, logits = engine.decode_step_paged(
+            self.cfg, p, dense, tokens, tables=tables, lens=dense["len"],
+            arena=arena, wbids=wbids, backend="cascade", cascade=cascade)
         sel = lambda new, old: jnp.where(
             mask.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
         new_dense = {key: sel(new_cache[key], dense[key]) for key in dense}
@@ -743,6 +771,87 @@ class PagedKVSlotAdapter:
         return bool(self.slot_bids[slot]) and \
             int(self.lens[slot]) >= self.max_len
 
+    # -- cascade grouping (backend="cascade") --------------------------------
+
+    def _cascade_plan(self, lanes):
+        """Shared-chain groups over the given lanes (host side).
+
+        Feeds :meth:`BlockPool.shared_chains` each lane's *full* blocks
+        only (the partially-filled tail is trimmed — only positions every
+        sharer holds identically may enter a group pass) plus a skip set
+        of blocks armed for copy-on-write, so a group never reads a block
+        another lane is about to rewrite; the pool additionally excludes
+        partial, unshared, and protected-for-handoff blocks.
+        """
+        skip = set()
+        for s in range(self.n_slots):
+            if self.cow_blk[s] is not None:
+                skip.add(int(self.tables[s, self.cow_blk[s]]))
+            if self.cow_spare[s] is not None:
+                skip.add(int(self.cow_spare[s]))
+        chains = {int(s): [int(b) for b in
+                           self.tables[s, :int(self.lens[s]) // self.bs]]
+                  for s in lanes}
+        return self.pool.shared_chains(chains, skip=skip)
+
+    @staticmethod
+    def _pow2(n: int) -> int:
+        return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+    def _cascade_meta(self, groups) -> dict:
+        """Device metadata for :func:`nn.attention.attend_decode_cascade`,
+        padded to next-pow-2 bucket shapes so steady-state ticks reuse a
+        fixed jit bucket set (the no-recompile pin in test_cascade.py)."""
+        G = self._pow2(len(groups))
+        npre = self._pow2(max(len(c) for c, _ in groups))
+        lc = self._pow2(max(len(ls) for _, ls in groups))
+        gt = np.full((G, npre), TRASH_BLOCK, np.int32)
+        gl = np.zeros(G, np.int32)
+        lanes = np.zeros((G, lc), np.int32)
+        gmask = np.zeros((G, lc), bool)
+        q0 = np.zeros(self.n_slots, np.int32)
+        q0b = np.zeros(self.n_slots, np.int64)
+        for g, (chain, ls) in enumerate(groups):
+            gt[g, :len(chain)] = chain
+            gl[g] = len(chain) * self.bs
+            lanes[g, :len(ls)] = ls
+            gmask[g, :len(ls)] = True
+            for s in ls:
+                q0[s] = len(chain) * self.bs
+                q0b[s] = len(chain)
+        # suffix tables must cover [q0 blocks, blocks holding cache_len)
+        # for every lane — an ungrouped lane's suffix is its whole chain
+        need = [max(1, -(-(int(self.lens[s]) + 1) // self.bs) - int(q0b[s]))
+                for s in range(self.n_slots)]
+        nsuf = self._pow2(max(need))
+        st = np.full((self.n_slots, nsuf), TRASH_BLOCK, np.int32)
+        for s in range(self.n_slots):
+            row = self.tables[s, int(q0b[s]):int(q0b[s]) + nsuf]
+            st[s, :len(row)] = row
+        return {"group_tables": jnp.asarray(gt),
+                "group_len": jnp.asarray(gl),
+                "group_lanes": jnp.asarray(lanes),
+                "group_mask": jnp.asarray(gmask),
+                "lane_q0": jnp.asarray(q0),
+                "suffix_tables": jnp.asarray(st)}
+
+    def cascade_stats(self) -> dict:
+        """Host-side grouping snapshot over the current live lanes
+        (benchmarks/kvcache_bench.py --cascade): the groups the next tick
+        would form, and the per-layer prefix rows attended once per
+        *group* vs once per *lane* — the O(prefix) vs O(lanes x prefix)
+        traffic claim the BENCH_cascade gate checks."""
+        lanes = [s for s in range(self.n_slots)
+                 if self.slot_bids[s] and not self.at_capacity(s)]
+        groups = self._cascade_plan(lanes)
+        shapes = [(len(c), len(ls)) for c, ls in groups]
+        return {
+            "groups": len(groups),
+            "grouped_lanes": sum(n for _, n in shapes),
+            "prefix_rows": sum(c * self.bs for c, _ in shapes),
+            "prefix_rows_flat": sum(c * self.bs * n for c, n in shapes),
+        }
+
     def decode(self, tokens: np.ndarray, active: np.ndarray) -> np.ndarray:
         active = np.asarray(active, bool).copy()
         wbids = np.full(self.n_slots, TRASH_BLOCK, np.int32)
@@ -771,10 +880,27 @@ class PagedKVSlotAdapter:
                 self.pool.drop_partial(bid)
                 self.partial_reg[slot] = None
             wbids[slot] = bid
-        self.arena, self.cache, logits = self._decode(
-            self.params, self.arena, self.cache, jnp.asarray(self.tables),
-            jnp.asarray(tokens, jnp.int32)[:, None],
-            jnp.asarray(active, bool), jnp.asarray(wbids))
+        meta = None
+        if self.backend == "cascade":
+            # grouping runs AFTER the CoW/write-target loop above so a
+            # block resolved this tick can never be both read by a group
+            # pass and rewritten by its owner
+            groups = self._cascade_plan(np.nonzero(active)[0])
+            self.last_groups = len(groups)
+            if groups:
+                meta = self._cascade_meta(groups)
+        if meta is None:
+            # no chain shared by >= 2 lanes: degrade to the flat in-place
+            # tick — the *same* jitted executable, hence bitwise-equal
+            self.arena, self.cache, logits = self._decode(
+                self.params, self.arena, self.cache, jnp.asarray(self.tables),
+                jnp.asarray(tokens, jnp.int32)[:, None],
+                jnp.asarray(active, bool), jnp.asarray(wbids))
+        else:
+            self.arena, self.cache, logits = self._decode_cascade(
+                self.params, self.arena, self.cache, jnp.asarray(self.tables),
+                jnp.asarray(tokens, jnp.int32)[:, None],
+                jnp.asarray(active, bool), jnp.asarray(wbids), meta)
         self.lens[active] += 1
         self.last_logits = logits           # (n_slots, vocab) — parity tests
         return np.asarray(jnp.argmax(logits, -1))
@@ -803,7 +929,17 @@ class PagedKVSlotAdapter:
         live_rows = sum(-(-(int(ln) + 1) // bs) * bs
                         for ln, b in zip(self.lens, self.slot_bids) if b)
         inplace = live_rows * token + n * token
-        return {"gather": gather, "inplace": inplace}
+        # cascade: each shared chain's prefix rows stream once per *group*
+        # instead of once per lane; suffixes stream per lane as before
+        groups = self._cascade_plan(
+            [s for s in range(n) if self.slot_bids[s]])
+        q0b = {s: len(c) for c, ls in groups for s in ls}
+        prefix_rows = sum(len(c) * bs for c, _ in groups)
+        suffix_rows = sum((-(-(int(ln) + 1) // bs) - q0b.get(s, 0)) * bs
+                          for s, (ln, b) in
+                          enumerate(zip(self.lens, self.slot_bids)) if b)
+        cascade = (prefix_rows + suffix_rows) * token + n * token
+        return {"gather": gather, "inplace": inplace, "cascade": cascade}
 
     def slot_stats(self, slot: int) -> dict:
         return dict(self._stats[slot])
@@ -816,6 +952,8 @@ class PagedKVSlotAdapter:
                "gather_prefix": self._gather_prefix,
                "scatter": self._scatter, "copy": self._copy,
                "write_block": self._write_block, "decode": self._decode}
+        if self.backend == "cascade":
+            fns["decode_cascade"] = self._decode_cascade
         if self.cfg.family == "encdec":
             fns["encode"] = self._encode
         return fns

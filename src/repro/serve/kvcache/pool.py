@@ -241,6 +241,45 @@ class BlockPool:
         hits, partial_hit = self.probe_chain(keys, pkey, count=count)
         return hits, partial_hit, keys, pkey
 
+    def shared_chains(self, lane_chains: dict, *, min_lanes: int = 2,
+                      skip=()) -> list[tuple[tuple[int, ...], list]]:
+        """Group decode lanes by their longest shared indexed prefix chain.
+
+        ``lane_chains`` maps a lane id to that lane's *full*-block ids in
+        prefix order (the caller trims the partially-filled tail block —
+        only positions every sharer can read may enter a cascade group).
+        A block is cascade-eligible iff it is indexed as a full block
+        (partials are rewritten in place by their sole owner), actually
+        shared (refcount >= 2 — a private chain gains nothing from a group
+        pass), not ``protected`` (a handed-off chain may still be mid-
+        migration rewrite on this slice), and not in ``skip`` (the adapter
+        passes blocks armed for copy-on-write).  Each lane contributes its
+        longest eligible prefix; lanes with the *identical* chain tuple
+        form a group.  Returns ``[(chain, [lane, ...]), ...]`` for groups
+        of at least ``min_lanes`` lanes, deterministic in lane order.
+        """
+        skip = set(skip)
+
+        def eligible(bid: int) -> bool:
+            if bid == TRASH_BLOCK or bid in skip:
+                return False
+            key = self.block_key.get(bid)
+            if key is None or bid in self.partial_blocks:
+                return False
+            return self.refcount[bid] >= 2 and key not in self.protected
+
+        by_chain: dict[tuple[int, ...], list] = {}
+        for lane, chain in lane_chains.items():
+            shared = []
+            for bid in chain:
+                if not eligible(bid):
+                    break
+                shared.append(int(bid))
+            if shared:
+                by_chain.setdefault(tuple(shared), []).append(lane)
+        return [(chain, lanes) for chain, lanes in by_chain.items()
+                if len(lanes) >= min_lanes]
+
     # -- telemetry ---------------------------------------------------------
     def gauges(self) -> dict:
         """Instantaneous occupancy gauges for pull-mode interval sampling

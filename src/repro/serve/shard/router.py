@@ -104,8 +104,9 @@ class RolePlan:
 
 def build_slices(cfg, params, mesh, *, n_slots: int, max_len: int,
                  block_size: int = 16, num_blocks: int | None = None,
-                 extras=None, chunked: bool = True, inplace: bool = True,
-                 kernel: bool | None = None) -> list[GatewaySlice]:
+                 extras=None, chunked: bool = True,
+                 inplace: bool | None = None, kernel: bool | None = None,
+                 backend: str | None = None) -> list[GatewaySlice]:
     """One :class:`GatewaySlice` per sub-mesh of ``mesh``.
 
     ``mesh`` is a serving mesh (factored via ``slice_meshes``) or an
@@ -125,7 +126,8 @@ def build_slices(cfg, params, mesh, *, n_slots: int, max_len: int,
         ad = make_adapter(cfg, params, n_slots=n_slots, max_len=max_len,
                           extras=extras, paged=True, block_size=block_size,
                           num_blocks=num_blocks, chunked=chunked,
-                          inplace=inplace, kernel=kernel, mesh=sm)
+                          inplace=inplace, kernel=kernel, mesh=sm,
+                          backend=backend)
         slices.append(GatewaySlice(i, sm, ad, ContinuousBatcher(ad)))
     return slices
 

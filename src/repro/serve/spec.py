@@ -1,0 +1,123 @@
+"""Declarative gateway construction: one ``ServeSpec``, one factory.
+
+Eight PRs of growth accreted gateway assembly into call-site folklore:
+every example/bench hand-chained ``make_adapter`` -> ``ContinuousBatcher``
+-> ``PromptGateway`` (or ``build_slices`` -> ``ShardedPromptGateway``),
+each spelling the paged/chunked/backend/mesh/roles/obs knobs a little
+differently.  ``ServeSpec`` names that configuration once as a frozen
+dataclass and ``make_gateway`` is the single constructor: it validates the
+knob combinations that used to fail deep inside the stack (or not at
+all), then builds the colocated, sharded, or disaggregated gateway the
+spec describes.  docs/serving.md has the migration notes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """Everything that shapes a serving gateway, in one value.
+
+    Slot/cache geometry: ``n_slots`` decode lanes of ``max_len`` tokens;
+    ``paged`` swaps dense per-slot KV for the block-pool adapter
+    (``block_size`` tokens/block, ``num_blocks`` total — None sizes the
+    pool dense-equivalent); ``chunked`` prefills through the block-size
+    chunk fold so prefix hits skip recompute.
+
+    ``backend`` picks the decode tick's attention dataflow
+    ("gather" | "xla" | "pallas" | "cascade"; None probes the platform —
+    see ``serve.backend``); paged only.
+
+    Topology: ``mesh`` (a serving mesh or explicit sub-mesh list) builds
+    the sharded gateway, one slice per sub-mesh; ``roles`` (a
+    ``shard.RolePlan``) partitions those slices into prefill/decode for
+    disaggregated serving.  Both paged-only; both None = the single-
+    adapter colocated gateway.
+
+    Scheduling/SLO: ``max_new_tokens``, ``bytes_per_token``,
+    ``max_queue``, ``shed_factor`` and the observability attachments
+    (``tracer``/``metrics``/``slo``, all optional) pass straight through
+    to the gateway; ``energy_spec`` prices tokens for the energy ledger.
+    """
+    n_slots: int = 4
+    max_len: int = 128
+    paged: bool = False
+    block_size: int = 16
+    num_blocks: int | None = None
+    chunked: bool = True
+    backend: str | None = None
+    mesh: object | None = None
+    roles: object | None = None
+    max_new_tokens: int = 16
+    bytes_per_token: int = 4
+    max_queue: int = 64
+    energy_spec: object | None = None
+    tracer: object = None
+    metrics: object = None
+    slo: object = None
+    shed_factor: int = 4
+    auto_rebalance: bool = True
+
+    def replace(self, **kw) -> "ServeSpec":
+        return dataclasses.replace(self, **kw)
+
+
+def make_gateway(cfg, params, spec: ServeSpec | None = None, *,
+                 extras=None, **overrides):
+    """Build the gateway ``spec`` describes (plus field ``overrides``).
+
+    Returns a ``PromptGateway`` (colocated: one adapter, one batcher), or
+    a ``ShardedPromptGateway`` when ``spec.mesh`` is set (one slice per
+    sub-mesh; ``spec.roles`` further disaggregates them into
+    prefill/decode).  ``extras`` is the per-family modality-stub callable
+    ``make_adapter`` already takes (encdec/vlm prefill inputs).
+
+    Knob validation happens here, before any arena is allocated:
+    ``backend``/``mesh``/``roles`` are paged-tick concepts and require
+    ``paged=True`` (and a non-rwkv family); ``roles`` requires ``mesh``.
+    """
+    from repro.serve.gateway.gateway import PromptGateway
+    from repro.serve.gateway.slots import ContinuousBatcher, make_adapter
+
+    spec = spec or ServeSpec()
+    if overrides:
+        spec = spec.replace(**overrides)
+    paged = spec.paged and cfg.family != "rwkv"
+    if spec.backend is not None and not paged:
+        raise ValueError(
+            f"backend={spec.backend!r} selects the paged decode tick's "
+            f"dataflow; it requires paged=True and a non-rwkv family "
+            f"(got paged={spec.paged}, family={cfg.family})")
+    if spec.roles is not None and spec.mesh is None:
+        raise ValueError("roles (disaggregated serving) partitions mesh "
+                         "slices; set mesh as well")
+    if spec.mesh is not None:
+        if not paged:
+            raise ValueError("mesh (sharded serving) requires paged=True "
+                             f"and a non-rwkv family (got "
+                             f"paged={spec.paged}, family={cfg.family})")
+        from repro.serve.shard.router import (ShardedPromptGateway,
+                                              build_slices)
+        slices = build_slices(
+            cfg, params, spec.mesh, n_slots=spec.n_slots,
+            max_len=spec.max_len, block_size=spec.block_size,
+            num_blocks=spec.num_blocks, extras=extras,
+            chunked=spec.chunked, backend=spec.backend)
+        return ShardedPromptGateway(
+            slices, max_new_tokens=spec.max_new_tokens,
+            bytes_per_token=spec.bytes_per_token, max_queue=spec.max_queue,
+            energy_spec=spec.energy_spec,
+            auto_rebalance=spec.auto_rebalance, roles=spec.roles,
+            tracer=spec.tracer, metrics=spec.metrics, slo=spec.slo,
+            shed_factor=spec.shed_factor)
+    adapter = make_adapter(
+        cfg, params, n_slots=spec.n_slots, max_len=spec.max_len,
+        extras=extras, paged=paged, block_size=spec.block_size,
+        num_blocks=spec.num_blocks, chunked=spec.chunked,
+        backend=spec.backend)
+    return PromptGateway(
+        ContinuousBatcher(adapter), max_new_tokens=spec.max_new_tokens,
+        bytes_per_token=spec.bytes_per_token, max_queue=spec.max_queue,
+        energy_spec=spec.energy_spec, tracer=spec.tracer,
+        metrics=spec.metrics, slo=spec.slo, shed_factor=spec.shed_factor)

@@ -1,0 +1,492 @@
+"""Cascade decode attention over shared prefixes + the unified attention
+backend API: log-sum-exp merge numerics, cascade-vs-flat parity at the
+attention op, the Pallas cascade kernels (interpret), adapter-level parity
+for all four attention families, the bitwise degrade rule, steady-state
+no-recompile, shared-chain eligibility (mid-CoW / protected-for-handoff
+exclusion), backend alias<->enum equivalence, and ServeSpec/make_gateway
+construction including the sharded and disaggregated gateways."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro import configs
+from repro.models import lm
+from repro.nn import attention
+from repro.serve.backend import (BACKENDS, auto_backend, resolve_backend)
+from repro.serve.gateway.sensors import Arrival
+from repro.serve.gateway.slots import ContinuousBatcher, Request, make_adapter
+from repro.serve.kvcache import PagedKVSlotAdapter
+from repro.serve.shard import RolePlan
+from repro.serve.spec import ServeSpec, make_gateway
+
+FAMILY_ARCH = {                      # one arch per attention family
+    "decoder": "stablelm_3b",
+    "moe": "deepseek_moe_16b",       # windowed layers + GQA
+    "hybrid": "hymba_1_5b",
+    "encdec": "whisper_medium",
+}
+BS = 4
+
+_SETUP_CACHE: dict = {}
+
+
+def _setup(arch):
+    if arch not in _SETUP_CACHE:
+        cfg = dataclasses.replace(configs.smoke_config(arch),
+                                  param_dtype="float32")
+        params, _ = lm.init(jax.random.key(0), cfg, {})
+        extras = None
+        if cfg.family == "encdec":
+            rng = np.random.default_rng(99)
+            enc = jnp.asarray(rng.normal(0, 1, (1, cfg.enc_len, cfg.d_model)),
+                              jnp.float32)
+            extras = (lambda e=enc: {"enc_embed": e})
+        _SETUP_CACHE[arch] = (cfg, params, extras)
+    return _SETUP_CACHE[arch]
+
+
+def _slice_mesh(i: int) -> Mesh:
+    devs = jax.devices()
+    return Mesh(np.asarray([devs[i % len(devs)]]), ("model",))
+
+
+# ==========================================================================
+# LSE merge numerics (op level).
+# ==========================================================================
+
+def _state(s, v):
+    """Unnormalized softmax state of scores s (..., S) over values
+    v (..., S, D) — the oracle both merge implementations must compose to."""
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    return jnp.einsum("...s,...sd->...d", p, v), m, jnp.sum(p, -1)
+
+
+def test_merge_recomposes_concatenated_softmax():
+    """Splitting a key set in two, taking each half's online-softmax state,
+    and LSE-merging must reproduce the whole set's softmax attention."""
+    rng = np.random.default_rng(0)
+    s = jnp.asarray(rng.normal(0, 3, (2, 4, 12)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (2, 4, 12, 8)), jnp.float32)
+    whole = jnp.einsum("bhs,bhsd->bhd", jax.nn.softmax(s, -1), v)
+    for cut in (1, 5, 11):
+        a1, m1, l1 = _state(s[..., :cut], v[..., :cut, :])
+        a2, m2, l2 = _state(s[..., cut:], v[..., cut:, :])
+        acc, _, l = attention.merge_softmax_states(a1, m1, l1, a2, m2, l2)
+        np.testing.assert_allclose(np.asarray(acc / l[..., None]),
+                                   np.asarray(whole), rtol=1e-5, atol=1e-6)
+
+
+def test_merge_empty_side_is_identity_bitwise():
+    """The empty state (m = NEG_INF, l = 0, acc = 0) must drop out of the
+    merge EXACTLY — an ungrouped lane's suffix-only state passes through
+    bit for bit, which is what makes the adapter's flat degrade safe."""
+    rng = np.random.default_rng(1)
+    s = jnp.asarray(rng.normal(0, 2, (3, 4, 9)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (3, 4, 9, 8)), jnp.float32)
+    acc, m, l = _state(s, v)
+    empty_a = jnp.zeros_like(acc)
+    empty_m = jnp.full_like(m, attention.NEG_INF)
+    empty_l = jnp.zeros_like(l)
+    for args in ((empty_a, empty_m, empty_l, acc, m, l),
+                 (acc, m, l, empty_a, empty_m, empty_l)):
+        ma, mm, ml = attention.merge_softmax_states(*args)
+        np.testing.assert_array_equal(np.asarray(ma), np.asarray(acc))
+        np.testing.assert_array_equal(np.asarray(mm), np.asarray(m))
+        np.testing.assert_array_equal(np.asarray(ml), np.asarray(l))
+    # both sides empty: zeros, not NaN (NEG_INF is finite)
+    ma, _, ml = attention.merge_softmax_states(
+        empty_a, empty_m, empty_l, empty_a, empty_m, empty_l)
+    assert not np.any(np.isnan(np.asarray(ma)))
+    np.testing.assert_array_equal(np.asarray(ml), np.zeros_like(ml))
+
+
+# ==========================================================================
+# attend_decode_cascade vs the flat reference (the dense fp32 oracle).
+# ==========================================================================
+
+def _cascade_fixture(seed=0, Hq=4, Hkv=2):
+    """Lanes 0-2 share a 3-block prefix; lane 3 is ungrouped.  Lane
+    lengths end mid-block; group padding exercises the mask scatter."""
+    rng = np.random.default_rng(seed)
+    D, bs, nb = 8, 4, 6
+    k_arena = jnp.asarray(rng.normal(size=(25, bs, Hkv, D)), jnp.float32)
+    v_arena = jnp.asarray(rng.normal(size=(25, bs, Hkv, D)), jnp.float32)
+    tables = np.zeros((4, nb), np.int32)
+    tables[0] = [1, 2, 3, 10, 11, 0]
+    tables[1] = [1, 2, 3, 12, 0, 0]
+    tables[2] = [1, 2, 3, 13, 14, 15]
+    tables[3] = [4, 5, 6, 7, 0, 0]
+    cache_len = jnp.asarray([18, 15, 23, 14], jnp.int32)
+    q = jnp.asarray(rng.normal(size=(4, 1, Hq, D)), jnp.float32)
+    new_kv = (jnp.asarray(rng.normal(size=(4, Hkv, D)), jnp.float32),
+              jnp.asarray(rng.normal(size=(4, Hkv, D)), jnp.float32))
+    meta = {
+        "group_tables": jnp.asarray([[1, 2, 3, 0]], jnp.int32),
+        "group_len": jnp.asarray([12], jnp.int32),
+        "group_lanes": jnp.asarray([[0, 1, 2, 0]], jnp.int32),
+        "group_mask": jnp.asarray([[True, True, True, False]]),
+        "lane_q0": jnp.asarray([12, 12, 12, 0], jnp.int32),
+        "suffix_tables": jnp.asarray(
+            [[10, 11, 0, 0], [12, 0, 0, 0], [13, 14, 15, 0], [4, 5, 6, 7]],
+            jnp.int32),
+    }
+    return q, k_arena, v_arena, tables, cache_len, new_kv, meta
+
+
+# window=8 clips into the shared prefix for lane 1 (len 15, q0 12); window=2
+# lies entirely inside every suffix, emptying the prefix states (the merge
+# must drop them exactly); Hq=Hkv=4 is MHA, Hq=4/Hkv=2 is GQA.
+@pytest.mark.parametrize("window", [0, 8, 2])
+@pytest.mark.parametrize("heads", [(4, 2), (4, 4)])
+def test_cascade_matches_flat_reference(window, heads):
+    Hq, Hkv = heads
+    q, ka, va, tables, cl, nk, meta = _cascade_fixture(Hq=Hq, Hkv=Hkv)
+    flat = attention.attend_decode_paged(q, ka, va, jnp.asarray(tables), cl,
+                                         window=window, new_kv=nk)
+    casc = attention.attend_decode_cascade(q, ka, va, meta, cl,
+                                           window=window, new_kv=nk)
+    np.testing.assert_allclose(np.asarray(casc), np.asarray(flat),
+                               rtol=2e-6, atol=2e-6)
+
+
+def test_cascade_empty_suffix_is_prefix_only():
+    """A lane whose length equals its group prefix has an all-masked
+    suffix pass (l2 = 0): the merged output must equal flat attention over
+    the prefix alone — no NaN, no phantom probability mass."""
+    q, ka, va, tables, _, _, meta = _cascade_fixture()
+    cl = jnp.asarray([12, 15, 23, 14], jnp.int32)   # lane 0: len == q0
+    flat = attention.attend_decode_paged(q, ka, va, jnp.asarray(tables), cl)
+    casc = attention.attend_decode_cascade(q, ka, va, meta, cl)
+    assert not np.any(np.isnan(np.asarray(casc)))
+    np.testing.assert_allclose(np.asarray(casc), np.asarray(flat),
+                               rtol=2e-6, atol=2e-6)
+
+
+@pytest.mark.parametrize("window", [0, 8, 2])
+def test_cascade_pallas_kernels_match_flat(window):
+    """kernel=True routes the prefix pass, the offset suffix sweep, and
+    the merge through kernels/paged_attn.py (interpret off-TPU): same
+    key-set selection, same tolerance against the flat reference."""
+    q, ka, va, tables, cl, nk, meta = _cascade_fixture(seed=3)
+    flat = attention.attend_decode_paged(q, ka, va, jnp.asarray(tables), cl,
+                                         window=window, new_kv=nk)
+    casc = attention.attend_decode_cascade(q, ka, va, meta, cl,
+                                           window=window, new_kv=nk,
+                                           kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(casc), np.asarray(flat),
+                               rtol=2e-6, atol=2e-6)
+
+
+def test_state_kernel_empty_sweep_returns_empty_state():
+    """An all-masked sweep (window entirely below the sweep's positions, or
+    zero length) must come back as the EMPTY state (m = NEG_INF, l = 0),
+    not a phantom uniform distribution — the flat kernel's exp(0) == 1
+    failure mode this kernel explicitly zeroes out."""
+    from repro.kernels import paged_attn as pk
+    rng = np.random.default_rng(4)
+    ka = jnp.asarray(rng.normal(size=(5, 4, 2, 8)), jnp.float32)
+    va = jnp.asarray(rng.normal(size=(5, 4, 2, 8)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(1, 4, 8)), jnp.float32)
+    acc, m, l = pk.paged_decode_attention_with_state(
+        q, ka, va, jnp.asarray([[1, 2]], jnp.int32),
+        jnp.asarray([0], jnp.int32), interpret=True)
+    np.testing.assert_array_equal(np.asarray(l), np.zeros_like(l))
+    np.testing.assert_array_equal(np.asarray(acc), np.zeros_like(acc))
+    assert np.all(np.asarray(m) <= attention.NEG_INF)
+
+
+# ==========================================================================
+# Adapter-level parity: backend="cascade" vs backend="xla", all four
+# attention families, tokens exact, logits to fp32 tolerance.
+# ==========================================================================
+
+def _shared_adapters(cfg, extras, params, backend, *, n_lanes=3,
+                     shared_len=5 * BS, tail=3, seed=11, max_len=48):
+    """n_lanes lanes sharing a shared_len-token prompt prefix (block
+    aligned) plus one lane with a disjoint prompt."""
+    ad = PagedKVSlotAdapter(cfg, params, n_lanes + 1, max_len,
+                            block_size=BS, extras=extras, backend=backend)
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(1, cfg.vocab, size=shared_len).tolist()
+    for s in range(n_lanes):
+        toks = shared + rng.integers(1, cfg.vocab, size=tail + s).tolist()
+        ad.insert(s, np.asarray(toks, np.int32), max_new=8)
+    ad.insert(n_lanes, rng.integers(1, cfg.vocab, size=shared_len // 2,
+                                    dtype=np.int32), max_new=8)
+    return ad
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCH))
+def test_cascade_adapter_matches_flat_tick(family):
+    """Same inserts, same forced tokens: the cascade tick must emit the
+    flat in-place tick's argmax tokens exactly, logits to fp32 merge
+    tolerance, and actually form a group (moe exercises windowed layers
+    through the same metadata)."""
+    cfg, params, extras = _setup(FAMILY_ARCH[family])
+    a_x = _shared_adapters(cfg, extras, params, "xla")
+    a_c = _shared_adapters(cfg, extras, params, "cascade")
+    assert a_c.backend == "cascade" and a_c.inplace and not a_c.kernel
+    rng = np.random.default_rng(21)
+    active = np.ones(4, bool)
+    for step in range(4):
+        forced = rng.integers(0, cfg.vocab, size=4).astype(np.int32)
+        tx = a_x.decode(forced, active)
+        tc = a_c.decode(forced, active)
+        assert a_c.last_groups == 1
+        np.testing.assert_array_equal(tx, tc)
+        np.testing.assert_allclose(np.asarray(a_c.last_logits),
+                                   np.asarray(a_x.last_logits),
+                                   rtol=2e-4, atol=2e-4)
+    st = a_c.cascade_stats()
+    assert st["groups"] == 1 and st["grouped_lanes"] == 3
+    assert st["prefix_rows_flat"] == 3 * st["prefix_rows"]
+    proxy = a_c.tick_bytes_proxy()
+    assert proxy["cascade"] < proxy["inplace"] < proxy["gather"]
+
+
+def test_cascade_degrades_to_flat_tick_bitwise():
+    """No chain shared by >= 2 lanes: the cascade adapter must run the
+    SAME flat jitted executable — logits bitwise, zero groups.  Also
+    covers the single-lane-group rule: min_lanes=2 means a lone lane
+    never forms a group."""
+    cfg, params, extras = _setup("stablelm_3b")
+    rng = np.random.default_rng(31)
+    prompts = [rng.integers(1, cfg.vocab, size=s, dtype=np.int32)
+               for s in (9, 13)]                       # disjoint prompts
+    mk = lambda backend: PagedKVSlotAdapter(
+        cfg, params, 2, 24, block_size=BS, extras=extras, backend=backend)
+    a_x, a_c = mk("xla"), mk("cascade")
+    for slot, p in enumerate(prompts):
+        assert a_x.insert(slot, p, max_new=6) == \
+            a_c.insert(slot, p, max_new=6)
+    active = np.ones(2, bool)
+    for step in range(4):
+        forced = rng.integers(0, cfg.vocab, size=2).astype(np.int32)
+        tx = a_x.decode(forced, active)
+        tc = a_c.decode(forced, active)
+        assert a_c.last_groups == 0
+        np.testing.assert_array_equal(tx, tc)
+        np.testing.assert_array_equal(np.asarray(a_x.last_logits),
+                                      np.asarray(a_c.last_logits))
+
+
+def test_cascade_steady_state_never_recompiles():
+    """The pow2-padded metadata buckets hold across steady-state ticks:
+    after the first cascade tick compiles its bucket, further ticks with
+    the same group topology must not grow the jit cache."""
+    cfg, params, extras = _setup("stablelm_3b")
+    a_c = _shared_adapters(cfg, extras, params, "cascade")
+    rng = np.random.default_rng(41)
+    active = np.ones(4, bool)
+    forced = rng.integers(0, cfg.vocab, size=4).astype(np.int32)
+    a_c.decode(forced, active)
+    assert a_c.last_groups == 1
+    size1 = a_c._decode_cascade._cache_size()
+    assert size1 == 1
+    for step in range(4):
+        a_c.decode(forced, active)
+    assert a_c.last_groups == 1
+    assert a_c._decode_cascade._cache_size() == size1
+    assert "decode_cascade" in a_c.jit_fns()
+
+
+# ==========================================================================
+# shared_chains eligibility: partial / unshared / protected / mid-CoW
+# blocks break the chain (tentpole bugfix + satellite regression).
+# ==========================================================================
+
+def test_shared_chains_eligibility_rules():
+    cfg, params, extras = _setup("stablelm_3b")
+    ad = _shared_adapters(cfg, extras, params, "cascade")
+    pool = ad.pool
+    chains = {s: [int(b) for b in
+                  ad.tables[s, :int(ad.lens[s]) // ad.bs]]
+              for s in range(4)}
+    groups = pool.shared_chains(chains)
+    assert len(groups) == 1
+    chain, lanes = groups[0]
+    assert sorted(lanes) == [0, 1, 2] and len(chain) == 5
+    # min_lanes above the group size: no group
+    assert pool.shared_chains(chains, min_lanes=4) == []
+    # a skipped block (armed for CoW this tick) truncates the chain there
+    short = pool.shared_chains(chains, skip={chain[2]})
+    assert short and short[0][0] == chain[:2]
+    # skipping the chain head kills the whole group
+    assert pool.shared_chains(chains, skip={chain[0]}) == []
+
+
+def test_protected_for_handoff_chain_never_grouped():
+    """Satellite bugfix: a chain protected for a disagg prefill->decode
+    handoff (PR 8 ``protect``) must not enter a group — the handoff owns
+    those blocks' lifecycle mid-flight.  A forced mid-handoff tick must
+    degrade to the flat executable bitwise."""
+    cfg, params, extras = _setup("stablelm_3b")
+    a_x = _shared_adapters(cfg, extras, params, "xla")
+    a_c = _shared_adapters(cfg, extras, params, "cascade")
+    keys = [a_c.pool.block_key[int(b)]
+            for b in a_c.tables[0, :int(a_c.lens[0]) // a_c.bs]
+            if a_c.pool.block_key.get(int(b))]
+    assert keys
+    a_c.pool.protect(keys)                 # what the handoff path does
+    rng = np.random.default_rng(51)
+    active = np.ones(4, bool)
+    forced = rng.integers(0, cfg.vocab, size=4).astype(np.int32)
+    tc = a_c.decode(forced, active)
+    assert a_c.last_groups == 0            # nothing grouped mid-handoff
+    tx = a_x.decode(forced, active)
+    np.testing.assert_array_equal(tx, tc)
+    np.testing.assert_array_equal(np.asarray(a_x.last_logits),
+                                  np.asarray(a_c.last_logits))
+    # handoff completes -> unprotect -> grouping resumes
+    a_c.pool.unprotect(keys)
+    a_c.decode(forced, active)
+    assert a_c.last_groups == 1
+
+
+# ==========================================================================
+# Backend enum + deprecated alias equivalence (api_redesign satellite).
+# ==========================================================================
+
+def test_resolve_backend_alias_equivalence():
+    assert resolve_backend("xla") == "xla"
+    assert resolve_backend(inplace=False) == "gather"
+    assert resolve_backend(kernel=True) == "pallas"
+    assert resolve_backend(kernel=False) == "xla"
+    assert resolve_backend(inplace=True, kernel=None) == auto_backend()
+    assert resolve_backend() == auto_backend()
+    assert auto_backend() in ("xla", "pallas")
+    with pytest.raises(ValueError, match="one of"):
+        resolve_backend("mosaic")
+    with pytest.raises(ValueError, match="alone"):
+        resolve_backend("xla", kernel=True)
+    with pytest.raises(ValueError, match="no kernel path"):
+        resolve_backend(inplace=False, kernel=True)
+
+
+def test_adapter_boolean_aliases_warn_and_match_enum():
+    """Every legacy boolean spelling must build the adapter the enum
+    spelling builds — and warn about its own deprecation."""
+    cfg, params, _ = _setup("stablelm_3b")
+    mk = lambda **kw: make_adapter(cfg, params, n_slots=1, max_len=8,
+                                   paged=True, block_size=BS, **kw)
+    for legacy, enum in ((dict(inplace=False), "gather"),
+                         (dict(kernel=False), "xla"),
+                         (dict(kernel=True), "pallas")):
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            ad = mk(**legacy)
+        assert ad.backend == enum
+        assert ad.backend == mk(backend=enum).backend
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")     # enum spelling must NOT warn
+        ad = mk(backend="cascade")
+    assert ad.backend == "cascade" and ad.inplace and not ad.kernel
+    with pytest.raises(ValueError, match="alone"):
+        mk(backend="xla", kernel=True)
+    assert set(BACKENDS) == {"gather", "xla", "pallas", "cascade"}
+
+
+def test_unsupported_layouts_reject_explicit_cascade():
+    """kv_quant / vlm layouts: an explicit cascade or pallas request must
+    fail loudly; the auto probe quietly falls back to the XLA tick."""
+    cfg, params, _ = _setup("stablelm_3b")
+    qcfg = dataclasses.replace(cfg, kv_quant=True)
+    with pytest.raises(ValueError, match="kv_quant"):
+        PagedKVSlotAdapter(qcfg, params, 1, 8, block_size=BS,
+                           backend="cascade")
+    ad = PagedKVSlotAdapter(qcfg, params, 1, 8, block_size=BS)
+    assert ad.backend == "xla"
+
+
+# ==========================================================================
+# ServeSpec / make_gateway (api_redesign satellite): colocated, sharded,
+# and disaggregated construction from one declarative spec.
+# ==========================================================================
+
+def _arrivals(prompts):
+    return [Arrival(uid=i, t=0.0, endpoint=0, kind="prompt", payload=p)
+            for i, p in enumerate(prompts)]
+
+
+def _run_tokens(gw, prompts, max_new):
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    submitted = {}
+    orig = gw.submit
+
+    def submit(req):
+        submitted[req.uid] = req
+        return orig(req)
+
+    gw.submit = submit
+    gw.run(_arrivals(prompts))
+    gw.submit = orig
+    del reqs
+    return [submitted[i].generated for i in sorted(submitted)]
+
+
+def test_make_gateway_validates_spec():
+    cfg, params, _ = _setup("stablelm_3b")
+    with pytest.raises(ValueError, match="paged"):
+        make_gateway(cfg, params, ServeSpec(backend="cascade"))
+    with pytest.raises(ValueError, match="mesh"):
+        make_gateway(cfg, params,
+                     ServeSpec(paged=True, roles=RolePlan.split(1, 1)))
+    with pytest.raises(ValueError, match="paged"):
+        make_gateway(cfg, params, ServeSpec(mesh=[_slice_mesh(0)]))
+    spec = ServeSpec()
+    assert spec.replace(backend="xla").backend == "xla"
+    assert spec.backend is None        # frozen: replace returns a copy
+
+
+def test_make_gateway_colocated_cascade_matches_xla():
+    """One ServeSpec field flips the whole gateway's tick dataflow; the
+    generated tokens must not change."""
+    cfg, params, extras = _setup("stablelm_3b")
+    rng = np.random.default_rng(61)
+    shared = rng.integers(1, cfg.vocab, size=2 * BS).tolist()
+    prompts = [np.asarray(shared + rng.integers(
+        1, cfg.vocab, size=2 + i).tolist(), np.int32) for i in range(3)]
+    spec = ServeSpec(n_slots=3, max_len=24, paged=True, block_size=BS,
+                     max_new_tokens=4)
+    outs = {}
+    for backend in ("xla", "cascade"):
+        gw = make_gateway(cfg, params, spec.replace(backend=backend),
+                          extras=extras)
+        assert gw.batcher.adapter.backend == backend
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            gw.batcher.submit(r)
+        gw.batcher.run()
+        outs[backend] = [r.generated for r in reqs]
+    assert outs["xla"] == outs["cascade"]
+
+
+def test_make_gateway_sharded_and_disagg_cascade_parity():
+    """spec.mesh builds the sharded gateway, spec.roles disaggregates it;
+    backend="cascade" must generate the same tokens as "xla" through
+    both topologies (prefix-sharing prompts land on one slice by
+    affinity, so its decode ticks actually group)."""
+    cfg, params, extras = _setup("stablelm_3b")
+    rng = np.random.default_rng(71)
+    shared = rng.integers(1, cfg.vocab, size=2 * BS).tolist()
+    prompts = [np.asarray(shared + rng.integers(
+        1, cfg.vocab, size=2 + i).tolist(), np.int32) for i in range(3)]
+    base = ServeSpec(n_slots=3, max_len=24, paged=True, block_size=BS,
+                     max_new_tokens=4, auto_rebalance=False)
+    for roles in (None, RolePlan.split(1, 1)):
+        outs = {}
+        for backend in ("xla", "cascade"):
+            spec = base.replace(
+                mesh=[_slice_mesh(i) for i in range(2)],
+                roles=roles, backend=backend)
+            gw = make_gateway(cfg, params, spec, extras=extras)
+            assert all(sl.adapter.backend == backend for sl in gw.slices)
+            outs[backend] = _run_tokens(gw, prompts, 4)
+        assert outs["xla"] == outs["cascade"], f"roles={roles}"
