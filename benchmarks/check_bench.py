@@ -78,11 +78,22 @@ SCHEMAS |= {
          "roofline": dict, "ridge_flops_per_byte": numbers.Real,
          "stage_energy_conserved": bool, "stage_energy_nj": dict,
          "openmetrics_valid": bool,
-         "burn_series_points": numbers.Integral, "health": dict},
+         "burn_series_points": numbers.Integral, "health": dict,
+         "flight_overhead_budget": numbers.Real,
+         "flight_overhead_frac": numbers.Real,
+         "critpath_exact": bool, "critpath_requests": numbers.Integral,
+         "critpath_dominant": dict, "flight_accounting": dict},
         {"path": str, "untraced_wall_s": numbers.Real,
          "traced_wall_s": numbers.Real, "overhead_frac": numbers.Real,
          "slo_wall_s": numbers.Real, "slo_overhead_frac": numbers.Real,
+         "flight_wall_s": numbers.Real,
+         "flight_overhead_frac": numbers.Real,
          "completed": numbers.Integral, "n_samples": numbers.Integral},
+    ),
+    "trajectory": (
+        {"bench": str, "n_sources": numbers.Integral, "results": list},
+        {"metric": str, "bench_source": str, "value": numbers.Real,
+         "unit": str, "series": list, "n_commits": numbers.Integral},
     ),
     "disagg": (
         {"bench": str, "n_devices": numbers.Integral,
@@ -246,6 +257,14 @@ def check(path: str) -> list[str]:
                     f"overhead {r['slo_overhead_frac']:.1%} exceeds the "
                     f"{slo_budget:.0%} budget (SLO evaluation must add "
                     f"at most 1% beyond the tracing budget)")
+            if r["flight_overhead_frac"] > \
+                    payload["flight_overhead_budget"]:
+                errs.append(
+                    f"{path}: {r['path']} path flight-ring overhead "
+                    f"{r['flight_overhead_frac']:.1%} over the traced "
+                    f"arm exceeds the "
+                    f"{payload['flight_overhead_budget']:.0%} budget "
+                    f"(the always-on ring must stay near-free)")
         if {r["path"] for r in results} != {"frame", "prompt"}:
             errs.append(f"{path}: need one frame and one prompt result")
         if not payload["span_energy_conserved"]:
@@ -281,6 +300,39 @@ def check(path: str) -> list[str]:
                         f"validator")
         if payload["burn_series_points"] <= 0:
             errs.append(f"{path}: no burn-rate series columns sampled")
+        # critical-path attribution: every traced request's segments must
+        # re-fold to its span duration with float equality, on both paths
+        if not payload["critpath_exact"]:
+            errs.append(f"{path}: critical-path segments did not re-fold "
+                        f"to the request span durations with float "
+                        f"equality")
+        if payload["critpath_requests"] <= 0:
+            errs.append(f"{path}: critical-path analyzer saw zero "
+                        f"completed requests")
+        for p, dom in payload["critpath_dominant"].items():
+            if not dom:
+                errs.append(f"{path}: {p} path has no dominant "
+                            f"critical-path stage")
+    if bench == "trajectory" and not errs:
+        # the aggregator must have folded a meaningful set of BENCH files,
+        # and each metric's history must end at its current value (the
+        # series is append-only — a mismatch means the trend and the
+        # gated value have drifted apart)
+        if payload["n_sources"] < 5:
+            errs.append(f"{path}: trajectory folded only "
+                        f"{payload['n_sources']} BENCH sources (want >=5: "
+                        f"gateway/kvcache/cascade/prefix/obs)")
+        for r in results:
+            where = f"{path}: {r['metric']}"
+            if not r["series"]:
+                errs.append(f"{where}: empty history series")
+                continue
+            last = r["series"][-1]
+            if not isinstance(last, dict) or "value" not in last:
+                errs.append(f"{where}: malformed series tail")
+            elif last["value"] != r["value"]:
+                errs.append(f"{where}: series tail {last['value']} != "
+                            f"current value {r['value']}")
     if bench == "disagg" and not errs:
         # trend gate: at equal device budget, splitting the mesh into
         # prefill and decode roles must shield decode ticks from the

@@ -1,0 +1,141 @@
+"""Fold every committed BENCH_*.json into one performance trajectory.
+
+Each benchmark writes a point-in-time BENCH_<name>.json; this script walks
+the git history of each of those files, extracts one headline metric per
+bench family at every commit that touched it, and emits
+BENCH_trajectory.json: the per-metric time series plus the current value.
+check_bench.py gates the output — the fold must cover at least the five
+core bench families and every series must end at the value currently on
+disk (an append-only history; a mismatch means a BENCH file was edited
+without re-running its benchmark).
+
+No network, no new deps: history comes from ``git log``/``git show`` and
+degrades gracefully — a file with no committed history (or a historical
+version missing the headline field) contributes a single working-tree
+point.
+
+Usage:
+    python benchmarks/trajectory.py [--out benchmarks/BENCH_trajectory.json]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+import common  # noqa: E402
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+
+# headline metric per bench family: (metric name, unit, extractor).
+# Extractors are defensive — historical payloads predate some fields, and
+# a commit whose version lacks the metric simply contributes no point.
+_EXTRACTORS = {
+    "gateway": ("p99_latency_ms_best", "ms",
+                lambda d: min(r["p99_latency_ms"] for r in d["results"])),
+    "kvcache": ("p99_latency_ms_best", "ms",
+                lambda d: min(r["p99_latency_ms"] for r in d["results"])),
+    "cascade": ("decode_speedup_max", "x",
+                lambda d: max(r["speedup"] for r in d["results"])),
+    "prefix": ("warm_speedup_max", "x",
+               lambda d: max(r["speedup"] for r in d["results"])),
+    "disagg": ("tick_p99_ms_best", "ms",
+               lambda d: min(r["tick_p99_ms"] for r in d["results"])),
+    "obs": ("tracing_overhead_frac", "frac",
+            lambda d: d["overhead_frac"]),
+}
+
+
+def _git(*args):
+    out = subprocess.run(
+        ["git", "-C", REPO, *args], capture_output=True, text=True,
+        timeout=30)
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr.strip() or f"git {args[0]} failed")
+    return out.stdout
+
+
+def _history(rel_path):
+    """(sha, payload) per commit touching rel_path, oldest first."""
+    try:
+        shas = _git("log", "--reverse", "--format=%h", "--",
+                    rel_path).split()
+    except (RuntimeError, OSError, subprocess.SubprocessError):
+        return []
+    points = []
+    for sha in shas:
+        try:
+            points.append(
+                (sha, json.loads(_git("show", f"{sha}:{rel_path}"))))
+        except (RuntimeError, OSError, subprocess.SubprocessError,
+                ValueError):
+            continue
+    return points
+
+
+def fold(bench_dir=HERE):
+    """Build the trajectory payload from the BENCH files in bench_dir."""
+    results = []
+    sources = set()
+    for path in sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json"))):
+        name = os.path.basename(path)
+        if name == "BENCH_trajectory.json":
+            continue
+        with open(path) as f:
+            current = json.load(f)
+        spec = _EXTRACTORS.get(current.get("bench"))
+        if spec is None:
+            print(f"  skip {name}: no extractor for "
+                  f"bench={current.get('bench')!r}")
+            continue
+        metric, unit, extract = spec
+        try:
+            value = extract(current)
+        except (KeyError, ValueError, TypeError):
+            print(f"  skip {name}: headline metric {metric} missing")
+            continue
+        rel = os.path.relpath(path, REPO)
+        series = []
+        for sha, payload in _history(rel):
+            try:
+                series.append({"commit": sha, "value": extract(payload)})
+            except (KeyError, ValueError, TypeError):
+                continue
+        n_commits = len(series)
+        # the series is pinned to end at the working-tree value so the
+        # trend and the gated number can never silently diverge
+        if not series or series[-1]["value"] != value:
+            series.append({"commit": "worktree", "value": value})
+        sources.add(name)
+        results.append({
+            "metric": metric,
+            "bench_source": name,
+            "value": value,
+            "unit": unit,
+            "series": series,
+            "n_commits": n_commits,
+        })
+        common.emit(f"trajectory_{name[len('BENCH_'):-len('.json')]}"
+                    f"_{metric}", 0.0,
+                    f"{value} {unit} over {len(series)} points")
+    return {"bench": "trajectory", "n_sources": len(sources),
+            "results": results}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out",
+                    default=os.path.join(HERE, "BENCH_trajectory.json"))
+    args = ap.parse_args(argv)
+    payload = fold()
+    common.emit_json(args.out, payload)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -27,11 +27,16 @@ from repro.serve.spec import ServeSpec, make_gateway  # noqa: E402
 
 
 def run_frames(events, frontend: str, bits: int, duration: float,
-               tracer=None, metrics=None, slo=None) -> dict:
+               tracer=None, metrics=None, slo=None, flight=None,
+               incident=None, service_ms: float | None = None) -> dict:
     spec = fe.FrontendSpec(mode=frontend, bits=bits)
-    gw = MicroBatchGateway(GatewayConfig(), spec)
+    cfg = GatewayConfig() if service_ms is None else \
+        GatewayConfig(service_model="fixed",
+                      fixed_service_s=service_ms / 1e3)
+    gw = MicroBatchGateway(cfg, spec)
     gw.warmup()
-    tel = gw.run(events, tracer=tracer, metrics=metrics, slo=slo)
+    tel = gw.run(events, tracer=tracer, metrics=metrics, slo=slo,
+                 flight=flight, incident=incident)
     tel.assert_conserved()
     if tracer is not None:
         tracer.assert_energy_conserved(tel)
@@ -84,10 +89,25 @@ def main():
     ap.add_argument("--health-out", default=None,
                     help="write the run's health surface (metrics + SLO burn "
                          "state) as an OpenMetrics text exposition")
+    ap.add_argument("--flight", action="store_true",
+                    help="attach the always-on bounded flight recorder "
+                         "(reservoir-sampled spans + exact tails; works "
+                         "without --trace — spans flow through a "
+                         "retention-free tracer into the ring)")
+    ap.add_argument("--incident-dir", default=None,
+                    help="arm incident auto-capture: SLO warn->critical, "
+                         "drop bursts, energy mismatches write "
+                         "schema-validated debug bundles here (inspect "
+                         "with python -m repro.serve.obs.incident)")
+    ap.add_argument("--service-ms", type=float, default=None,
+                    help="pin the frame-path service time (fixed service "
+                         "model) — deterministic overload for incident/SLO "
+                         "demos and CI")
     args = ap.parse_args()
 
-    tracer = metrics = slo_mon = None
-    if args.trace or args.slo or args.health_out:
+    tracer = metrics = slo_mon = flight = incident = None
+    if args.trace or args.slo or args.health_out or args.flight \
+            or args.incident_dir:
         from repro.serve import obs
         metrics = obs.MetricsRegistry(interval_s=max(args.duration / 50,
                                                      1e-3))
@@ -99,6 +119,8 @@ def main():
                                   ttft_s=args.slo_ttft_ms / 1e3,
                                   queue_wait_s=args.slo_queue_ms / 1e3),
             tracer=tracer, metrics=metrics)
+    if args.flight or args.incident_dir:
+        flight = obs.FlightRecorder()
 
     prompt_frac = 0.0 if args.no_lm else 0.125
     fleet = SensorFleet(FleetConfig(
@@ -121,13 +143,23 @@ def main():
     # frontend
     lm_path = bool(not args.no_lm and n_prompts)
     trace_lm = bool(args.trace and lm_path)
+    # exactly one serving path owns the incident pipeline (it subscribes
+    # to the SLO pressure signal at construction): the LM gateway builds
+    # its own via ServeSpec(incident_dir=...); the frame path gets one
+    # here only when it is the obs surface
+    if args.incident_dir and not lm_path:
+        incident = obs.IncidentCapture(args.incident_dir, flight=flight,
+                                       slo=slo_mon, metrics=metrics)
     reports = {}
     for i, f in enumerate(frontends):
         frame_obs = not lm_path and i == 0
         reports[f] = run_frames(events, f, args.bits, args.duration,
                                 tracer=tracer if frame_obs else None,
                                 metrics=metrics if frame_obs else None,
-                                slo=slo_mon if frame_obs else None)
+                                slo=slo_mon if frame_obs else None,
+                                flight=flight if frame_obs else None,
+                                incident=incident if frame_obs else None,
+                                service_ms=args.service_ms)
         r = reports[f]
         if not r["completed"]:
             print(f"[{f:6s}] no frames completed "
@@ -165,8 +197,11 @@ def main():
                          block_size=8, backend=args.backend if paged
                          else None, max_new_tokens=8,
                          tracer=tracer if trace_lm else None,
-                         metrics=metrics, slo=slo_mon)
+                         metrics=metrics, slo=slo_mon, flight=flight,
+                         incident_dir=args.incident_dir)
         pgw = make_gateway(cfg, params, spec, extras=extras)
+        if args.incident_dir:
+            incident = pgw.incident
         pgw.warmup(fleet.cfg.prompt_lens, cfg.vocab)
         tel = pgw.run(events)
         if trace_lm:
@@ -217,9 +252,39 @@ def main():
             print(f"[health]   t={tr_['t']:.3f}s {tr_['from']} -> "
                   f"{tr_['to']} (worst: {tr_['objective']})")
     if args.health_out:
-        text = obs.write_openmetrics(args.health_out, metrics, slo_mon)
+        # the scrape surface must declare what the run promised: cascade
+        # runs must expose the repro_cascade_* grouping families
+        require = None
+        if args.backend == "cascade" and lm_path and args.paged:
+            require = [f"repro_cascade_{k}" for k in
+                       ("groups", "grouped_lanes", "prefix_rows",
+                        "prefix_rows_flat")]
+        text = obs.write_openmetrics(args.health_out, metrics, slo_mon,
+                                     require=require)
         print(f"[health] {len(text.splitlines())} OpenMetrics lines "
-              f"(schema-validated) -> {args.health_out}")
+              f"(schema-validated"
+              + (f", {len(require)} required families" if require else "")
+              + f") -> {args.health_out}")
+
+    # -- flight recorder + incident forensics -------------------------------
+    if flight is not None:
+        acct = flight.snapshot()["accounting"]
+        print(f"[flight] ring: {acct['spans_kept']}/{acct['spans_seen']} "
+              f"spans (reservoir), {acct['instants_kept']}"
+              f"/{acct['instants_seen']} instants, "
+              f"{acct['samples_kept']}/{acct['samples_seen']} "
+              f"metric samples retained")
+    if incident is not None:
+        if incident.captures:
+            for c in incident.captures:
+                print(f"[incident] t={c['t']:.3f}s reason={c['reason']} "
+                      f"-> {c['path']}")
+            print(f"[incident] inspect with: python -m "
+                  f"repro.serve.obs.incident inspect "
+                  f"{incident.captures[0]['path']}")
+        else:
+            print(f"[incident] no triggers fired; bundles would land in "
+                  f"{args.incident_dir}")
 
     # -- trace export: Perfetto-loadable, schema-validated ------------------
     if args.trace:

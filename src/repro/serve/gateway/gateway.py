@@ -135,7 +135,21 @@ class MicroBatchGateway:
     # -- the event loop -----------------------------------------------------
     def run(self, arrivals: list[Arrival],
             telemetry: Telemetry | None = None, *,
-            tracer=None, metrics=None, slo=None) -> Telemetry:
+            tracer=None, metrics=None, slo=None, flight=None,
+            incident=None) -> Telemetry:
+        # always-on flight mode: with a FlightRecorder but no tracer, spans
+        # still flow — through a retention-free tracer whose only sink is
+        # the bounded ring (nothing grows with run length)
+        if flight is not None:
+            from repro.serve.obs import Tracer
+            if tracer is None:
+                tracer = Tracer(retain=False, sink=flight)
+            elif tracer.sink is None:
+                tracer.sink = flight
+            if metrics is not None and metrics.sink is None:
+                metrics.sink = flight.observe_sample
+        if incident is not None and incident.context_fn is None:
+            incident.context_fn = self.debug_state
         tel = telemetry if telemetry is not None else Telemetry()
         arrivals = [a for a in arrivals if a.kind == "frame"]
         # payload hits the gateway queue after at-sensor compute + link time
@@ -166,6 +180,8 @@ class MicroBatchGateway:
                     if tracer is not None:
                         tracer.instant("drop", tid=a.uid, t=a.t + offset,
                                        args={"reason": "queue_full"})
+                    if incident is not None:
+                        incident.observe_drop(a.t + offset)
                 else:
                     queue.append(a)
                 if slo is not None:
@@ -225,18 +241,33 @@ class MicroBatchGateway:
                     slo.observe_record(rec)
             if slo is not None:
                 slo.evaluate(now)
+            if incident is not None:
+                incident.poll(now)
             if metrics is not None:
                 metrics.inc("frames_completed", len(batch))
                 metrics.maybe_sample(now)
         if metrics is not None and metrics.samples:
             tel.record_series(metrics.samples)
+        if incident is not None:
+            incident.check_energy(tel, now)
         return tel
+
+    def debug_state(self) -> dict:
+        """Incident-bundle context: configuration + jit surface sizes (the
+        frame path keeps no cross-run queue state)."""
+        return {
+            "kind": "frame_gateway",
+            "config": dataclasses.asdict(self.cfg),
+            "frontend": {"mode": self.spec.mode, "bits": self.spec.bits},
+            "jit_cache_sizes": {name: fn._cache_size()
+                                for name, fn in self.jit_fns().items()},
+        }
 
 
 def drive_prompt_loop(arrivals, tel: Telemetry, *, busy, queue_depth,
                       max_queue, submit, step, record,
                       clock=None, tracer=None, metrics=None,
-                      slo=None, step_cost=None) -> None:
+                      slo=None, step_cost=None, incident=None) -> None:
     """The virtual-time event loop shared by the one-slice
     :class:`PromptGateway` and the sharded router (serve/shard/): drain
     arrivals into ``submit`` as virtual time reaches them (dropping, with
@@ -259,6 +290,13 @@ def drive_prompt_loop(arrivals, tel: Telemetry, *, busy, queue_depth,
     decisions feed the drop_rate objective; the burn engine evaluates
     once per tick, next to the metrics sampler).  All default to None,
     and the loop makes zero observability calls then.
+
+    ``incident`` (an obs.IncidentCapture) observes every admission drop
+    (the drop-burst trigger) and is polled once per tick for recompile
+    leaks.  Its SLO ``warn -> critical`` trigger needs no loop hook: the
+    pressure signal fires synchronously inside ``slo.evaluate`` below —
+    *before* the next admission pass — so the bundle is on disk before the
+    first pressure-shed drop is even decided.
 
     ``step_cost`` (optional, ``fn(wall_seconds) -> virtual_seconds``)
     re-prices a tick before it is charged to the clock.  The sharded
@@ -292,6 +330,8 @@ def drive_prompt_loop(arrivals, tel: Telemetry, *, busy, queue_depth,
                 if tracer is not None:
                     tracer.instant("drop", tid=a.uid, t=now,
                                    args={"reason": "queue_full"})
+                if incident is not None:
+                    incident.observe_drop(now)
                 continue
             if tracer is not None:
                 # lifecycle span opens at *arrival* (the request waited
@@ -318,6 +358,8 @@ def drive_prompt_loop(arrivals, tel: Telemetry, *, busy, queue_depth,
         # pushes land in this tick's snapshot, not the next one
         if slo is not None:
             slo.evaluate(now)
+        if incident is not None:
+            incident.poll(now)
         if metrics is not None:
             metrics.maybe_sample(now)
 
@@ -412,7 +454,7 @@ class PromptGateway:
                  bytes_per_token: int = 4, max_queue: int = 64,
                  energy_spec: fe.FrontendSpec | None = None,
                  tracer=None, metrics=None, slo=None,
-                 shed_factor: int = 4):
+                 shed_factor: int = 4, flight=None, incident=None):
         self.batcher = batcher
         self.max_new_tokens = max_new_tokens
         self.bytes_per_token = bytes_per_token
@@ -428,6 +470,16 @@ class PromptGateway:
         self.tracer = tracer
         self.metrics = metrics
         self.slo = slo
+        # flight recorder + incident forensics (serve/obs/flight.py,
+        # incident.py): with a FlightRecorder but no tracer, run() creates
+        # a retention-free tracer whose only sink is the bounded ring —
+        # always-on span capture without an unbounded event list; an
+        # IncidentCapture snapshots the ring (plus debug_state) on its
+        # triggers, and capture_incident() does so on demand
+        self.flight = flight
+        self.incident = incident
+        if incident is not None and incident.context_fn is None:
+            incident.context_fn = self.debug_state
         # SLO-driven backpressure: subscribe to the monitor's pressure
         # signal; under critical burn the admission bound shrinks by
         # shed_factor, so overload sheds at the door (cheap, counted)
@@ -478,6 +530,15 @@ class PromptGateway:
         arr_t = {a.uid: a.t for a in arrivals}
         arr_ep = {a.uid: a.endpoint for a in arrivals}
         pool_stats = getattr(self.batcher.adapter, "pool_stats", None)
+        if self.flight is not None:
+            from repro.serve.obs import Tracer
+            if self.tracer is None:
+                # always-on mode: the bounded ring is the only retention
+                self.tracer = Tracer(retain=False, sink=self.flight)
+            elif self.tracer.sink is None:
+                self.tracer.sink = self.flight
+            if self.metrics is not None and self.metrics.sink is None:
+                self.metrics.sink = self.flight.observe_sample
         # SLO timestamps (t_dequeue/t_admit) need a shared virtual clock
         # even when no tracer is attached
         from repro.serve.obs import SimClock
@@ -490,6 +551,15 @@ class PromptGateway:
             if pool is not None:
                 for name in pool.gauges():
                     m.register(name, lambda n=name: pool.gauges()[n])
+            cascade = getattr(self.batcher.adapter, "cascade_stats", None)
+            if cascade is not None and \
+                    getattr(self.batcher.adapter, "backend", None) \
+                    == "cascade":
+                # cascade_* gauges -> repro_cascade_* OpenMetrics families
+                for key in ("groups", "grouped_lanes", "prefix_rows",
+                            "prefix_rows_flat"):
+                    m.register(f"cascade_{key}",
+                               lambda k=key: cascade()[k])
         self.batcher.clock = clock
         self.batcher.tracer = self.tracer
         self.batcher.adapter.tracer = self.tracer
@@ -508,7 +578,7 @@ class PromptGateway:
                     self._token_energy_nj, self.bytes_per_token,
                     self.energy_spec, tracer=self.tracer, slo=self.slo),
                 clock=clock, tracer=self.tracer, metrics=self.metrics,
-                slo=self.slo)
+                slo=self.slo, incident=self.incident)
         finally:
             self.batcher.clock = None
             self.batcher.tracer = None
@@ -517,4 +587,41 @@ class PromptGateway:
             tel.record_pool(pool_stats())
         if self.metrics is not None and self.metrics.samples:
             tel.record_series(self.metrics.samples)
+        if self.incident is not None:
+            self.incident.check_energy(tel, clock.t)
         return tel
+
+    def debug_state(self) -> dict:
+        """Forensic gateway state for incident bundles: batcher occupancy,
+        pool + radix debug snapshot, cascade grouping, jit-cache sizes —
+        aggregate state only, no request payloads."""
+        ad = self.batcher.adapter
+        state: dict = {
+            "kind": "prompt_gateway",
+            "max_new_tokens": self.max_new_tokens,
+            "max_queue": self.max_queue,
+            "admit_bound": self._admit_bound(),
+            "shedding": self._shedding,
+            "batcher": self.batcher.debug_state(),
+            "jit_cache_sizes": {name: fn._cache_size()
+                                for name, fn in self.jit_fns().items()},
+        }
+        pool = getattr(ad, "pool", None)
+        if pool is not None:
+            state["pool"] = pool.debug_snapshot()
+        if getattr(ad, "backend", None) is not None:
+            state["backend"] = ad.backend
+        if getattr(ad, "backend", None) == "cascade":
+            state["cascade"] = ad.cascade_stats()
+        return state
+
+    def capture_incident(self, reason: str, *, extra: dict | None = None):
+        """Explicit forensic capture: snapshot the flight ring + debug
+        state into a bundle right now (trigger ``explicit``).  Requires an
+        IncidentCapture attached at construction."""
+        if self.incident is None:
+            raise RuntimeError(
+                "capture_incident() needs an IncidentCapture attached "
+                "(PromptGateway(..., incident=...) or "
+                "ServeSpec(incident_dir=...))")
+        return self.incident.capture(reason, extra=extra)

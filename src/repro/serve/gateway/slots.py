@@ -333,6 +333,20 @@ class ContinuousBatcher:
     def busy(self) -> bool:
         return bool(self.pending) or any(r is not None for r in self.active)
 
+    def debug_state(self) -> dict:
+        """Occupancy snapshot for incident bundles (serve/obs/incident.py):
+        queue depth and per-slot uids only — never prompt or token payloads,
+        so a bundle can leave the machine."""
+        return {
+            "n_slots": self.n_slots,
+            "pending": len(self.pending),
+            "pending_uids": [r.uid for r in list(self.pending)[:16]],
+            "active_uids": [None if r is None else r.uid
+                            for r in self.active],
+            "last_active": self.last_active,
+            "peak_active": self.peak_active,
+        }
+
     def _now(self) -> float:
         """Virtual time for SLO stamps: the tracer's (possibly
         wall-interpolated) clock when tracing, the bare clock when only SLO

@@ -954,6 +954,16 @@ class PagedKVSlotAdapter:
                "write_block": self._write_block, "decode": self._decode}
         if self.backend == "cascade":
             fns["decode_cascade"] = self._decode_cascade
+            # the cascade tick's inner executables are module-level jits in
+            # kernels/paged_attn.py (process-wide, like chunk_fold): the
+            # grouped-prefix pass, the per-lane suffix pass, and the
+            # softmax-state merge.  Tracking them separately catches a leak
+            # the outer decode_cascade bucket count can hide — a pow2
+            # cascade-meta bucket crossing recompiles all three
+            from repro.kernels import paged_attn as pk
+            fns["cascade_prefix"] = pk.cascade_prefix_attention
+            fns["cascade_suffix"] = pk.paged_decode_attention_with_state
+            fns["cascade_merge"] = pk.merge_attn_states
         if self.cfg.family == "encdec":
             fns["encode"] = self._encode
         return fns

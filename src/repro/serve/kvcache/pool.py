@@ -308,3 +308,20 @@ class BlockPool:
             "protected_evictions": self.protected_evictions,
             "cow_copies": self.cow_copies,
         }
+
+    def debug_snapshot(self) -> dict:
+        """Forensic pool state for incident bundles (serve/obs/incident.py):
+        :meth:`stats` plus index/LRU/partial sizes and the refcount shape —
+        aggregate counts only, never block contents, so bundles stay small
+        and free of request payload data."""
+        snap = self.stats()
+        rc = self.refcount[1:]                   # trash block excluded
+        snap.update({
+            "index_keys": len(self.index),
+            "lru_parked": len(self.lru),
+            "partial_blocks": len(self.partial_blocks),
+            "free_blocks": len(self.free),
+            "max_refcount": int(rc.max()) if rc.size else 0,
+            "referenced_blocks": int((rc > 0).sum()),
+        })
+        return snap

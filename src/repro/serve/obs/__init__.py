@@ -29,6 +29,21 @@ paged KV adapter, sharded router):
                 exposition, and structural validators for all of them.
   recompile.py  jit-cache-entry accounting per compiled executable; flags
                 steady-state recompiles as a metric.
+  flight.py     always-on bounded ring buffer over the trace stream
+                (reservoir-sampled spans, exact instant/counter/sample
+                tails) — the cheap ever-running recorder incident bundles
+                snapshot.
+  critpath.py   per-request critical-path attribution: the request span
+                split exactly (float-equal re-fold) into queue / prefill /
+                handoff / decode / migration segments, aggregated into a
+                which-stage-dominates-p99 ranking (per role under a
+                RolePlan).
+  incident.py   trigger -> bundle forensics pipeline: SLO warn->critical,
+                drop bursts, recompile leaks, energy-conservation breaks
+                and explicit captures snapshot the flight ring + gateway
+                debug state into schema-validated, size-bounded JSON
+                bundles, inspectable offline via
+                ``python -m repro.serve.obs.incident``.
 
 The contract every instrumented hot path keeps: **disabled observability
 costs zero Python-level callbacks** — call sites guard on
@@ -40,6 +55,23 @@ from repro.serve.obs.metrics import MetricsRegistry
 from repro.serve.obs.recompile import RecompileDetector
 from repro.serve.obs.tracer import (ENGINE_PID, REQUESTS_PID, SimClock,
                                     Tracer, callback_count)
+from repro.serve.obs.flight import FlightRecorder
+from repro.serve.obs import critpath
+from repro.serve.obs.critpath import (aggregate_critical_paths,
+                                      analyze_critical_paths)
+
+# incident.py is also the CLI module (`python -m repro.serve.obs.incident`);
+# importing it eagerly here would double-load it under -m (runpy warns), so
+# its names resolve lazily on first attribute access (PEP 562)
+_INCIDENT_NAMES = ("IncidentCapture", "load_incident_bundle",
+                   "validate_incident_bundle", "write_incident_bundle")
+
+
+def __getattr__(name: str):
+    if name in _INCIDENT_NAMES:
+        from repro.serve.obs import incident
+        return getattr(incident, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 from repro.serve.obs.slo import (BurnWindow, PressureEvent, PressureSignal,
                                  SLObjective, SLOMonitor, SLOPolicy)
 from repro.serve.obs.costmodel import (DEFAULT_RIDGE, analyze, attribute,
@@ -60,4 +92,8 @@ __all__ = [
     "SpanStreamWriter", "chrome_trace", "openmetrics_text",
     "read_span_stream", "validate_chrome_trace", "validate_openmetrics",
     "write_chrome_trace", "write_metrics_jsonl", "write_openmetrics",
+    "FlightRecorder", "critpath",
+    "aggregate_critical_paths", "analyze_critical_paths",
+    "IncidentCapture", "load_incident_bundle", "validate_incident_bundle",
+    "write_incident_bundle",
 ]

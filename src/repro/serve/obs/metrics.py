@@ -39,11 +39,15 @@ class MetricsRegistry:
     """Counters / gauges / histograms + interval snapshot sampler."""
 
     def __init__(self, interval_s: float = 0.05, hist_cap: int = 4096,
-                 seed: int = 0):
+                 seed: int = 0, sink=None):
         assert interval_s > 0, "snapshot interval must be positive"
         assert hist_cap > 0, "histogram retention cap must be positive"
         self.interval_s = interval_s
         self.hist_cap = hist_cap
+        # optional per-snapshot sink (flight.FlightRecorder.observe_sample):
+        # each interval record is delivered as it is taken, so a bounded
+        # ring can keep the recent tail without re-walking ``samples``
+        self.sink = sink
         self.counters: dict[str, float] = {}
         self.gauges: dict[str, float] = {}
         self.hists: dict[str, list[float]] = {}
@@ -99,6 +103,8 @@ class MetricsRegistry:
         for name, fn in self._sources.items():
             rec[name] = fn()
         self.samples.append(rec)
+        if self.sink is not None:
+            self.sink(rec)
         return rec
 
     def maybe_sample(self, t: float) -> bool:

@@ -74,22 +74,28 @@ class SimClock:
 class Tracer:
     """Strictly-nested span recorder with sim-clock timestamps."""
 
-    def __init__(self, clock: SimClock | None = None, sink=None):
+    def __init__(self, clock: SimClock | None = None, sink=None,
+                 retain: bool = True):
         self.clock = clock if clock is not None else SimClock()
         self.events: list[dict] = []      # finished spans/instants, append order
         self._stacks: dict[tuple, list[dict]] = {}   # lane -> open spans
         self._ctx: tuple[int, int] = (REQUESTS_PID, 0)
         self._anchor_wall: float | None = None
         self._anchor_sim = 0.0
-        # optional incremental event sink (obs.export.SpanStreamWriter):
-        # called with each finished event as it is recorded, so long runs
-        # can stream spans to disk instead of holding only the in-memory
-        # list.  Events are still retained (energy conservation re-folds
-        # the stream at run end).
+        # optional incremental event sink (obs.export.SpanStreamWriter, or
+        # a flight.FlightRecorder ring): called with each finished event as
+        # it is recorded, so long runs can stream spans to disk — or keep a
+        # bounded ring — instead of holding only the in-memory list.
+        # ``retain=False`` makes the sink the *only* retention (always-on
+        # flight mode on a long-running gateway must not grow an unbounded
+        # event list); post-hoc checks that re-fold the full stream
+        # (assert_nested / assert_energy_conserved) need retain=True.
         self.sink = sink
+        self.retain = retain
 
     def _emit(self, event: dict) -> None:
-        self.events.append(event)
+        if self.retain:
+            self.events.append(event)
         if self.sink is not None:
             self.sink(event)
 

@@ -142,7 +142,7 @@ class ShardedPromptGateway:
                  auto_rebalance: bool = True,
                  roles: RolePlan | None = None,
                  tracer=None, metrics=None, slo=None,
-                 shed_factor: int = 4):
+                 shed_factor: int = 4, flight=None, incident=None):
         assert slices, "need at least one slice"
         assert len({sl.adapter.n_slots for sl in slices}) == 1, \
             "slices must share n_slots (the bitwise-parity contract)"
@@ -181,6 +181,14 @@ class ShardedPromptGateway:
         self.tracer = tracer
         self.metrics = metrics
         self.slo = slo
+        # flight recorder + incident forensics, same contracts as the
+        # one-slice gateway (see PromptGateway); debug_state adds the
+        # fleet view: routing/migration/handoff counters, per-slice pool
+        # snapshots, the RolePlan
+        self.flight = flight
+        self.incident = incident
+        if incident is not None and incident.context_fn is None:
+            incident.context_fn = self.debug_state
         # SLO-driven backpressure, same policy as the one-slice gateway:
         # under critical burn the fleet-wide admission bound shrinks by
         # shed_factor (see PromptGateway; pressure is the subscription
@@ -549,6 +557,15 @@ class ShardedPromptGateway:
         arrivals = [a for a in arrivals if a.kind == "prompt"]
         arr_t = {a.uid: a.t for a in arrivals}
         arr_ep = {a.uid: a.endpoint for a in arrivals}
+        if self.flight is not None:
+            from repro.serve.obs import Tracer
+            if self.tracer is None:
+                # always-on mode: the bounded ring is the only retention
+                self.tracer = Tracer(retain=False, sink=self.flight)
+            elif self.tracer.sink is None:
+                self.tracer.sink = self.flight
+            if self.metrics is not None and self.metrics.sink is None:
+                self.metrics.sink = self.flight.observe_sample
         # SLO timestamps (t_dequeue/t_admit) need one shared virtual clock
         # across every slice, tracer or not
         from repro.serve.obs import SimClock
@@ -590,6 +607,16 @@ class ShardedPromptGateway:
                            lambda sl=sl: len(sl.batcher.pending))
                 m.register(f"slice{sl.idx}_active",
                            lambda sl=sl: sl.batcher.last_active)
+            casc = [sl for sl in self.slices
+                    if getattr(sl.adapter, "backend", None) == "cascade"]
+            if casc:
+                # fleet-aggregated cascade grouping gauges; same
+                # cascade_* names as the one-slice gateway, so the
+                # repro_cascade_* OpenMetrics families are path-agnostic
+                for key in ("groups", "grouped_lanes", "prefix_rows",
+                            "prefix_rows_flat"):
+                    m.register(f"cascade_{key}", lambda k=key: sum(
+                        sl.adapter.cascade_stats()[k] for sl in casc))
         for sl in self.slices:
             sl.batcher.clock = clock
             sl.batcher.tracer = self.tracer
@@ -613,7 +640,7 @@ class ShardedPromptGateway:
                     self.bytes_per_token, self.energy_spec,
                     tracer=self.tracer, slo=self.slo),
                 clock=clock, tracer=self.tracer, metrics=self.metrics,
-                slo=self.slo,
+                slo=self.slo, incident=self.incident,
                 step_cost=self._step_cost if self.tracer is None else None)
         finally:
             for sl in self.slices:
@@ -628,7 +655,55 @@ class ShardedPromptGateway:
                             "handoff_bytes": self.handoff_bytes})
         if self.metrics is not None and self.metrics.samples:
             tel.record_series(self.metrics.samples)
+        if self.incident is not None:
+            self.incident.check_energy(tel, clock.t)
         return tel
+
+    def debug_state(self) -> dict:
+        """Fleet forensic state for incident bundles: routing/migration/
+        handoff counters, the RolePlan, per-slice batcher + pool snapshots,
+        jit-cache sizes — aggregate state only, no request payloads."""
+        state: dict = {
+            "kind": "sharded_gateway",
+            "n_slices": len(self.slices),
+            "max_queue": self.max_queue,
+            "admit_bound": self._admit_bound(),
+            "shedding": self._shedding,
+            "shed_role": self._shed_role,
+            "routing": dict(self.routing),
+            "migrations": self.migrations,
+            "migration_bytes": self.migration_bytes,
+            "handoffs": self.handoffs,
+            "handoff_bytes": self.handoff_bytes,
+            "peak_concurrent": self.peak_concurrent,
+            "jit_cache_sizes": {name: fn._cache_size()
+                                for name, fn in self.jit_fns().items()},
+        }
+        if self.roles is not None:
+            state["roles"] = {"prefill": list(self.roles.prefill),
+                              "decode": list(self.roles.decode)}
+        slices = []
+        for sl in self.slices:
+            rec = {"idx": sl.idx,
+                   "role": self.roles.role_of(sl.idx)
+                   if self.roles is not None else "all",
+                   "batcher": sl.batcher.debug_state(),
+                   "pool": sl.adapter.pool.debug_snapshot()}
+            if getattr(sl.adapter, "backend", None) == "cascade":
+                rec["cascade"] = sl.adapter.cascade_stats()
+            slices.append(rec)
+        state["slices"] = slices
+        return state
+
+    def capture_incident(self, reason: str, *, extra: dict | None = None):
+        """Explicit forensic capture (trigger ``explicit``); requires an
+        IncidentCapture attached at construction."""
+        if self.incident is None:
+            raise RuntimeError(
+                "capture_incident() needs an IncidentCapture attached "
+                "(ShardedPromptGateway(..., incident=...) or "
+                "ServeSpec(incident_dir=...))")
+        return self.incident.capture(reason, extra=extra)
 
     # -- telemetry ----------------------------------------------------------
 

@@ -39,6 +39,14 @@ class ServeSpec:
     ``max_queue``, ``shed_factor`` and the observability attachments
     (``tracer``/``metrics``/``slo``, all optional) pass straight through
     to the gateway; ``energy_spec`` prices tokens for the energy ledger.
+
+    Forensics: ``flight`` attaches an always-on bounded flight recorder
+    (``True`` builds a default ``obs.FlightRecorder``; or pass one
+    explicitly); ``incident_dir`` arms auto-capture — an
+    ``obs.IncidentCapture`` wired to ``slo``/``flight`` writes
+    schema-validated debug bundles into that directory on SLO
+    warn->critical, drop bursts, recompile leaks, energy-conservation
+    breaks, or ``gateway.capture_incident(reason)``.
     """
     n_slots: int = 4
     max_len: int = 128
@@ -58,6 +66,8 @@ class ServeSpec:
     slo: object = None
     shed_factor: int = 4
     auto_rebalance: bool = True
+    flight: object = None
+    incident_dir: str | None = None
 
     def replace(self, **kw) -> "ServeSpec":
         return dataclasses.replace(self, **kw)
@@ -92,6 +102,18 @@ def make_gateway(cfg, params, spec: ServeSpec | None = None, *,
     if spec.roles is not None and spec.mesh is None:
         raise ValueError("roles (disaggregated serving) partitions mesh "
                          "slices; set mesh as well")
+    # forensics attachments: flight=True builds the default bounded ring;
+    # incident_dir arms the auto-capture pipeline against slo + flight
+    # (the gateway constructor hangs its debug_state off context_fn)
+    flight = spec.flight
+    if flight is True:
+        from repro.serve.obs import FlightRecorder
+        flight = FlightRecorder()
+    incident = None
+    if spec.incident_dir is not None:
+        from repro.serve.obs import IncidentCapture
+        incident = IncidentCapture(spec.incident_dir, flight=flight,
+                                   slo=spec.slo, metrics=spec.metrics)
     if spec.mesh is not None:
         if not paged:
             raise ValueError("mesh (sharded serving) requires paged=True "
@@ -110,7 +132,7 @@ def make_gateway(cfg, params, spec: ServeSpec | None = None, *,
             energy_spec=spec.energy_spec,
             auto_rebalance=spec.auto_rebalance, roles=spec.roles,
             tracer=spec.tracer, metrics=spec.metrics, slo=spec.slo,
-            shed_factor=spec.shed_factor)
+            shed_factor=spec.shed_factor, flight=flight, incident=incident)
     adapter = make_adapter(
         cfg, params, n_slots=spec.n_slots, max_len=spec.max_len,
         extras=extras, paged=paged, block_size=spec.block_size,
@@ -120,4 +142,5 @@ def make_gateway(cfg, params, spec: ServeSpec | None = None, *,
         ContinuousBatcher(adapter), max_new_tokens=spec.max_new_tokens,
         bytes_per_token=spec.bytes_per_token, max_queue=spec.max_queue,
         energy_spec=spec.energy_spec, tracer=spec.tracer,
-        metrics=spec.metrics, slo=spec.slo, shed_factor=spec.shed_factor)
+        metrics=spec.metrics, slo=spec.slo, shed_factor=spec.shed_factor,
+        flight=flight, incident=incident)

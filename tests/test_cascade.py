@@ -296,6 +296,76 @@ def test_cascade_steady_state_never_recompiles():
     assert "decode_cascade" in a_c.jit_fns()
 
 
+def test_cascade_meta_bucket_crossing_is_a_detectable_leak():
+    """The recompile detector must see the cascade tick's full jit
+    surface: jit_fns() exposes the outer cascade executable plus the three
+    module-level kernel jits (grouped-prefix pass, per-lane suffix pass,
+    softmax-state merge).  Decoding past a pow2 suffix-table bucket
+    boundary forces a recompile — the detector must flag it, attributed to
+    the cascade executable, while steady-state ticks inside one bucket
+    stay clean."""
+    from repro.serve import obs
+    cfg, params, extras = _setup("stablelm_3b")
+    a_c = _shared_adapters(cfg, extras, params, "cascade", max_len=64)
+    rng = np.random.default_rng(51)
+    active = np.ones(4, bool)
+    forced = rng.integers(0, cfg.vocab, size=4).astype(np.int32)
+    a_c.decode(forced, active)                  # compile the first bucket
+    fns = a_c.jit_fns()
+    for key in ("decode_cascade", "cascade_prefix", "cascade_suffix",
+                "cascade_merge"):
+        assert key in fns, f"jit_fns() must expose {key}"
+    det = obs.RecompileDetector()
+    det.track("cascade", fns)                   # asserts all are jitted
+    det.snapshot()
+    for _ in range(3):                          # same bucket: steady state
+        a_c.decode(forced, active)
+    assert det.steady_state_recompiles() == 0, det.report()
+    # the ungrouped lane's suffix grows one block per tick; enough ticks
+    # cross the pow2 suffix-table bucket and recompile the cascade tick
+    for _ in range(8):
+        a_c.decode(forced, active)
+    assert a_c.last_groups == 1                 # topology never changed
+    assert det.steady_state_recompiles() >= 1, det.report()
+    leaks = {k for k, v in det.deltas().items() if v > 0}
+    assert "cascade.decode_cascade" in leaks, det.report()
+
+
+def test_cascade_stats_ride_metrics_series_and_openmetrics(tmp_path):
+    """A cascade-backed gateway run with metrics attached must publish the
+    grouping stats as pull-gauges: cascade_* columns in report()["series"]
+    and repro_cascade_* OpenMetrics families (the require= list the obs CI
+    job pins)."""
+    from repro.serve.obs import MetricsRegistry
+    from repro.serve.obs.export import openmetrics_text, write_openmetrics
+    cfg, params, extras = _setup("stablelm_3b")
+    rng = np.random.default_rng(71)
+    shared = rng.integers(1, cfg.vocab, size=5 * BS).tolist()
+    prompts = [np.asarray(shared + rng.integers(
+        1, cfg.vocab, size=3 + i).tolist(), np.int32) for i in range(3)]
+    arrivals = [Arrival(uid=i, t=0.0, endpoint=0, kind="prompt", payload=p)
+                for i, p in enumerate(prompts)]
+    metrics = MetricsRegistry(interval_s=1e-9)
+    gw = make_gateway(cfg, params, ServeSpec(
+        n_slots=4, max_len=64, paged=True, block_size=BS,
+        backend="cascade", max_new_tokens=4, metrics=metrics))
+    tel = gw.run(arrivals)
+    rep = tel.report(1.0, kind="prompt")
+    names = set().union(*(s.keys() for s in rep["series"])) - {"t"}
+    keys = ("groups", "grouped_lanes", "prefix_rows", "prefix_rows_flat")
+    for key in keys:
+        assert f"cascade_{key}" in names, (key, names)
+    # mid-run snapshots saw the shared-prefix group live
+    assert max(s["cascade_grouped_lanes"] for s in rep["series"]
+               if "cascade_grouped_lanes" in s) >= 2
+    required = [f"repro_cascade_{k}" for k in keys]
+    assert all(f"# TYPE repro_cascade_{k} gauge" in
+               openmetrics_text(metrics) for k in keys)
+    out = write_openmetrics(str(tmp_path / "m.txt"), metrics=metrics,
+                            require=required)
+    assert "repro_cascade_groups" in out
+
+
 # ==========================================================================
 # shared_chains eligibility: partial / unshared / protected / mid-CoW
 # blocks break the chain (tentpole bugfix + satellite regression).
